@@ -1,0 +1,111 @@
+"""Per-kernel timings: Pallas (interpret) vs jnp reference on CPU.
+
+Interpret mode measures kernel-body *semantics* cost, not TPU speed; the
+reference column is the production CPU path.  TPU timing comes from the
+roofline analysis, not this box.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.kernels import ref
+from repro.kernels.ccl import ccl_pallas
+from repro.kernels.color_deconv import color_deconv_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.glcm import glcm_pallas
+from repro.kernels.morph_recon import morph_recon_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def run() -> list:
+    rows = []
+    rgb = jnp.asarray(RNG.random((3, 256, 256), dtype=np.float32))
+    minv = jnp.asarray(ref.stain_inverse())
+    rows.append(row(
+        "kernel_color_deconv_ref",
+        time_call(lambda: ref.color_deconv_ref(rgb, minv).block_until_ready()) * 1e6,
+        "shape=3x256x256",
+    ))
+    rows.append(row(
+        "kernel_color_deconv_pallas_interp",
+        time_call(lambda: color_deconv_pallas(rgb, minv, interpret=True).block_until_ready()) * 1e6,
+        "shape=3x256x256",
+    ))
+
+    mask = jnp.asarray((RNG.random((128, 128)) > 0.4).astype(np.float32))
+    marker = jnp.asarray(RNG.random((128, 128)).astype(np.float32)) * mask
+    rows.append(row(
+        "kernel_morph_recon_ref",
+        time_call(lambda: ref.morph_recon_ref(marker, mask).block_until_ready()) * 1e6,
+        "shape=128x128",
+    ))
+
+    m = jnp.asarray((RNG.random((128, 128)) > 0.5).astype(np.int32))
+    rows.append(row(
+        "kernel_ccl_ref",
+        time_call(lambda: ref.ccl_ref(m).block_until_ready()) * 1e6,
+        "shape=128x128",
+    ))
+
+    bins = jnp.asarray(RNG.integers(0, 32, (16, 64, 64), dtype=np.int32))
+    rows.append(row(
+        "kernel_glcm_ref",
+        time_call(lambda: ref.glcm_ref(bins, 32).block_until_ready()) * 1e6,
+        "16 objects 64x64 nb=32",
+    ))
+    rows.append(row(
+        "kernel_glcm_pallas_interp",
+        time_call(lambda: glcm_pallas(bins, 32, interpret=True)[0].block_until_ready()) * 1e6,
+        "16 objects 64x64 nb=32",
+    ))
+
+    q = jnp.asarray(RNG.standard_normal((1, 8, 256, 64), dtype=np.float32))
+    k = jnp.asarray(RNG.standard_normal((1, 4, 256, 64), dtype=np.float32))
+    v = jnp.asarray(RNG.standard_normal((1, 4, 256, 64), dtype=np.float32))
+    rows.append(row(
+        "kernel_attention_ref",
+        time_call(lambda: ref.attention_ref(q, k, v).block_until_ready()) * 1e6,
+        "B1 H8/4 T256 D64 causal",
+    ))
+    rows.append(row(
+        "kernel_flash_attention_pallas_interp",
+        time_call(
+            lambda: flash_attention_pallas(q, k, v, block_q=64, block_k=64,
+                                           interpret=True).block_until_ready()
+        ) * 1e6,
+        "B1 H8/4 T256 D64 causal",
+    ))
+
+    x = jnp.asarray(RNG.standard_normal((1, 256, 8, 32), dtype=np.float32))
+    dt = jnp.asarray(RNG.random((1, 256, 8), dtype=np.float32) * 0.1)
+    a = jnp.asarray(-np.ones(8, np.float32))
+    bm = jnp.asarray(RNG.standard_normal((1, 256, 1, 16), dtype=np.float32))
+    cm = jnp.asarray(RNG.standard_normal((1, 256, 1, 16), dtype=np.float32))
+    rows.append(row(
+        "kernel_ssd_scan_ref",
+        time_call(lambda: ref.ssd_scan_ref(x, dt, a, bm, cm)[0].block_until_ready()) * 1e6,
+        "B1 T256 H8 P32 N16",
+    ))
+    rows.append(row(
+        "kernel_ssd_scan_pallas_interp",
+        time_call(
+            lambda: ssd_scan_pallas(x, dt, a, bm, cm, chunk=64, interpret=True)[0]
+            .block_until_ready()
+        ) * 1e6,
+        "B1 T256 H8 P32 N16",
+    ))
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Fig. 16: per-operation cost profile.
+
+Measures the real wall time of each pipeline operation (xla reference
+implementations on this host) and reports it next to the paper's measured
+GPU speedup for that operation — the inputs PATS runs on.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.configs.wsi import PAPER_OP_SPEEDUPS, WSIConfig
+from repro.kernels import ops, ref
+from repro.pipeline import make_tile
+
+TILE = 128
+
+
+def run() -> list:
+    cfg = WSIConfig(seg_threshold=0.5)
+    rgb, _ = make_tile(TILE, num_nuclei=8, seed=0)
+    rgb = jnp.asarray(rgb)
+    minv = jnp.asarray(ref.stain_inverse())
+    stains = ops.color_deconv(rgb, minv, impl="xla")
+    hema = jnp.clip(stains[0] / jnp.maximum(jnp.percentile(stains[0], 99.5), 1e-6), 0, 1)
+    raw = (hema > cfg.seg_threshold).astype(jnp.float32)
+    marker = jnp.minimum(raw, jnp.roll(raw, 1, -1) * jnp.roll(raw, -1, -1))
+    mask_i = (raw > 0.5).astype(jnp.int32)
+    bins = ref.quantize_ref(hema[None], cfg.num_bins)
+
+    cases = {
+        "Color deconv.": lambda: ops.color_deconv(rgb, minv, impl="xla").block_until_ready(),
+        "AreaThreshold": lambda: (hema > cfg.seg_threshold).astype(jnp.float32).block_until_ready(),
+        "FillHolles": lambda: ops.fill_holes(raw, impl="xla").block_until_ready(),
+        "ReconToNuclei": lambda: ops.morph_recon(marker, raw, impl="xla").block_until_ready(),
+        "BWLabel": lambda: ops.connected_components(mask_i, impl="xla").block_until_ready(),
+        "Features": lambda: ops.texture_features(bins, cfg.num_bins, impl="xla").block_until_ready(),
+    }
+    rows = []
+    for op, fn in cases.items():
+        us = time_call(fn, repeats=3, warmup=1) * 1e6
+        rows.append(row(
+            f"fig16_{op.replace(' ', '_').replace('.', '')}",
+            us,
+            f"paper_gpu_speedup={PAPER_OP_SPEEDUPS.get(op, float('nan')):.1f}x",
+        ))
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Fig. 17: PATS sensitivity to speedup-estimate error.
+
+Low-speedup ops get their *estimates* inflated by e%, high-speedup ops
+deflated (the paper's confounding scheme).  Scheduling uses the estimate
+(Task.est_speedup); execution cost uses the true speedup — exactly the
+paper's setup.  Reported: makespan degradation vs the error-free run, the
+FCFS comparison, and the share of low-speedup tasks landing on the GPU.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs.wsi import PAPER_OP_COSTS, PAPER_OP_SPEEDUPS
+from repro.runtime import SchedulerConfig, SimulatedWRM, Task, TaskCost, make_devices
+
+LOW_OPS = {"RBC detection", "Morph. Open", "AreaThreshold", "FillHolles", "BWLabel"}
+N_STAGES = 40
+
+
+def _tasks(error_pct: float):
+    tasks = []
+    for s in range(N_STAGES):
+        prev = None
+        for op, sp in PAPER_OP_SPEEDUPS.items():
+            t = Task(op, deps=[prev] if prev else [],
+                     cost=TaskCost(cpu_s=PAPER_OP_COSTS[op], speedup=sp))
+            est = sp * (1 + error_pct / 100.0) if op in LOW_OPS else sp * (
+                1 - error_pct / 100.0
+            )
+            t.est_speedup = max(est, 0.01)
+            tasks.append(t)
+            prev = t
+    return tasks
+
+
+def run() -> list:
+    rows = []
+    devs = make_devices(12, 3)
+    fcfs = SimulatedWRM(devs, SchedulerConfig(policy="FCFS")).run(_tasks(0)).makespan
+    base = None
+    for err in (0, 10, 25, 50, 60, 70, 80, 100):
+        res = SimulatedWRM(devs, SchedulerConfig(policy="PATS")).run(_tasks(err))
+        if base is None:
+            base = res.makespan
+        low_on_gpu = sum(res.accel_task_count.get(op, 0) for op in LOW_OPS)
+        total_gpu = sum(res.accel_task_count.values())
+        rows.append(row(
+            f"fig17_err{err}",
+            res.makespan * 1e6,
+            f"degradation={res.makespan/base:.3f}x(paper@50%~1.08),"
+            f"low_ops_gpu_share={low_on_gpu/max(total_gpu,1):.2f},"
+            f"vs_fcfs={fcfs/res.makespan:.2f}x",
+        ))
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Roofline table from dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json (produced by `python -m repro.launch.dryrun`)
+and emits one CSV row per (arch x shape x mesh) cell with the three terms,
+the bottleneck, and the usefulness ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+ARTIFACTS = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def run() -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        name = f"roofline_{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        if rec.get("tag"):
+            name += f"__{rec['tag']}"
+        if rec["status"] != "ok" or "roofline" not in rec:
+            rows.append(row(name, 0.0, f"status={rec['status']}"))
+            continue
+        r = rec["roofline"]
+        rows.append(row(
+            name,
+            r["step_s"] * 1e6,
+            f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+            f"collective={r['collective_s']:.4f}s;bottleneck={r['bottleneck']};"
+            f"useful={r['useful_ratio']:.2f};roofline_frac={r['roofline_fraction']:.3f}",
+        ))
+    if not rows:
+        rows.append(row("roofline_missing", 0.0,
+                        f"no artifacts in {ARTIFACTS}; run repro.launch.dryrun"))
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

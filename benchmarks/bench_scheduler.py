@@ -1,0 +1,113 @@
+"""Fig. 15: cooperative CPU-GPU execution configurations (virtual time).
+
+Versions (paper S5.5): CPUs-only, GPUs-only, GPUs+CPUs 1-level (a stage is
+one bundled task), GPUs+CPUs 2-level hierarchical (fine-grain ops as
+tasks) under FCFS vs PATS, then +DL and +Pref.  Node model: 12 CPU cores +
+3 GPUs; per-op costs/speedups follow the paper's profile (Fig. 16).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs.wsi import PAPER_OP_COSTS, PAPER_OP_SPEEDUPS
+from repro.runtime import SchedulerConfig, SimulatedWRM, Task, TaskCost, make_devices
+
+SEG_OPS = ["Color deconv.", "RBC detection", "Morph. Open", "ReconToNuclei",
+           "AreaThreshold", "FillHolles", "Pre-Watershed", "Watershed",
+           "BWLabel", "Canny", "Gradient"]
+FEAT_OPS = ["Features"]
+N_STAGES = 60
+TILE_BYTES = 48 * 1024 * 1024  # 4Kx4K x 3 channels uint8
+SCALE = 0.05  # PAPER_OP_COSTS units -> seconds (transfers ~ paper's 12%)
+
+
+def _two_level_tasks():
+    tasks = []
+    for s in range(N_STAGES):
+        prev = None
+        for op in SEG_OPS + FEAT_OPS:
+            t = Task(
+                f"{op}#{s}",
+                deps=[prev] if prev else [],
+                cost=TaskCost(
+                    cpu_s=PAPER_OP_COSTS[op] * SCALE,
+                    speedup=PAPER_OP_SPEEDUPS[op],
+                    input_bytes=TILE_BYTES,
+                    output_bytes=TILE_BYTES,
+                ),
+            )
+            t.name = op  # group by op for profiles
+            tasks.append(t)
+            prev = t
+    return tasks
+
+
+def _one_level_tasks():
+    total_cpu = sum(PAPER_OP_COSTS[o] for o in SEG_OPS + FEAT_OPS) * SCALE
+    total_gpu = sum(
+        PAPER_OP_COSTS[o] * SCALE / PAPER_OP_SPEEDUPS[o] for o in SEG_OPS + FEAT_OPS
+    )
+    bundle_speedup = total_cpu / total_gpu
+    return [
+        Task(
+            f"stage#{s}",
+            cost=TaskCost(cpu_s=total_cpu, speedup=bundle_speedup,
+                          input_bytes=TILE_BYTES, output_bytes=TILE_BYTES),
+        )
+        for s in range(N_STAGES)
+    ]
+
+
+def run() -> list:
+    cpus_only = SimulatedWRM(make_devices(12, 0), SchedulerConfig(policy="FCFS")).run(
+        _two_level_tasks()
+    ).makespan
+    gpus_only = SimulatedWRM(make_devices(0, 3), SchedulerConfig(policy="FCFS")).run(
+        _two_level_tasks()
+    ).makespan
+    coop_1l = SimulatedWRM(make_devices(12, 3), SchedulerConfig(policy="FCFS")).run(
+        _one_level_tasks()
+    ).makespan
+    coop_2l_fcfs = SimulatedWRM(make_devices(12, 3), SchedulerConfig(policy="FCFS")).run(
+        _two_level_tasks()
+    ).makespan
+    coop_2l_pats = SimulatedWRM(make_devices(12, 3), SchedulerConfig(policy="PATS")).run(
+        _two_level_tasks()
+    ).makespan
+    pats_dl = SimulatedWRM(
+        make_devices(12, 3),
+        SchedulerConfig(policy="PATS", data_locality=True, transfer_impact=0.45),
+    ).run(_two_level_tasks()).makespan
+    pats_dl_pref = SimulatedWRM(
+        make_devices(12, 3),
+        SchedulerConfig(policy="PATS", data_locality=True, transfer_impact=0.45,
+                        prefetch=True),
+    ).run(_two_level_tasks()).makespan
+
+    base = cpus_only
+    rows = [
+        row("fig15_cpus_only", cpus_only * 1e6, "speedup=1.00x"),
+        row("fig15_gpus_only", gpus_only * 1e6, f"speedup={base/gpus_only:.2f}x(paper~2.25)"),
+        row("fig15_coop_1L_fcfs", coop_1l * 1e6, f"speedup={base/coop_1l:.2f}x(paper~2.9)"),
+        row("fig15_coop_2L_fcfs", coop_2l_fcfs * 1e6, f"speedup={base/coop_2l_fcfs:.2f}x"),
+        row("fig15_coop_2L_pats", coop_2l_pats * 1e6,
+            f"speedup={base/coop_2l_pats:.2f}x(paper~4;pats_over_fcfs="
+            f"{coop_2l_fcfs/coop_2l_pats:.2f}x~1.38)"),
+        row("fig15_2L_pats_dl", pats_dl * 1e6,
+            f"dl_gain={coop_2l_pats/pats_dl:.3f}x(paper~1.05)"),
+        row("fig15_2L_pats_dl_pref", pats_dl_pref * 1e6,
+            f"pref_gain={pats_dl/pats_dl_pref:.3f}x(paper~1.03);total="
+            f"{base/pats_dl_pref:.2f}x(paper~4.34)"),
+    ]
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

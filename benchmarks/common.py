@@ -1,0 +1,27 @@
+"""Shared benchmark helpers: timing + CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1, **kw) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str) -> tuple[str, float, str]:
+    return (name, us_per_call, derived)
+
+
+def emit(rows) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

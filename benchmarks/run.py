@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Mapping:
+  Fig. 11 -> bench_overhead       (RT abstraction overhead, paper ~3%)
+  Tab. 1  -> bench_scaling        (multi-core / multi-GPU scalability)
+  Fig. 12 -> bench_disk_groups    (I/O group sizes vs stock ADIOS, 1.13x)
+  Fig. 13/14 -> bench_dms_vs_disk (DMS vs DISK exchange, ~200 GB/s)
+  Fig. 15 -> bench_scheduler      (FCFS/PATS/DL/Pref cooperative configs)
+  Fig. 16 -> bench_op_speedups    (per-op cost profile)
+  Fig. 17 -> bench_pats_error     (estimate-error sensitivity)
+  kernels -> bench_kernels        (pallas-interpret vs jnp reference)
+  roofline-> bench_roofline       (dry-run artifacts -> 3-term table)
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_disk_groups,
+    bench_dms_vs_disk,
+    bench_kernels,
+    bench_op_speedups,
+    bench_overhead,
+    bench_pats_error,
+    bench_roofline,
+    bench_scaling,
+    bench_scheduler,
+    bench_stcache,
+)
+from benchmarks.common import emit
+
+MODULES = [
+    ("fig11", bench_overhead),
+    ("tab1", bench_scaling),
+    ("fig12", bench_disk_groups),
+    ("fig13_14", bench_dms_vs_disk),
+    ("fig15", bench_scheduler),
+    ("fig16", bench_op_speedups),
+    ("fig17", bench_pats_error),
+    ("kernels", bench_kernels),
+    ("roofline", bench_roofline),
+    ("sec7_stcache", bench_stcache),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, mod in MODULES:
+        t0 = time.time()
+        try:
+            emit(mod.run())
+            print(f"# {tag} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{tag}_FAILED,0.0,exception", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

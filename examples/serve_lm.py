@@ -1,0 +1,31 @@
+"""Batched serving example: prefill + decode over a request stream for any
+assigned architecture (reduced configs on CPU).
+
+  PYTHONPATH=src python examples/serve_lm.py
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b
+  PYTHONPATH=src python examples/serve_lm.py --arch deepseek-v2-lite-16b
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+    out = serve_main([
+        "--arch", args.arch, "--smoke",
+        "--requests", str(args.requests),
+        "--batch", "2",
+        "--prompt-len", "16",
+        "--max-new", str(args.max_new),
+    ])
+    print(f"throughput: {out['tok_per_s']:.1f} new tokens/s "
+          f"(reduced {args.arch} on CPU)")
+
+
+if __name__ == "__main__":
+    main()

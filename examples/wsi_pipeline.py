@@ -1,0 +1,90 @@
+"""The paper's full scenario at demo scale: a multi-tile slide analyzed by
+the hierarchical dataflow with PATS + DL + prefetch, masks persisted to
+the DISK store (I/O groups) for downstream analysis, and a fault injected
+mid-run to show checkpoint-free recovery via stage re-execution.
+
+  PYTHONPATH=src python examples/wsi_pipeline.py
+"""
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.configs.wsi import WSIConfig
+from repro.core import BoundingBox, Intent, RegionTemplate, StorageRegistry
+from repro.pipeline import FeatureStage, SegmentationStage, make_slide
+from repro.runtime import SchedulerConfig, SysEnv
+from repro.storage import DiskStorage, DistributedMemoryStorage
+
+
+def main() -> None:
+    tile = 96
+    ty = tx = 3
+    rgb, _ = make_slide(ty, tx, tile, seed=7)
+    h, w = rgb.shape[1:]
+    cfg = WSIConfig(seg_threshold=0.5, nucleus_roi=16)
+    tmp = tempfile.mkdtemp(prefix="wsi_disk_")
+
+    registry = StorageRegistry()
+    dom3 = BoundingBox((0, 0, 0), (3, h, w))
+    dom2 = BoundingBox((0, 0), (h, w))
+    dms3 = registry.register(DistributedMemoryStorage(dom3, (3, tile, tile), 4, name="DMS3"))
+    dms2 = registry.register(DistributedMemoryStorage(dom2, (tile, tile), 4, name="DMS2"))
+    disk = registry.register(DiskStorage(tmp, transport="aggregated", io_group_size=2,
+                                         queue_threshold=4, name="DISK"))
+
+    rt = RegionTemplate("Patient")
+    rgb_region = rt.new_region("RGB", dom3, np.float32, input_storage="DMS3", lazy=True)
+    dms3.put(rgb_region.key, dom3, rgb)
+
+    env = SysEnv(num_workers=3, cpus_per_worker=2, accels_per_worker=1,
+                 sched=SchedulerConfig(policy="PATS", data_locality=True,
+                                       transfer_impact=0.3),
+                 registry=registry, heartbeat_timeout=10.0)
+    feats = []
+    t0 = time.time()
+    for part2 in dom2.tiles((tile, tile)):
+        part3 = BoundingBox((0,) + part2.lo, (3,) + part2.hi)
+        seg = SegmentationStage(cfg, impl="xla")
+        seg.add_region_template(rt, "RGB", part3, Intent.INPUT, read_storage="DMS3")
+        seg.add_region_template(rt, "Mask", part2, Intent.OUTPUT, storage="DMS2")
+        seg.add_region_template(rt, "Hema", part2, Intent.OUTPUT, storage="DMS2")
+        feat = FeatureStage(cfg, impl="xla")
+        feat.add_region_template(rt, "Mask", part2, Intent.INPUT, read_storage="DMS2")
+        feat.add_region_template(rt, "Hema", part2, Intent.INPUT, read_storage="DMS2")
+        feat.add_dependency(seg)
+        env.execute_component(seg)
+        env.execute_component(feat)
+        feats.append(feat)
+
+    # inject a node failure shortly after start: the Manager requeues its
+    # in-flight stages (outputs are idempotent — last staged wins)
+    def killer():
+        time.sleep(0.5)
+        env.workers[0].kill()
+        print("!! worker 0 killed mid-run (simulated node failure)")
+
+    threading.Thread(target=killer, daemon=True).start()
+    env.startup_execution()
+    wall = time.time() - t0
+
+    mask_key = feats[0].templates["Patient"].get("Mask").key
+    mask = dms2.get(mask_key, dom2)
+    objects = sum(f.templates["Patient"].get("Features").num_objects for f in feats)
+    # persist masks for downstream analysis (paper: DISK staging)
+    disk.put(mask_key, dom2, mask)
+    disk.flush()
+    env.finalize_system()
+
+    requeues = sum(1 for ev, _ in env.manager.events if ev == "requeue")
+    print(f"analyzed {ty*tx} tiles ({h}x{w}) in {wall:.1f}s despite a node "
+          f"failure ({requeues} stage(s) requeued)")
+    print(f"{objects} nuclei; masks persisted to DISK "
+          f"({disk.stats.files_written} files, {disk.stats.bytes_written/1e6:.1f} MB)")
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

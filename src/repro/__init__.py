@@ -1,0 +1,2 @@
+"""repro: Region Templates (Teodoro et al. 2014) on JAX/TPU."""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Dry-run analysis: HLO parsing + roofline terms."""
+from repro.analysis import hlo, roofline
+
+__all__ = ["hlo", "roofline"]

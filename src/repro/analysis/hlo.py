@@ -1,0 +1,430 @@
+"""Multiplicity-aware HLO cost analyzer.
+
+XLA's built-in ``compiled.cost_analysis()`` visits a ``while`` body ONCE,
+so any scan-over-layers model under-reports FLOPs/bytes by ~num_layers x
+(verified in tests/test_hlo_analysis.py).  This module parses
+``compiled.as_text()`` and walks the computation call graph, multiplying
+each computation's costs by its call multiplicity:
+
+  * ``while`` bodies: trip count from the op's
+    ``backend_config known_trip_count`` (exact for lax.scan/fori_loop),
+    falling back to the largest constant in the loop condition;
+  * fusions/calls/conditionals: inherit the caller's multiplicity.
+
+Reported, all per-device (the SPMD module is per-partition):
+  * ``flops``            — 2*M*N*K for every dot (+ conv estimate);
+  * ``bytes``            — operand+result bytes of top-level ops in
+                           control computations (fusion = one op), an
+                           HBM-traffic proxy;
+  * ``collective_bytes`` — max(operand, result) bytes of all-reduce /
+                           all-gather / reduce-scatter / all-to-all /
+                           collective-permute, with per-category breakdown
+                           and (multiplicity-weighted) op counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[sufc]\d+|bf16|f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_CALLED_RE = re.compile(
+    r"(body|condition|to_apply|calls|branch_computations)="
+    r"(\{[^}]*\}|%[\w.\-]+)"
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    result_shape: str
+    opcode: str
+    rest: str  # operands + attributes
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[OpLine]
+    symbols: dict  # op name -> result shape string
+
+
+def parse_hlo(text: str):
+    comps: dict[str, Computation] = {}
+    entry_name = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{"):
+                m = _COMP_HDR_RE.match(stripped)
+                if m:
+                    cur = Computation(m.group(2), [], {})
+                    comps[cur.name] = cur
+                    if m.group(1):
+                        entry_name = cur.name
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, result_shape, opcode, rest = m.groups()
+        op = OpLine(name, result_shape, opcode, rest)
+        cur.ops.append(op)
+        cur.symbols[name] = result_shape
+    return comps, entry_name
+
+
+def _operand_names(rest: str) -> list[str]:
+    """%refs inside the operand parens (before attributes)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return _REF_RE.findall(rest[:i])
+    return _REF_RE.findall(rest)
+
+
+def _called_comps(rest: str) -> dict[str, list[str]]:
+    out: dict[str, list[str]] = {}
+    for m in _CALLED_RE.finditer(rest):
+        kind, val = m.group(1), m.group(2)
+        names = _REF_RE.findall(val)
+        if names:
+            out.setdefault(kind, []).extend(names)
+    return out
+
+
+def _trip_count(op: OpLine, comps: dict) -> int:
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return int(m.group(1))
+    called = _called_comps(op.rest)
+    best = 1
+    for cn in called.get("condition", []):
+        cond = comps.get(cn)
+        if cond:
+            for o in cond.ops:
+                for cm in _CONST_RE.finditer(o.rest):
+                    best = max(best, int(cm.group(1)))
+    return best
+
+
+def _dot_flops(op: OpLine, symbols: dict) -> float:
+    out_elems = _shape_elems(op.result_shape)
+    operands = _operand_names(op.rest)
+    if not operands:
+        return 0.0
+    lhs_shape = symbols.get(operands[0], "")
+    lhs_dims = _shape_dims(lhs_shape)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contraction = 1
+    if cm and cm.group(1) and lhs_dims:
+        for d in cm.group(1).split(","):
+            if d:
+                contraction *= lhs_dims[int(d)]
+    return 2.0 * out_elems * contraction
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    while_trip_counts: list = dataclasses.field(default_factory=list)
+    dot_flops_by_shape: dict = dataclasses.field(default_factory=dict)
+    bytes_by_opcode: dict = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "collectives": dict(self.collectives),
+            "collective_counts": dict(self.collective_counts),
+            "while_trip_counts": list(self.while_trip_counts),
+            "dot_flops_by_shape": dict(self.dot_flops_by_shape),
+            "bytes_by_opcode": dict(self.bytes_by_opcode),
+        }
+
+
+_SKIP_BYTES_OPCODES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "iota", "all-reduce-done", "all-gather-done",
+    "collective-permute-done",
+}
+
+
+def _param_index_map(comp: Computation) -> dict[str, int]:
+    out = {}
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            m = re.match(r"(\d+)", op.rest)
+            if m:
+                out[op.name] = int(m.group(1))
+    return out
+
+
+def _op_bytes(op: OpLine, comp: Computation, comps: dict) -> float:
+    """HBM-traffic estimate for one top-level op.
+
+    Slice-aware: dynamic-slice reads only its result-sized window;
+    dynamic-update-slice writes only the update window (XLA updates
+    in-place).  For fusions, operands consumed exclusively by
+    dynamic-slice inside the body count at the slice size, and a
+    dynamic-update-slice fusion root counts at the update size — this is
+    what keeps scan-over-layers models from quadratic over-counting.
+    """
+    if op.opcode == "dynamic-slice":
+        return 2.0 * _shape_bytes(op.result_shape)
+    if op.opcode == "dynamic-update-slice":
+        operands = _operand_names(op.rest)
+        upd = comp.symbols.get(operands[1], "") if len(operands) > 1 else ""
+        return 2.0 * _shape_bytes(upd)
+    if op.opcode != "fusion":
+        operands = _operand_names(op.rest)
+        return _shape_bytes(op.result_shape) + sum(
+            _shape_bytes(comp.symbols.get(o, "")) for o in operands
+        )
+
+    # --- fusion ---
+    called = _called_comps(op.rest)
+    body = None
+    for fn_ in called.get("calls", []):
+        if fn_ in comps:
+            body = comps[fn_]
+            break
+    operands = _operand_names(op.rest)
+    # strip computation names from the operand list
+    operands = [o for o in operands if o not in comps]
+    if body is None:
+        return _shape_bytes(op.result_shape) + sum(
+            _shape_bytes(comp.symbols.get(o, "")) for o in operands
+        )
+    pidx = _param_index_map(body)
+    # per-parameter consumer map inside the body
+    consumers: dict[str, list[OpLine]] = {p: [] for p in pidx}
+    for bop in body.ops:
+        for ref in _operand_names(bop.rest):
+            if ref in consumers:
+                consumers[ref].append(bop)
+    by_index = {v: k for k, v in pidx.items()}
+
+    # parameters that alias an in-place dynamic-update-slice target: the
+    # buffer flows (possibly through convert/bitcast/copy) into operand 0
+    # of a DUS root — on hardware this is an in-place update, the full
+    # buffer is neither read nor rewritten.
+    ops_by_name = {bop.name: bop for bop in body.ops}
+    aliased: set[str] = set()
+    for bop in body.ops:
+        if bop.opcode != "dynamic-update-slice":
+            continue
+        ops_r = _operand_names(bop.rest)
+        cur = ops_r[0] if ops_r else None
+        depth = 0
+        while cur is not None and depth < 8:
+            if cur in pidx:
+                aliased.add(cur)
+                break
+            nxt = ops_by_name.get(cur)
+            if nxt is None or nxt.opcode not in ("convert", "bitcast", "copy",
+                                                 "get-tuple-element"):
+                break
+            nops = _operand_names(nxt.rest)
+            cur = nops[0] if nops else None
+            depth += 1
+
+    total = 0.0
+    for i, oname in enumerate(operands):
+        full = _shape_bytes(comp.symbols.get(oname, ""))
+        pname = by_index.get(i)
+        if pname is not None:
+            if pname in aliased:
+                continue
+            cons = consumers.get(pname, [])
+            if cons and all(c.opcode == "dynamic-slice" for c in cons):
+                sliced = sum(_shape_bytes(c.result_shape) for c in cons)
+                total += min(full, sliced)
+                continue
+            if cons and all(
+                c.opcode == "dynamic-update-slice" for c in cons
+            ) and all(_operand_names(c.rest)[0] == pname for c in cons):
+                # in-place accumulation target: reads nothing extra
+                continue
+        total += full
+    # result: DUS roots write only their update windows (incl. tuple roots
+    # and elementwise convert/bitcast wrappers around the DUS)
+    def _resolve_dus(rop: OpLine, depth: int = 0) -> OpLine:
+        while rop.opcode in ("convert", "bitcast", "copy") and depth < 8:
+            refs = _operand_names(rop.rest)
+            nxt = ops_by_name.get(refs[0]) if refs else None
+            if nxt is None:
+                break
+            rop = nxt
+            depth += 1
+        return rop
+
+    def _root_bytes(rop: OpLine) -> float:
+        shape = rop.result_shape
+        rop = _resolve_dus(rop)
+        if rop.opcode == "dynamic-update-slice":
+            ops_r = _operand_names(rop.rest)
+            upd = body.symbols.get(ops_r[1], "") if len(ops_r) > 1 else ""
+            return float(_shape_bytes(upd))
+        return float(_shape_bytes(shape))
+
+    root = body.ops[-1] if body.ops else None
+    if root is not None and root.opcode == "tuple":
+        for ref in _operand_names(root.rest):
+            for bop in body.ops:
+                if bop.name == ref:
+                    total += _root_bytes(bop)
+                    break
+    elif root is not None:
+        total += _root_bytes(root)
+    else:
+        total += _shape_bytes(op.result_shape)
+    return total
+
+
+def analyze(text: str) -> HloCost:
+    comps, entry_name = parse_hlo(text)
+    if entry_name is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    cost = HloCost(
+        collectives=defaultdict(float),
+        collective_counts=defaultdict(float),
+        dot_flops_by_shape=defaultdict(float),
+    )
+    visited_stack: set[str] = set()
+
+    def visit(comp: Computation, mult: float, inside_fusion: bool) -> None:
+        if comp.name in visited_stack:  # defensive: no recursion in HLO
+            return
+        visited_stack.add(comp.name)
+        for op in comp.ops:
+            called = _called_comps(op.rest)
+            if op.opcode == "while":
+                trips = _trip_count(op, comps)
+                cost.while_trip_counts.append(trips)
+                for bn in called.get("body", []):
+                    if bn in comps:
+                        visit(comps[bn], mult * trips, inside_fusion)
+                for cn in called.get("condition", []):
+                    if cn in comps:
+                        visit(comps[cn], mult * trips, inside_fusion)
+                continue
+            if op.opcode == "fusion":
+                for fn_ in called.get("calls", []):
+                    if fn_ in comps:
+                        visit(comps[fn_], mult, True)
+            elif called:
+                # reducers/sorters/conditionals: visit bodies (tiny anyway)
+                for kind, names in called.items():
+                    if kind in ("to_apply", "calls", "branch_computations"):
+                        for cn in names:
+                            if cn in comps:
+                                visit(comps[cn], mult, True)
+
+            if op.opcode == "dot":
+                f = mult * _dot_flops(op, comp.symbols)
+                cost.flops += f
+                cost.dot_flops_by_shape[op.result_shape] += f
+            elif op.opcode == "convolution":
+                # estimate: 2 * out_elems * kernel_elems / out_channels
+                operands = _operand_names(op.rest)
+                out_elems = _shape_elems(op.result_shape)
+                k_elems = (
+                    _shape_elems(comp.symbols.get(operands[1], ""))
+                    if len(operands) > 1
+                    else 1
+                )
+                out_dims = _shape_dims(op.result_shape)
+                oc = out_dims[-1] if out_dims else 1
+                cost.flops += mult * 2.0 * out_elems * max(k_elems // max(oc, 1), 1)
+
+            base = op.opcode.replace("-start", "")
+            if base in ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute"):
+                operands = _operand_names(op.rest)
+                op_bytes = sum(
+                    _shape_bytes(comp.symbols.get(o, "")) for o in operands
+                )
+                nbytes = max(op_bytes, _shape_bytes(op.result_shape))
+                cost.collective_bytes += mult * nbytes
+                cost.collectives[base] += mult * nbytes
+                cost.collective_counts[base] += mult
+
+            if not inside_fusion and op.opcode not in _SKIP_BYTES_OPCODES:
+                b = mult * _op_bytes(op, comp, comps)
+                cost.bytes += b
+                cost.bytes_by_opcode[op.opcode] = (
+                    cost.bytes_by_opcode.get(op.opcode, 0.0) + b
+                )
+        visited_stack.discard(comp.name)
+
+    visit(comps[entry_name], 1.0, False)
+    cost.collectives = dict(cost.collectives)
+    cost.collective_counts = dict(cost.collective_counts)
+    cost.dot_flops_by_shape = dict(
+        sorted(cost.dot_flops_by_shape.items(), key=lambda kv: -kv[1])[:20]
+    )
+    return cost

@@ -1,0 +1,78 @@
+"""Roofline analysis from dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch x shape x mesh) cell, all in seconds/step:
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs          (197 TF bf16)
+  memory     = HLO_bytes_per_chip / HBM_bw              (819 GB/s)
+  collective = collective_bytes_per_chip / ICI_bw       (~50 GB/s/link)
+
+HLO quantities come from the multiplicity-aware analyzer (analysis/hlo.py)
+over the per-partition SPMD module, so they are already per-chip.
+MODEL_FLOPS uses 6*N*D for training (2*N*D inference), N_active for MoE.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9  # bytes/s per chip
+    ici_bw: float = 50e9  # bytes/s per link (~50 GB/s)
+    hbm_bytes: float = 16e9  # capacity per chip
+
+
+V5E = HardwareSpec()
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    bottleneck: str
+    step_s: float  # max of the three (no-overlap bound)
+    roofline_fraction: float  # compute_s / step_s: how compute-bound we are
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(
+    n_active_params: int, tokens: int, *, training: bool
+) -> float:
+    return (6.0 if training else 2.0) * n_active_params * tokens
+
+
+def compute_terms(
+    *,
+    flops_per_chip: float,
+    bytes_per_chip: float,
+    collective_bytes_per_chip: float,
+    chips: int,
+    model_flops_total: float,
+    hw: HardwareSpec = V5E,
+) -> RooflineTerms:
+    compute_s = flops_per_chip / hw.peak_flops
+    memory_s = bytes_per_chip / hw.hbm_bw
+    collective_s = collective_bytes_per_chip / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    hlo_total = flops_per_chip * chips
+    return RooflineTerms(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        model_flops=model_flops_total,
+        hlo_flops_total=hlo_total,
+        useful_ratio=model_flops_total / hlo_total if hlo_total else 0.0,
+        bottleneck=bottleneck,
+        step_s=step_s,
+        roofline_fraction=compute_s / step_s if step_s else 0.0,
+    )

@@ -1,0 +1,4 @@
+"""Assigned architecture configs + registry (``--arch <id>``)."""
+from repro.configs.registry import ARCH_IDS, SHAPES, ShapeSpec, all_cells, cell_supported, get_config
+
+__all__ = ["ARCH_IDS", "SHAPES", "ShapeSpec", "all_cells", "cell_supported", "get_config"]

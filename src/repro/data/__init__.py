@@ -1,0 +1,5 @@
+"""Data pipelines: synthetic token streams + RT-backed loaders."""
+from repro.data.loader import RegionTemplateLoader
+from repro.data.tokens import SyntheticTokens
+
+__all__ = ["RegionTemplateLoader", "SyntheticTokens"]

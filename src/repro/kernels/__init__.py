@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the pipeline's compute hot spots.
+
+Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), validated against
+``ref.py`` oracles; ``ops.py`` holds the jit'd dispatching wrappers.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

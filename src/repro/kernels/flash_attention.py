@@ -1,0 +1,168 @@
+"""Pallas kernel: FlashAttention (online-softmax tiled attention).
+
+The canonical TPU structure: grid (batch*heads, q_blocks, k_blocks) with
+the k dimension innermost/sequential; the output block index is
+independent of the k index so the (bq, D) accumulator stays resident in
+VMEM across k steps, carried with running-max/denominator scratch.
+Supports GQA (kv-head deref through the index map — no materialized
+repeat), causal masking, sliding windows, and a query offset for decode.
+
+MXU alignment: choose block_q/block_k multiples of 128 and head_dim a
+multiple of 128 in production; tests sweep small off-aligned shapes in
+interpret mode to pin numerics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    q_offset: int,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+    kv_len: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, D)
+    k = k_ref[0].astype(jnp.float32)  # (bk, D)
+    v = v_ref[0].astype(jnp.float32)  # (bk, D)
+
+    qpos = q_offset + qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < kv_len  # block padding of ragged Tk
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+
+    def _compute():
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        s = s * scale + jnp.where(mask, 0.0, _NEG_INF)
+        m_prev = m_scr[...]  # (bq, 1)
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+        acc = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc
+
+    # skip k blocks that are fully masked (block-level causal/window pruning)
+    if causal or window is not None:
+        q_max = q_offset + qi * block_q + block_q - 1
+        k_min = ki * block_k
+        live = k_min <= q_max
+        if window is not None:
+            q_min = q_offset + qi * block_q
+            k_max = ki * block_k + block_k - 1
+            live = jnp.logical_and(live, k_max > q_min - window)
+        pl.when(live)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (B, Hq, Tq, D)
+    k: jax.Array,  # (B, Hkv, Tk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    bq = min(block_q, tq)
+    bk = min(block_k, tk)
+    nq = pl.cdiv(tq, bq)
+    nk = pl.cdiv(tk, bk)
+    # pad ragged sequence dims to block multiples (position masks drop pads)
+    tq_p, tk_p = nq * bq, nk * bk
+    if tq_p != tq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, tq_p - tq), (0, 0)))
+    if tk_p != tk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, tk_p - tk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, tk_p - tk), (0, 0)))
+
+    qf = q.reshape(b * hq, tq_p, d)
+    kf = k.reshape(b * hkv, tk_p, d)
+    vf = v.reshape(b * hkv, tk_p, d)
+
+    def kv_index(bh, qi, ki):
+        # GQA deref: (batch, q-head) -> kv row, no repeated kv in memory
+        return (bh // hq) * hkv + (bh % hq) // group, ki, 0
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            scale=scale,
+            causal=causal,
+            window=window,
+            q_offset=q_offset,
+            block_q=bq,
+            block_k=bk,
+            num_k_blocks=nk,
+            kv_len=tk,
+        ),
+        out_shape=jax.ShapeDtypeStruct((b * hq, tq_p, d), q.dtype),
+        grid=(b * hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, tq_p, d)[:, :, :tq, :]

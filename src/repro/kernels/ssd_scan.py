@@ -1,0 +1,139 @@
+"""Pallas kernel: Mamba2 SSD (state-space duality) chunked scan.
+
+The sequential recurrence h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t^T is
+restructured into the SSD chunked form (Dao & Gu 2024): within a chunk of
+length L everything is dense matmuls (MXU work), and only a (N, P) state
+crosses chunk boundaries:
+
+  intra:  Y = ((C B^T) . SegDecay) @ (X)            -- (L,L)@(L,P)
+  inter:  Y += exp(cum) * (C @ h_prev)              -- (L,N)@(N,P)
+  carry:  h = exp(total) h_prev + (B * w)^T @ X     -- (N,L)@(L,P)
+
+Grid: one program per (batch*head); the chunk loop runs inside the kernel
+with the (N, P) state carried in registers/VMEM.  B/C are group-shared
+(G groups, H heads): the index map derefs head -> group, no materialized
+repeat.  P and N should be multiples of 128 for MXU alignment on real
+hardware; tests sweep small shapes in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(
+    x_ref,  # (1, T, P)
+    dt_ref,  # (1, T)
+    a_ref,  # (1,)
+    b_ref,  # (1, T, N)
+    c_ref,  # (1, T, N)
+    d_ref,  # (1,)
+    y_ref,  # (1, T, P)
+    hout_ref,  # (1, N, P)
+    *,
+    chunk: int,
+    num_chunks: int,
+    seq_len: int,
+):
+    a = a_ref[0]
+    d_skip = d_ref[0]
+    p = x_ref.shape[-1]
+    n = b_ref.shape[-1]
+
+    def body(ci, h):
+        sl = pl.dslice(ci * chunk, chunk)
+        x = x_ref[0, sl, :].astype(jnp.float32)  # (L, P)
+        dt = dt_ref[0, sl].astype(jnp.float32)  # (L,)
+        bmat = b_ref[0, sl, :].astype(jnp.float32)  # (L, N)
+        cmat = c_ref[0, sl, :].astype(jnp.float32)  # (L, N)
+        la = dt * a  # (L,) log-decay per step (<= 0)
+        cum = jnp.cumsum(la)  # inclusive
+        total = cum[-1]
+        # segment decay matrix: exp(cum_i - cum_j) for i >= j else 0
+        seg = jnp.exp(cum[:, None] - cum[None, :])
+        li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        seg = jnp.where(li >= lj, seg, 0.0)
+        g = (
+            jax.lax.dot_general(
+                cmat, bmat, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            * seg
+            * dt[None, :]
+        )  # (L, L)
+        y_intra = jax.lax.dot_general(
+            g, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+            cmat, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        y = y_intra + y_inter + d_skip * x
+        y_ref[0, sl, :] = y.astype(y_ref.dtype)
+        # state carry: h' = exp(total) h + sum_j exp(total - cum_j) dt_j B_j x_j^T
+        w = jnp.exp(total - cum) * dt  # (L,)
+        h_new = jnp.exp(total) * h + jax.lax.dot_general(
+            bmat * w[:, None], x, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return h_new
+
+    h0 = jnp.zeros((n, p), jnp.float32)
+    hf = jax.lax.fori_loop(0, num_chunks, body, h0)
+    hout_ref[0] = hf.astype(hout_ref.dtype)
+
+
+def ssd_scan_pallas(
+    x: jax.Array,  # (B, T, H, P)
+    dt: jax.Array,  # (B, T, H)
+    a: jax.Array,  # (H,)
+    b_: jax.Array,  # (B, T, G, N)
+    c_: jax.Array,  # (B, T, G, N)
+    d_: jax.Array | None = None,  # (H,)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    bsz, t, h, p = x.shape
+    g, n = b_.shape[2], b_.shape[3]
+    rep = h // g
+    chunk = min(chunk, t)
+    assert t % chunk == 0, f"seq {t} must be a multiple of chunk {chunk}"
+    nchunks = t // chunk
+    if d_ is None:
+        d_ = jnp.zeros((h,), jnp.float32)
+
+    xf = jnp.moveaxis(x, 2, 1).reshape(bsz * h, t, p)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(bsz * h, t)
+    bf = jnp.moveaxis(b_, 2, 1).reshape(bsz * g, t, n)
+    cf = jnp.moveaxis(c_, 2, 1).reshape(bsz * g, t, n)
+
+    def bc_index(bh):
+        return (bh // h) * g + (bh % h) // rep, 0, 0
+
+    y, hf = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, num_chunks=nchunks, seq_len=t),
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz * h, t, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz * h, n, p), jnp.float32),
+        ),
+        grid=(bsz * h,),
+        in_specs=[
+            pl.BlockSpec((1, t, p), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, t), lambda bh: (bh, 0)),
+            pl.BlockSpec((1,), lambda bh: (bh % h,)),
+            pl.BlockSpec((1, t, n), bc_index),
+            pl.BlockSpec((1, t, n), bc_index),
+            pl.BlockSpec((1,), lambda bh: (bh % h,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, t, p), lambda bh: (bh, 0, 0)),
+            pl.BlockSpec((1, n, p), lambda bh: (bh, 0, 0)),
+        ),
+        interpret=interpret,
+    )(xf, dtf, a.astype(jnp.float32), bf, cf, d_.astype(jnp.float32))
+    y = jnp.moveaxis(y.reshape(bsz, h, t, p), 1, 2)
+    hf = hf.reshape(bsz, h, n, p)
+    return y, hf

@@ -1,0 +1,8 @@
+"""Launchers: production mesh, dry-run, train/serve drivers.
+
+NOTE: repro.launch.dryrun must be executed as __main__ (it sets XLA_FLAGS
+before importing jax); do not import it from library code.
+"""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

@@ -1,0 +1,184 @@
+"""Cell builder: (arch x shape x mesh) -> jittable step + abstract inputs.
+
+A *cell* is one dry-run unit: the step function (train_step for ``train``
+shapes, prefill/decode serve steps for inference shapes), abstract
+ShapeDtypeStruct inputs, and the in/out shardings over the given mesh.
+The same builder powers the real drivers (launch/train.py, serve.py) and
+the dry-run (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, cell_supported, get_config
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.models.spec import (
+    DEFAULT_RULES,
+    ParamSpec,
+    named_shardings,
+    partition_specs,
+)
+from repro.serve import abstract_cache, cache_shardings, make_decode_step, make_prefill_step
+from repro.train import AdamW, AdamWConfig, abstract_state, make_train_step, state_shardings
+
+ENC_LEN_STUB = 4096  # encoder frames for enc-dec decode cells (audio stub)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple[int, ...]
+    meta: dict
+    rules: dict | None = None
+
+
+def _batch_shardings(cfg: ModelConfig, mesh, batch: int, *, rules=None) -> Any:
+    rules = rules or DEFAULT_RULES
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    import numpy as np
+
+    total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    b = (dp if len(dp) > 1 else dp[0]) if (dp and batch % total == 0) else None
+    def sh(spec):
+        return NamedSharding(mesh, spec)
+
+    out = {"tokens": sh(P(b)), "labels": sh(P(b))}
+    if cfg.family == "encdec":
+        out["frames"] = sh(P(b))
+    if cfg.frontend:
+        out["prefix"] = sh(P(b))
+    return out
+
+
+def _abstract_batch(cfg: ModelConfig, shape: ShapeSpec, *, with_labels: bool) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    tok_len = s - cfg.frontend_len if cfg.frontend else s
+    batch: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, tok_len), jnp.int32),
+    }
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct((b, tok_len), jnp.int32)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend:
+        batch["prefix"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), jnp.bfloat16
+        )
+    return batch
+
+
+def _abstract_params(cfg: ModelConfig) -> Any:
+    spec_tree = registry.abstract_params(cfg)
+    return jax.tree_util.tree_map(
+        lambda sp: jax.ShapeDtypeStruct(sp.shape, sp.dtype),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: jax.sharding.Mesh,
+    *,
+    zero1: bool = False,
+    rules: dict | None = None,
+    optim=None,
+    cfg_overrides: dict | None = None,
+    seq_shard_cache: bool = False,
+) -> Cell:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"cell ({arch}, {shape_name}) unsupported: {why}")
+    if rules is None:
+        from repro.models.spec import seq_shard_rules
+
+        rules = seq_shard_rules() if seq_shard_cache else DEFAULT_RULES
+
+    if shape.kind == "train":
+        optim = optim or AdamW(AdamWConfig())
+        fn = make_train_step(cfg, optim)
+        state = abstract_state(cfg, optim)
+        batch = _abstract_batch(cfg, shape, with_labels=True)
+        st_sh = state_shardings(cfg, mesh, optim, zero1=zero1, rules=rules)
+        b_sh = _batch_shardings(cfg, mesh, shape.global_batch, rules=rules)
+        return Cell(
+            arch, shape, cfg, fn, (state, batch),
+            in_shardings=(st_sh, b_sh),
+            out_shardings=(st_sh, None),
+            donate_argnums=(0,),
+            meta={"kind": "train", "tokens": shape.global_batch * shape.seq_len},
+            rules=rules,
+        )
+
+    params = _abstract_params(cfg)
+    p_sh = named_shardings(registry.abstract_params(cfg), mesh, rules)
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        batch = _abstract_batch(cfg, shape, with_labels=False)
+        cache = abstract_cache(cfg, shape.global_batch, shape.seq_len, enc_len=shape.seq_len)
+        c_sh = cache_shardings(cfg, cache, mesh, rules, seq_shard=seq_shard_cache)
+        b_sh = _batch_shardings(cfg, mesh, shape.global_batch, rules=rules)
+        b_sh.pop("labels", None)
+        return Cell(
+            arch, shape, cfg, fn, (params, batch, cache),
+            in_shardings=(p_sh, b_sh, c_sh),
+            out_shardings=(None, c_sh),
+            donate_argnums=(2,),
+            meta={"kind": "prefill", "tokens": shape.global_batch * shape.seq_len},
+            rules=rules,
+        )
+
+    # decode: one new token against a cache of seq_len
+    fn = make_decode_step(cfg)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    cache = abstract_cache(cfg, shape.global_batch, shape.seq_len, enc_len=ENC_LEN_STUB)
+    c_sh = cache_shardings(cfg, cache, mesh, rules, seq_shard=seq_shard_cache)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    import numpy as np
+
+    total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    b = (dp if len(dp) > 1 else dp[0]) if (dp and shape.global_batch % total == 0) else None
+    t_sh = NamedSharding(mesh, P(b, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+    return Cell(
+        arch, shape, cfg, fn, (params, tokens, cache, pos),
+        in_shardings=(p_sh, t_sh, c_sh, pos_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,),
+        meta={"kind": "decode", "tokens": shape.global_batch},
+        rules=rules,
+    )
+
+
+def lower_cell(cell: Cell, mesh: jax.sharding.Mesh):
+    """jit + lower (+ the caller compiles)."""
+    from repro.models.spec import activation_sharding
+
+    jitted = jax.jit(
+        cell.fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+    with activation_sharding(mesh, cell.rules):
+        lowered = jitted.lower(*cell.args)
+    return lowered

@@ -1,0 +1,224 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and emit roofline artifacts.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); smoke tests and benches never import this module, so
+they see the real single CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, (built-in + multiplicity-corrected) cost analysis,
+collective byte breakdown, and the three roofline terms.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis import hlo as hlo_analysis
+from repro.analysis.roofline import V5E, compute_terms, model_flops
+from repro.configs import SHAPES, all_cells, cell_supported, get_config
+from repro.launch.cells import build_cell, lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry as model_registry
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+    except Exception as e:  # noqa: BLE001
+        out["error"] = repr(e)
+    return out
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    outdir: str,
+    *,
+    zero1: bool = False,
+    skip_hlo: bool = False,
+    cfg_overrides: dict | None = None,
+    seq_shard_cache: bool = False,
+    seq_parallel: bool = False,
+    tag: str = "",
+) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    record: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "zero1": zero1,
+        "status": "ok",
+        "tag": tag,
+        "cfg_overrides": {k: str(v) for k, v in (cfg_overrides or {}).items()},
+        "seq_shard_cache": seq_shard_cache,
+        "seq_parallel": seq_parallel,
+    }
+    t0 = time.time()
+    try:
+        from repro.models.spec import seq_parallel_rules
+
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.devices.size
+        cell = build_cell(
+            arch, shape_name, mesh, zero1=zero1, cfg_overrides=cfg_overrides,
+            seq_shard_cache=seq_shard_cache,
+            rules=seq_parallel_rules() if seq_parallel else None,
+        )
+        record["chips"] = int(chips)
+        record["mesh_shape"] = {k: int(v) for k, v in mesh.shape.items()}
+        record["kind"] = cell.meta["kind"]
+        record["tokens_per_step"] = int(cell.meta["tokens"])
+
+        lowered = lower_cell(cell, mesh)
+        record["lower_s"] = round(time.time() - t0, 2)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 2)
+        record["memory_analysis"] = _memory_analysis_dict(compiled)
+
+        ca = compiled.cost_analysis() or {}
+        record["xla_cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+
+        if not skip_hlo:
+            t2 = time.time()
+            text = compiled.as_text()
+            record["hlo_bytes_len"] = len(text)
+            cost = hlo_analysis.analyze(text)
+            record["hlo_analysis_s"] = round(time.time() - t2, 2)
+            record["hlo"] = cost.as_dict()
+
+            cfg = cell.cfg
+            n_active = model_registry.count_active_params(cfg)
+            training = cell.meta["kind"] == "train"
+            mf = model_flops(n_active, cell.meta["tokens"], training=training)
+            terms = compute_terms(
+                flops_per_chip=cost.flops,
+                bytes_per_chip=cost.bytes,
+                collective_bytes_per_chip=cost.collective_bytes,
+                chips=chips,
+                model_flops_total=mf,
+            )
+            record["roofline"] = terms.as_dict()
+            record["n_params"] = model_registry.count_params(cfg)
+            record["n_active_params"] = n_active
+    except Exception as e:  # noqa: BLE001
+        record["status"] = "error"
+        record["error"] = repr(e)
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["total_s"] = round(time.time() - t0, 2)
+
+    os.makedirs(outdir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(outdir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    status = record["status"]
+    extra = ""
+    if status == "ok" and "roofline" in record:
+        r = record["roofline"]
+        extra = (
+            f" compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+            f"coll={r['collective_s']:.4f}s bottleneck={r['bottleneck']}"
+        )
+    print(f"[{status}] {arch} x {shape_name} x {mesh_name}{suffix} "
+          f"({record['total_s']}s){extra}", flush=True)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="run every supported cell")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--skip-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    # perf-iteration knobs (see EXPERIMENTS.md SPerf)
+    ap.add_argument("--attn-impl", default=None, choices=["xla", "chunked"])
+    ap.add_argument("--remat", default=None, choices=["none", "dots", "full"])
+    ap.add_argument("--moe-groups", type=int, default=None)
+    ap.add_argument("--seq-shard-cache", action="store_true")
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="Megatron-style sequence-parallel residual activations")
+    args = ap.parse_args()
+
+    overrides: dict = {}
+    if args.attn_impl:
+        overrides["attn_impl"] = args.attn_impl
+    if args.remat:
+        overrides["remat"] = args.remat
+    if args.moe_groups:
+        overrides["moe_groups"] = args.moe_groups
+    if args.ssm_chunk:
+        overrides["ssm_chunk"] = args.ssm_chunk
+    if args.capacity_factor:
+        overrides["capacity_factor"] = args.capacity_factor
+
+    if args.list:
+        for arch, shape, ok, why in all_cells():
+            print(f"{arch:24s} {shape:12s} {'RUN' if ok else 'SKIP: ' + why}")
+        return
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        cells = [(a, s) for a, s, ok, _ in all_cells() if ok]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all/--list")
+        ok, why = cell_supported(get_config(args.arch), args.shape)
+        if not ok:
+            print(f"SKIP {args.arch} x {args.shape}: {why}")
+            return
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(
+                arch, shape, mp, args.out, zero1=args.zero1,
+                skip_hlo=args.skip_hlo, tag=args.tag,
+                cfg_overrides=overrides or None,
+                seq_shard_cache=args.seq_shard_cache,
+                seq_parallel=args.seq_parallel,
+            )
+            failures += rec["status"] != "ok"
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: all assigned architecture families in pure functional JAX."""
+from repro.models import encdec, layers, registry, spec, transformer
+from repro.models.config import ModelConfig
+
+__all__ = ["ModelConfig", "encdec", "layers", "registry", "spec", "transformer"]

@@ -1,0 +1,169 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder: bidirectional self-attention over precomputed modality frame
+embeddings (the audio frontend is a STUB per the assignment: ``input_specs``
+provides (B, S_enc, d_model) frames).  Decoder: causal self-attention +
+cross-attention over encoder output + MLP.  Decode shapes lower the
+decoder's serve_step with a self KV cache plus a precomputed cross KV
+cache (encoder runs once at prefill).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.spec import ParamSpec
+from repro.models.transformer import _maybe_remat, _stack
+
+
+def _enc_layer_spec(cfg: ModelConfig) -> dict:
+    return {
+        "norm1": L.norm_spec(cfg),
+        "norm2": L.norm_spec(cfg),
+        "attn": L.attention_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def _dec_layer_spec(cfg: ModelConfig) -> dict:
+    return {
+        "norm1": L.norm_spec(cfg),
+        "norm_x": L.norm_spec(cfg),
+        "norm2": L.norm_spec(cfg),
+        "attn": L.attention_spec(cfg),
+        "xattn": L.attention_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return {
+        "embed": L.embed_spec(cfg),
+        "enc_layers": _stack(_enc_layer_spec(cfg), cfg.enc_layers or cfg.num_layers),
+        "enc_norm": L.norm_spec(cfg),
+        "dec_layers": _stack(_dec_layer_spec(cfg), cfg.num_layers),
+        "final_norm": L.norm_spec(cfg),
+    }
+
+
+def _cross_attention(lp: Any, x: jax.Array, cfg: ModelConfig, xk: jax.Array, xv: jax.Array):
+    """Cross-attention against precomputed encoder K/V (B, kv, S_enc, hd)."""
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"].astype(x.dtype))
+    qh = jnp.moveaxis(q, 1, 2)
+    t = xk.shape[2]
+    mask = jnp.ones((x.shape[1], t), dtype=bool)
+    out = L._masked_attention(qh, xk, xv, mask, cfg, hd)
+    out = jnp.moveaxis(out, 1, 2)
+    return jnp.einsum("bshk,hkd->bsd", out, lp["wo"].astype(x.dtype))
+
+
+def _cross_kv(lp: Any, enc: jax.Array) -> tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dhk->bshk", enc, lp["wk"].astype(enc.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc, lp["wv"].astype(enc.dtype))
+    return jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)
+
+
+def encode(params: Any, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, S_enc, d) stub embeddings -> encoder states."""
+    x = frames.astype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, lp):
+        x = carry
+        h = L.apply_norm(lp["norm1"], x, cfg)
+        attn, _ = L.attention_forward(lp["attn"], h, cfg, positions, causal=False)
+        x = x + attn
+        x = x + L.mlp_forward(lp["mlp"], L.apply_norm(lp["norm2"], x, cfg), cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["enc_layers"])
+    return L.apply_norm(params["enc_norm"], x, cfg)
+
+
+def _decoder_stack(params, x, cfg, positions, enc, *, cache=None, pos=None):
+    """Shared decoder body; cache = {"k","v","xk","xv"} stacked over layers."""
+
+    def body(carry, xs):
+        x = carry
+        lp, c = xs
+        h = L.apply_norm(lp["norm1"], x, cfg)
+        if c is None:
+            attn, new_kv = L.attention_forward(lp["attn"], h, cfg, positions)
+            xk, xv = _cross_kv(lp["xattn"], enc)
+        else:
+            attn, new_kv = L.attention_forward(
+                lp["attn"], h, cfg, positions, kv_cache=(c["k"], c["v"]),
+                cache_pos=pos if pos is not None else jnp.zeros((), jnp.int32),
+            )
+            xk, xv = c["xk"], c["xv"]
+        x = x + attn
+        x = x + _cross_attention(lp["xattn"], L.apply_norm(lp["norm_x"], x, cfg), cfg, xk, xv)
+        x = x + L.mlp_forward(lp["mlp"], L.apply_norm(lp["norm2"], x, cfg), cfg)
+        out = None if c is None else {"k": new_kv[0], "v": new_kv[1], "xk": xk, "xv": xv}
+        return x, out
+
+    if cache is None:
+        body_nc = _maybe_remat(lambda carry, lp: body(carry, (lp, None)), cfg)
+        x, _ = jax.lax.scan(body_nc, x, params["dec_layers"])
+        return x, None
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    return x, new_cache
+
+
+def forward(params: Any, frames: jax.Array, tokens: jax.Array, cfg: ModelConfig):
+    """Training forward: (enc frames, dec tokens) -> (logits, aux)."""
+    enc = encode(params, frames, cfg)
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, _ = _decoder_stack(params, x, cfg, positions, enc)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int, dtype=None) -> Any:
+    dtype = dtype or cfg.compute_dtype
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    n = cfg.num_layers
+    return {
+        "k": jnp.zeros((n, batch, kv, max_len, hd), dtype),
+        "v": jnp.zeros((n, batch, kv, max_len, hd), dtype),
+        "xk": jnp.zeros((n, batch, kv, enc_len, hd), dtype),
+        "xv": jnp.zeros((n, batch, kv, enc_len, hd), dtype),
+    }
+
+
+def prefill(params: Any, frames: jax.Array, tokens: jax.Array, cfg: ModelConfig, cache: Any):
+    """Encoder pass + decoder prompt pass, populating self+cross caches."""
+    enc = encode(params, frames, cfg)
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    # compute cross K/V once per layer and stash them in the cache
+    def fill(carry, xs):
+        _ = carry
+        lp, c = xs
+        xk, xv = _cross_kv(lp["xattn"], enc)
+        return None, {"k": c["k"], "v": c["v"], "xk": xk.astype(c["xk"].dtype),
+                      "xv": xv.astype(c["xv"].dtype)}
+
+    _, cache = jax.lax.scan(fill, None, (params["dec_layers"], cache))
+    x, new_cache = _decoder_stack(params, x, cfg, positions, enc, cache=cache)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x[:, -1:], cfg), new_cache
+
+
+def decode_step(params: Any, tokens: jax.Array, cfg: ModelConfig, cache: Any, pos: jax.Array):
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    x, new_cache = _decoder_stack(params, x, cfg, positions, None, cache=cache, pos=pos)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg), new_cache

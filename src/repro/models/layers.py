@@ -1,0 +1,623 @@
+"""Shared neural building blocks for every architecture family.
+
+Pure-functional JAX: parameters are pytrees described by ParamSpec trees
+(see spec.py); every op is jit/scan/pjit-friendly.  Attention dispatches
+between the Pallas flash kernel and the jnp reference through
+``repro.kernels.ops``; activations carry logical-axis sharding hints via
+``spec.shard_activation``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models.config import ModelConfig
+from repro.models.spec import ParamSpec, shard_activation
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6, plus_one: bool = False) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (y * scale).astype(dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dtype)
+
+
+def norm_spec(cfg: ModelConfig) -> Any:
+    if cfg.norm_type == "layernorm":
+        return {
+            "w": ParamSpec((cfg.d_model,), ("embed",), cfg.param_dtype, "ones"),
+            "b": ParamSpec((cfg.d_model,), ("embed",), cfg.param_dtype, "zeros"),
+        }
+    return {"w": ParamSpec((cfg.d_model,), ("embed",), cfg.param_dtype, "ones")}
+
+
+def apply_norm(p: Any, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) absolute indices."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (with optional qk-norm, sliding window, KV cache)
+# ---------------------------------------------------------------------------
+def attention_spec(cfg: ModelConfig) -> Any:
+    hd = cfg.resolved_head_dim
+    d, h, kv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    p: dict[str, Any] = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", None), cfg.param_dtype),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", None), cfg.param_dtype),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", None), cfg.param_dtype),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "embed"), cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec((hd,), (None,), cfg.param_dtype, "ones")
+        p["k_norm"] = ParamSpec((hd,), (None,), cfg.param_dtype, "ones")
+    return p
+
+
+def _qk_normalize(x: jax.Array, w: jax.Array) -> jax.Array:
+    return rms_norm(x, w)
+
+
+def attention_forward(
+    p: Any,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    positions: jax.Array,  # (B, S)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_cache: tuple[jax.Array, jax.Array] | None = None,  # (B, kv, T, hd) x2
+    cache_pos: jax.Array | None = None,  # scalar: #valid entries already cached
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """Returns (out (B,S,d), updated kv cache or None).
+
+    Training/prefill: kv_cache=None or empty cache to fill from position 0.
+    Decode: S == 1 and cache_pos = current length (query position).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = _qk_normalize(q, p["q_norm"])
+        k = _qk_normalize(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_activation(q, ("batch", "seq", "heads", None))
+    k = shard_activation(k, ("batch", "seq", "kv_heads", None))
+
+    qh = jnp.moveaxis(q, 1, 2)  # (B, H, S, hd)
+    new_cache = None
+    if kv_cache is not None and s > 1:
+        # prefill: populate the cache, but attend over the freshly
+        # computed K/V (the cache is empty beyond position s) through the
+        # streaming attention path — honors attn_impl (chunked/pallas)
+        # instead of materializing a mask over the full cache capacity
+        ck, cv = kv_cache
+        kh = jnp.moveaxis(k, 1, 2)
+        vh = jnp.moveaxis(v, 1, 2)
+        start = jnp.zeros((), jnp.int32) if cache_pos is None else cache_pos
+        ck = jax.lax.dynamic_update_slice(ck, kh.astype(ck.dtype), (0, 0, start, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vh.astype(cv.dtype), (0, 0, start, 0))
+        new_cache = (ck, cv)
+        out = ops.attention(
+            qh, kh, vh, causal=causal, window=window, impl=cfg.attn_impl
+        )
+    elif kv_cache is not None:
+        ck, cv = kv_cache  # (B, kv, T, hd)
+        kh = jnp.moveaxis(k, 1, 2)
+        vh = jnp.moveaxis(v, 1, 2)
+        start = jnp.zeros((), jnp.int32) if cache_pos is None else cache_pos
+        ck = jax.lax.dynamic_update_slice(ck, kh.astype(ck.dtype), (0, 0, start, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vh.astype(cv.dtype), (0, 0, start, 0))
+        new_cache = (ck, cv)
+        keys, vals = ck, cv
+        q_offset = start
+        t = keys.shape[2]
+        kpos = jnp.arange(t)[None, :]
+        qpos = (q_offset + jnp.arange(s))[:, None]
+        mask = kpos <= qpos if causal else kpos < (q_offset + s)
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        out = _masked_attention(qh, keys, vals, mask, cfg, hd)
+    else:
+        keys = jnp.moveaxis(k, 1, 2)
+        vals = jnp.moveaxis(v, 1, 2)
+        out = ops.attention(
+            qh,
+            keys,
+            vals,
+            causal=causal,
+            window=window,
+            impl=cfg.attn_impl,
+        )
+    out = jnp.moveaxis(out, 1, 2)  # (B, S, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard_activation(y, ("batch", "res_seq", "embed")), new_cache
+
+
+def _masked_attention(qh, keys, vals, mask, cfg: ModelConfig, hd: int) -> jax.Array:
+    """Explicit-mask attention used on cached paths (xla impl).
+
+    Single-token decode uses grouped-einsum GQA: K/V are *not* repeated
+    across query groups, so a sequence-sharded cache keeps its sharding
+    through the logits and the softmax runs as SPMD partial reductions
+    instead of an all-gather of the cache.  Multi-token (prefill) keeps
+    the flat-head layout — there the (b, H, s, t) logits shard over the
+    full query-head dim, which the (kv, group) split would break.
+    """
+    b, h, s, _ = qh.shape
+    kv = keys.shape[1]
+    group = h // kv
+    if s == 1:
+        qg = qh.reshape(b, kv, group, s, hd).astype(jnp.float32)
+        logits = jnp.einsum("bkgqd,bktd->bkgqt", qg, keys.astype(jnp.float32)) / np.sqrt(hd)
+        logits = shard_activation(logits, ("batch", "kv_heads", None, None, "kv_seq"))
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgqt,bktd->bkgqd", probs, vals.astype(jnp.float32))
+        return out.reshape(b, h, s, hd).astype(qh.dtype)
+    kr = jnp.repeat(keys, group, axis=1)
+    vr = jnp.repeat(vals, group, axis=1)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", qh.astype(jnp.float32), kr.astype(jnp.float32)
+    ) / np.sqrt(hd)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vr.astype(jnp.float32)).astype(qh.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2): low-rank compressed KV + decoupled RoPE
+# ---------------------------------------------------------------------------
+def mla_spec(cfg: ModelConfig) -> Any:
+    d, h = cfg.d_model, cfg.num_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq": ParamSpec((d, h, dn + dr), ("embed", "heads", None), cfg.param_dtype),
+        "w_dkv": ParamSpec((d, r), ("embed", "kv_lora"), cfg.param_dtype),
+        "w_kr": ParamSpec((d, dr), ("embed", None), cfg.param_dtype),
+        "kv_norm": ParamSpec((r,), ("kv_lora",), cfg.param_dtype, "ones"),
+        "w_uk": ParamSpec((r, h, dn), ("kv_lora", "heads", None), cfg.param_dtype),
+        "w_uv": ParamSpec((r, h, dv), ("kv_lora", "heads", None), cfg.param_dtype),
+        "wo": ParamSpec((h, dv, d), ("heads", None, "embed"), cfg.param_dtype),
+    }
+
+
+def mla_forward(
+    p: Any,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    kv_cache: tuple[jax.Array, jax.Array] | None = None,  # (ckv (B,T,r), krope (B,T,dr))
+    cache_pos: jax.Array | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype)), p["kv_norm"])
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, p["w_kr"].astype(x.dtype))[:, :, None, :], positions,
+        cfg.rope_theta,
+    )[:, :, 0, :]
+
+    scale = 1.0 / np.sqrt(dn + dr)
+    if kv_cache is not None:
+        cc, cr = kv_cache
+        start = jnp.zeros((), jnp.int32) if cache_pos is None else cache_pos
+        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype), (0, start, 0))
+        cr = jax.lax.dynamic_update_slice(cr, k_rope.astype(cr.dtype), (0, start, 0))
+        new_cache = (cc, cr)
+        t = cc.shape[1]
+        # absorbed decode: score = (q_nope @ W_uk) . c_kv  — the MLA trick:
+        # the cache stays compressed (r + dr per token, not 2*h*hd)
+        q_abs = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32), p["w_uk"].astype(jnp.float32))
+        logits = jnp.einsum("bshr,btr->bhst", q_abs, cc.astype(jnp.float32))
+        logits += jnp.einsum(
+            "bshr,btr->bhst", q_rope.astype(jnp.float32), cr.astype(jnp.float32)
+        )
+        logits *= scale
+        qpos = (start + jnp.arange(s))[:, None]
+        kpos = jnp.arange(t)[None, :]
+        mask = kpos <= qpos
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", probs, cc.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhv->bshv", ctx, p["w_uv"].astype(jnp.float32)).astype(x.dtype)
+    else:
+        new_cache = None
+        k_nope = jnp.einsum("bsr,rhn->bshn", c_kv, p["w_uk"].astype(x.dtype))
+        v = jnp.einsum("bsr,rhv->bshv", c_kv, p["w_uv"].astype(x.dtype))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = ops.attention(
+            jnp.moveaxis(q_full, 1, 2),
+            jnp.moveaxis(k_full, 1, 2),
+            jnp.moveaxis(v, 1, 2),
+            causal=True,
+            impl=cfg.attn_impl,
+        )
+        out = jnp.moveaxis(out, 1, 2)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(x.dtype))
+    return shard_activation(y, ("batch", "res_seq", "embed")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs (dense variants)
+# ---------------------------------------------------------------------------
+def mlp_spec(cfg: ModelConfig, d_ff: int | None = None) -> Any:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    gated = cfg.mlp_kind in ("swiglu", "geglu")
+    p = {
+        "w1": ParamSpec((d, f), ("embed", "ffn"), cfg.param_dtype),
+        "w2": ParamSpec((f, d), ("ffn", "embed"), cfg.param_dtype),
+    }
+    if gated:
+        p["w3"] = ParamSpec((d, f), ("embed", "ffn"), cfg.param_dtype)
+    return p
+
+
+def mlp_forward(p: Any, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype))
+    h = shard_activation(h, ("batch", "seq", "ffn"))
+    if cfg.mlp_kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w3"].astype(x.dtype))
+        h = jax.nn.silu(h) * g
+    elif cfg.mlp_kind == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w3"].astype(x.dtype))
+        h = jax.nn.gelu(h, approximate=True) * g
+    elif cfg.mlp_kind == "relu2":  # nemotron-4 squared ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    y = jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype))
+    return shard_activation(y, ("batch", "res_seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based capacity dispatch, EP over "experts" axis)
+# ---------------------------------------------------------------------------
+def moe_spec(cfg: ModelConfig) -> Any:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p: dict[str, Any] = {
+        "router": ParamSpec((d, e), ("embed", None), cfg.param_dtype, "small"),
+        "w1": ParamSpec((e, d, f), ("experts", "embed", "expert_ffn"), cfg.param_dtype),
+        "w3": ParamSpec((e, d, f), ("experts", "embed", "expert_ffn"), cfg.param_dtype),
+        "w2": ParamSpec((e, f, d), ("experts", "expert_ffn", "embed"), cfg.param_dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.d_ff * cfg.num_shared_experts
+        p["shared"] = {
+            "w1": ParamSpec((d, fs), ("embed", "ffn"), cfg.param_dtype),
+            "w3": ParamSpec((d, fs), ("embed", "ffn"), cfg.param_dtype),
+            "w2": ParamSpec((fs, d), ("ffn", "embed"), cfg.param_dtype),
+        }
+    return p
+
+
+def moe_forward(
+    p: Any, x: jax.Array, cfg: ModelConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k routed experts with capacity dropping; returns (out, aux_loss).
+
+    Dispatch: flatten (B,S)->T tokens, sort the T*k assignments by expert,
+    rank-within-expert via the sorted segment offsets, scatter into an
+    (E, C, d) buffer, per-expert gated FFN as a batched einsum (EP shards
+    the E axis), gather back, combine with router weights.
+
+    With ``cfg.moe_groups > 1`` the dispatch runs independently per token
+    group (aligned with the DP sharding): routing, capacity, scatter and
+    combine never cross shard boundaries, so SPMD keeps the dispatch
+    buffers data-sharded instead of replicating + all-reducing them.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    if cfg.moe_groups > 1 and t % cfg.moe_groups == 0:
+        return _moe_forward_grouped(p, x, cfg)
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # (t, k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    mean_prob = probs.mean(axis=0)
+    aux = jnp.sum(density * mean_prob) * e * cfg.router_aux_loss
+
+    capacity = int(max(1, np.ceil(t * k / e * cfg.capacity_factor)))
+    flat_e = idx.reshape(-1)  # (t*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    # rank of each assignment within its expert
+    seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(t * k) - seg_start
+    keep = rank < capacity
+    tok = order // k  # source token of each sorted assignment
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    buf = buf.at[sorted_e, jnp.where(keep, rank, 0)].add(
+        jnp.where(keep[:, None], xf[tok], 0).astype(x.dtype)
+    )
+    buf = shard_activation(buf, ("experts", None, "embed"))
+    h1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(x.dtype))
+    h3 = jnp.einsum("ecd,edf->ecf", buf, p["w3"].astype(x.dtype))
+    h = jax.nn.silu(h1) * h3
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(x.dtype))
+    eo = shard_activation(eo, ("experts", None, "embed"))
+    # gather back: each kept assignment reads its expert/capacity slot
+    out_flat = jnp.where(keep[:, None], eo[sorted_e, jnp.where(keep, rank, 0)], 0)
+    gates_sorted = gate.reshape(-1)[order]
+    contrib = out_flat * gates_sorted[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[tok].add(contrib)
+    if cfg.num_shared_experts:
+        shared_cfg = cfg.replace(mlp_kind="swiglu")
+        y = y + mlp_forward(p["shared"], xf[None], shared_cfg)[0]
+    return y.reshape(b, s, d), aux
+
+
+def _moe_forward_grouped(p: Any, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """Shard-local MoE dispatch: one independent dispatch per token group."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    gct = cfg.moe_groups
+    t = b * s
+    tg = t // gct
+    xg = shard_activation(x.reshape(gct, tg, d), ("batch", None, "embed"))
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # (g, tg, k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+    density = jnp.mean(jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    mean_prob = probs.mean(axis=(0, 1))
+    aux = jnp.sum(density * mean_prob) * e * cfg.router_aux_loss
+
+    capacity = int(max(1, np.ceil(tg * k / e * cfg.capacity_factor)))
+
+    def dispatch(xf, gate_g, idx_g):
+        flat_e = idx_g.reshape(-1)
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        rank = jnp.arange(tg * k) - seg_start
+        keep = rank < capacity
+        tok = order // k
+        buf = jnp.zeros((e, capacity, d), x.dtype)
+        buf = buf.at[sorted_e, jnp.where(keep, rank, 0)].add(
+            jnp.where(keep[:, None], xf[tok], 0).astype(x.dtype)
+        )
+        return buf, (sorted_e, rank, keep, tok, gate_g.reshape(-1)[order])
+
+    def combine(eo, meta):
+        sorted_e, rank, keep, tok, gates_sorted = meta
+        out_flat = jnp.where(keep[:, None], eo[sorted_e, jnp.where(keep, rank, 0)], 0)
+        contrib = out_flat * gates_sorted[:, None].astype(x.dtype)
+        return jnp.zeros((tg, d), x.dtype).at[tok].add(contrib)
+
+    buf, meta = jax.vmap(dispatch)(xg, gate, idx)  # (g, E, C, d)
+    buf = shard_activation(buf, ("batch", "experts", None, "embed"))
+    h1 = jnp.einsum("gecd,edf->gecf", buf, p["w1"].astype(x.dtype))
+    h3 = jnp.einsum("gecd,edf->gecf", buf, p["w3"].astype(x.dtype))
+    h = jax.nn.silu(h1) * h3
+    eo = jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(x.dtype))
+    eo = shard_activation(eo, ("batch", "experts", None, "embed"))
+    y = jax.vmap(combine)(eo, meta)  # (g, tg, d)
+    y = shard_activation(y, ("batch", None, "embed"))
+    if cfg.num_shared_experts:
+        shared_cfg = cfg.replace(mlp_kind="swiglu")
+        y = y + mlp_forward(p["shared"], xg, shared_cfg)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD block
+# ---------------------------------------------------------------------------
+def ssd_spec(cfg: ModelConfig) -> Any:
+    """Mamba2 block params.
+
+    The reference mamba2 fuses [z, x, B, C, dt] into one in_proj and one
+    depthwise conv.  Here each part is its own tensor: depthwise conv is
+    per-channel so the split is mathematically identical, and it keeps
+    every slice boundary aligned with the model-axis sharding (the fused
+    layout forces SPMD reshards at the un-aligned split points — measured
+    in EXPERIMENTS.md SPerf, mamba2 cell iteration 2).
+    """
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    h, pdim, g, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_groups, cfg.ssm_state
+    gn = g * n
+    k = cfg.ssm_conv
+    return {
+        "z_proj": ParamSpec((d, di), ("embed", "ssm_inner"), cfg.param_dtype),
+        "x_proj": ParamSpec((d, di), ("embed", "ssm_inner"), cfg.param_dtype),
+        "b_proj": ParamSpec((d, gn), ("embed", None), cfg.param_dtype),
+        "c_proj": ParamSpec((d, gn), ("embed", None), cfg.param_dtype),
+        "dt_proj": ParamSpec((d, h), ("embed", "ssm_heads"), cfg.param_dtype),
+        "conv_xw": ParamSpec((k, di), ("conv", "ssm_inner"), cfg.param_dtype),
+        "conv_xb": ParamSpec((di,), ("ssm_inner",), cfg.param_dtype, "zeros"),
+        "conv_bw": ParamSpec((k, gn), ("conv", None), cfg.param_dtype),
+        "conv_bb": ParamSpec((gn,), (None,), cfg.param_dtype, "zeros"),
+        "conv_cw": ParamSpec((k, gn), ("conv", None), cfg.param_dtype),
+        "conv_cb": ParamSpec((gn,), (None,), cfg.param_dtype, "zeros"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), cfg.param_dtype, "zeros"),
+        "a_log": ParamSpec((h,), ("ssm_heads",), jnp.float32, "zeros"),
+        "d_skip": ParamSpec((h,), ("ssm_heads",), jnp.float32, "ones"),
+        "norm": ParamSpec((di,), ("ssm_inner",), cfg.param_dtype, "ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed"), cfg.param_dtype),
+    }
+
+
+@dataclasses.dataclass
+class SSMState:
+    conv: jax.Array  # (B, conv-1, conv_dim) rolling conv window
+    ssm: jax.Array  # (B, H, N, P) recurrent state
+
+
+jax.tree_util.register_dataclass(SSMState, data_fields=["conv", "ssm"], meta_fields=[])
+
+
+def _ssd_project(p: Any, x: jax.Array):
+    """Split projections (sharding-aligned; see ssd_spec)."""
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["z_proj"].astype(dt_))
+    xp = jnp.einsum("bsd,de->bse", x, p["x_proj"].astype(dt_))
+    bp = jnp.einsum("bsd,de->bse", x, p["b_proj"].astype(dt_))
+    cp = jnp.einsum("bsd,de->bse", x, p["c_proj"].astype(dt_))
+    dt = jnp.einsum("bsd,de->bse", x, p["dt_proj"].astype(dt_))
+    return z, xp, bp, cp, dt
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array, k: int) -> jax.Array:
+    """Depthwise causal conv along time for one channel group."""
+    s = seq.shape[1]
+    padded = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(padded[:, i : i + s, :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out + b.astype(seq.dtype))
+
+
+def ssd_block_forward(
+    p: Any,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    state: SSMState | None = None,
+) -> tuple[jax.Array, SSMState | None]:
+    """Full-sequence SSD block (train/prefill).  If ``state`` is given it is
+    *replaced* by the end-of-sequence state (prefill -> decode handoff)."""
+    b, s, d = x.shape
+    di, g, n, h, pdim = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    k = cfg.ssm_conv
+    z, xp, bp, cp, dt = _ssd_project(p, x)
+    xc = _causal_conv(xp, p["conv_xw"].astype(x.dtype), p["conv_xb"], k)
+    bc = _causal_conv(bp, p["conv_bw"].astype(x.dtype), p["conv_bb"], k)
+    cc = _causal_conv(cp, p["conv_cw"].astype(x.dtype), p["conv_cb"], k)
+    xs = xc.reshape(b, s, h, pdim)
+    xs = shard_activation(xs, ("batch", "seq", "ssm_heads", None))
+    b_mat = bc.reshape(b, s, g, n)
+    c_mat = cc.reshape(b, s, g, n)
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"])
+    y, h_final = ops.ssd_scan(xs, dt_s, a, b_mat, c_mat, p["d_skip"], impl=cfg.attn_impl,
+                              chunk=min(cfg.ssm_chunk, s))
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    new_state = None
+    if state is not None:
+        # rolling window = last (conv-1) pre-activation conv inputs
+        pad = k - 1
+        tail = jnp.concatenate([xp, bp, cp], axis=-1)
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))[:, s:, :]
+        new_state = SSMState(conv=tail.astype(x.dtype), ssm=h_final)
+    return shard_activation(out, ("batch", "res_seq", "embed")), new_state
+
+
+def ssd_block_decode(
+    p: Any,
+    x: jax.Array,  # (B, 1, d)
+    cfg: ModelConfig,
+    state: SSMState,
+) -> tuple[jax.Array, SSMState]:
+    """Single-token recurrent step: O(1) in sequence length."""
+    b = x.shape[0]
+    di, g, n, h, pdim = cfg.ssm_d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    k = cfg.ssm_conv
+    gn = g * n
+    z, xp, bp, cp, dt = _ssd_project(p, x)
+    xbc = jnp.concatenate([xp, bp, cp], axis=-1)
+    window = jnp.concatenate([state.conv, xbc], axis=1)  # (B, conv, conv_dim)
+    conv_w = jnp.concatenate(
+        [p["conv_xw"], p["conv_bw"], p["conv_cw"]], axis=-1
+    ).astype(x.dtype)
+    conv_b = jnp.concatenate([p["conv_xb"], p["conv_bb"], p["conv_cb"]]).astype(x.dtype)
+    conv = jnp.einsum("bkc,kc->bc", window, conv_w)[:, None, :] + conv_b
+    conv = jax.nn.silu(conv)
+    xs = conv[..., :di].reshape(b, h, pdim)
+    b_vec = conv[..., di : di + gn].reshape(b, g, n)
+    c_vec = conv[..., di + gn :].reshape(b, g, n)
+    rep = h // g
+    b_h = jnp.repeat(b_vec, rep, axis=1)  # (B, H, N)
+    c_h = jnp.repeat(c_vec, rep, axis=1)
+    dt_s = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt_s * a[None, :])  # (B, H)
+    h_new = decay[..., None, None] * state.ssm + (dt_s[..., None] * b_h)[..., :, None] * xs.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", c_h.astype(jnp.float32), h_new)
+    y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, SSMState(conv=window[:, 1:, :], ssm=h_new)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_spec(cfg: ModelConfig) -> Any:
+    p = {"tok": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"), cfg.param_dtype,
+                          "normal", 0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"), cfg.param_dtype)
+    return p
+
+
+def embed_tokens(p: Any, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * np.sqrt(cfg.d_model)
+    return shard_activation(x, ("batch", "res_seq", "embed"))
+
+
+def unembed(p: Any, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tok"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["unembed"].astype(x.dtype))
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return shard_activation(logits, ("batch", "seq", "vocab"))

@@ -1,0 +1,44 @@
+"""Family dispatch + parameter accounting for every model family."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.models.spec import ParamSpec
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    if cfg.family == "encdec":
+        return encdec.abstract_params(cfg)
+    return transformer.abstract_params(cfg)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Activated params per token (MoE: only top-k of the routed experts)."""
+    total = count_params(cfg)
+    if cfg.family != "moe" or not cfg.num_experts:
+        return total
+    tree = abstract_params(cfg)
+    expert_leaves = []
+
+    def visit(path, leaf):
+        if isinstance(leaf, ParamSpec) and "experts" in leaf.axes:
+            expert_leaves.append(int(np.prod(leaf.shape)))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        visit, tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    routed = sum(expert_leaves)
+    active_fraction = cfg.experts_per_token / cfg.num_experts
+    return int(total - routed * (1.0 - active_fraction))

@@ -1,0 +1,227 @@
+"""ParamSpec machinery: one source of truth for shapes, init and sharding.
+
+``abstract_params(cfg)`` (per family) returns a pytree of :class:`ParamSpec`
+leaves carrying shape, dtype, *logical axes* and an init rule.  From that
+single tree we derive
+  * randomly initialized parameters (``materialize``),
+  * ``jax.ShapeDtypeStruct`` stand-ins for dry-run lowering (``abstract``),
+  * physical ``PartitionSpec``s through a logical->mesh-axis rule table
+    (``partition_specs``), MaxText-style.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis names, len == len(shape)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones | scaled | small
+    scale: float | None = None  # stddev override
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} rank != shape {self.shape}")
+
+
+def _is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def materialize(key: jax.Array, tree: Any, dtype_override: Any | None = None) -> Any:
+    """Random-init every ParamSpec leaf (deterministic per-leaf folding)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=_is_spec)
+    out = []
+    for i, spec in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        dtype = dtype_override or spec.dtype
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dtype)
+        elif spec.init == "small":
+            arr = jax.random.normal(k, spec.shape, jnp.float32) * 0.002
+            arr = arr.astype(dtype)
+        else:
+            fan_in = spec.shape[0] if spec.shape else 1
+            std = spec.scale if spec.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract(tree: Any, shardings: Any | None = None) -> Any:
+    """ShapeDtypeStruct tree for lowering (no allocation)."""
+    if shardings is None:
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree, is_leaf=_is_spec
+        )
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree,
+        shardings,
+        is_leaf=_is_spec,
+    )
+
+
+# Default logical->physical rules for the production (pod, data, model) mesh.
+# Order matters: first matching mesh axis set wins; axes absent from the
+# mesh map to None (replicated).
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "q_lora": None,
+    "kv_lora": None,
+    "ffn": "model",
+    "experts": "model",
+    "expert_ffn": None,
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,
+    "frontend": None,
+    "stack": None,
+    # cache sequence dim: None normally; "model" for sequence-sharded decode
+    "kv_seq": None,
+    # residual-stream sequence dim: None normally; "model" under Megatron-
+    # style sequence parallelism (seq_parallel_rules)
+    "res_seq": None,
+}
+
+
+def seq_shard_rules() -> dict:
+    """Rules variant for sequence-sharded decode (see serve.cache_pspecs)."""
+    rules = dict(DEFAULT_RULES)
+    rules["kv_seq"] = "model"
+    return rules
+
+
+def seq_parallel_rules() -> dict:
+    """Megatron-style sequence parallelism for training/prefill: residual
+    activations shard their *sequence* dim over the model axis, so the
+    per-layer TP reductions lower to reduce-scatter + all-gather pairs
+    (half the bytes of an all-reduce, and the norm/elementwise work runs
+    sequence-sharded)."""
+    rules = dict(DEFAULT_RULES)
+    rules["res_seq"] = "model"
+    return rules
+
+
+def _physical(axis: str | None, rules: dict, mesh: jax.sharding.Mesh) -> Any:
+    if axis is None:
+        return None
+    phys = rules.get(axis, None)
+    if phys is None:
+        return None
+    if isinstance(phys, tuple):
+        present = tuple(p for p in phys if p in mesh.axis_names)
+        return present if present else None
+    return phys if phys in mesh.axis_names else None
+
+
+def logical_to_pspec(
+    axes: tuple[str | None, ...],
+    mesh: jax.sharding.Mesh,
+    rules: dict | None = None,
+    *,
+    shape: tuple[int, ...] | None = None,
+) -> P:
+    """Logical axes -> PartitionSpec, dropping non-divisible shardings."""
+    rules = rules or DEFAULT_RULES
+    used: set[str] = set()
+    parts = []
+    for i, ax in enumerate(axes):
+        phys = _physical(ax, rules, mesh)
+        if phys is None:
+            parts.append(None)
+            continue
+        names = phys if isinstance(phys, tuple) else (phys,)
+        names = tuple(n for n in names if n not in used)
+        if not names:
+            parts.append(None)
+            continue
+        if shape is not None:
+            total = int(np.prod([mesh.shape[n] for n in names]))
+            if shape[i] % total != 0:
+                # non-divisible: drop mesh axes greedily until divisible
+                while names and shape[i] % int(np.prod([mesh.shape[n] for n in names])):
+                    names = names[:-1]
+                if not names:
+                    parts.append(None)
+                    continue
+        used.update(names)
+        parts.append(names if len(names) > 1 else names[0])
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def partition_specs(tree: Any, mesh: jax.sharding.Mesh, rules: dict | None = None) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: logical_to_pspec(s.axes, mesh, rules, shape=s.shape),
+        tree,
+        is_leaf=_is_spec,
+    )
+
+
+def named_shardings(tree: Any, mesh: jax.sharding.Mesh, rules: dict | None = None) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(
+            mesh, logical_to_pspec(s.axes, mesh, rules, shape=s.shape)
+        ),
+        tree,
+        is_leaf=_is_spec,
+    )
+
+
+_ACTIVATION_CTX: list[tuple[jax.sharding.Mesh, dict | None]] = []
+
+
+class activation_sharding:
+    """Context manager installing the mesh used by ``shard_activation``.
+
+    Model code calls ``shard_activation(x, logical_axes)`` freely; outside
+    this context it is the identity, inside it lowers to
+    ``with_sharding_constraint`` with the rule-mapped NamedSharding.
+    """
+
+    def __init__(self, mesh: jax.sharding.Mesh, rules: dict | None = None) -> None:
+        self.mesh = mesh
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVATION_CTX.append((self.mesh, self.rules))
+        return self
+
+    def __exit__(self, *exc):
+        _ACTIVATION_CTX.pop()
+        return False
+
+
+def shard_activation(x: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+    """with_sharding_constraint through the logical rule table (no-op off-mesh).
+
+    If no axis maps to a mesh axis the constraint is skipped entirely —
+    pinning a tensor fully-replicated would override XLA's own sharding
+    choice and force resharding collectives.
+    """
+    if not _ACTIVATION_CTX:
+        return x
+    mesh, rules = _ACTIVATION_CTX[-1]
+    spec = logical_to_pspec(axes, mesh, rules, shape=tuple(x.shape))
+    if not any(p is not None for p in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, jax.sharding.NamedSharding(mesh, spec))

@@ -1,0 +1,609 @@
+"""Decoder-only LM covering dense / MoE / MLA / SSM / hybrid families.
+
+Structure (all families):
+  embed -> [layer stacks] -> final norm -> unembed
+
+Layer stacks are *scanned* (jax.lax.scan over stacked params) with
+selectable remat policy, which keeps HLO size O(1) in depth — essential
+for the 96-layer dry-runs.  Families map to stacks as:
+
+  dense       : one uniform stack of (attn + mlp) layers
+  moe         : optional ``first_k_dense`` dense stack, then (attn + moe)
+  mla (attn)  : dense/moe stacks with MLA attention
+  ssm         : one stack of mamba2 SSD blocks (attention-free)
+  hybrid      : interleaved [global, swa-segment] x G — ``num_global_layers``
+                full-attention layers are unrolled between scanned
+                sliding-window segments; every layer runs attention and an
+                SSD head in parallel (Hymba)
+
+Caches are pytrees of stacked arrays so decode also scans; sliding-window
+layers use ring caches (O(window) memory), global layers full caches, SSM
+layers O(1) recurrent state — this is what makes ``long_500k`` feasible
+for the hybrid/ssm archs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+def _attn_layer_spec(cfg: ModelConfig, mlp: str, d_ff: int | None = None) -> dict:
+    spec: dict[str, Any] = {"norm1": L.norm_spec(cfg), "norm2": L.norm_spec(cfg)}
+    if cfg.attn_kind == "mla":
+        spec["attn"] = L.mla_spec(cfg)
+    else:
+        spec["attn"] = L.attention_spec(cfg)
+    if mlp == "moe":
+        spec["mlp"] = L.moe_spec(cfg)
+    else:
+        spec["mlp"] = L.mlp_spec(cfg, d_ff)
+    return spec
+
+
+def _ssm_layer_spec(cfg: ModelConfig) -> dict:
+    return {"norm1": L.norm_spec(cfg), "ssd": L.ssd_spec(cfg)}
+
+
+def _hybrid_layer_spec(cfg: ModelConfig) -> dict:
+    return {
+        "norm1": L.norm_spec(cfg),
+        "norm2": L.norm_spec(cfg),
+        "attn": L.attention_spec(cfg),
+        "ssd": L.ssd_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def _stack(tree: Any, n: int) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, s.init, s.scale),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _hybrid_split(cfg: ModelConfig) -> tuple[int, int]:
+    n_glob = cfg.num_global_layers
+    return n_glob, cfg.num_layers - n_glob
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    p: dict[str, Any] = {"embed": L.embed_spec(cfg), "final_norm": L.norm_spec(cfg)}
+    if cfg.family == "ssm":
+        p["layers"] = _stack(_ssm_layer_spec(cfg), cfg.num_layers)
+    elif cfg.family == "hybrid":
+        n_glob, n_swa = _hybrid_split(cfg)
+        if n_glob:
+            p["global_layers"] = _stack(_hybrid_layer_spec(cfg), n_glob)
+        p["layers"] = _stack(_hybrid_layer_spec(cfg), n_swa)
+    elif cfg.family == "moe":
+        if cfg.first_k_dense:
+            dense_spec = _attn_layer_spec(cfg, "dense", cfg.dense_d_ff or cfg.d_ff)
+            p["dense_layers"] = _stack(dense_spec, cfg.first_k_dense)
+        p["layers"] = _stack(
+            _attn_layer_spec(cfg, "moe"), cfg.num_layers - cfg.first_k_dense
+        )
+    else:  # dense (incl. vlm backbone)
+        p["layers"] = _stack(_attn_layer_spec(cfg, "dense"), cfg.num_layers)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+# ---------------------------------------------------------------------------
+def _attn_mlp_layer(
+    lp: Any,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    moe: bool,
+    window: int | None,
+    kv_cache=None,
+    cache_pos=None,
+):
+    h = L.apply_norm(lp["norm1"], x, cfg)
+    if cfg.attn_kind == "mla":
+        attn_out, new_cache = L.mla_forward(
+            lp["attn"], h, cfg, positions, kv_cache=kv_cache, cache_pos=cache_pos
+        )
+    else:
+        attn_out, new_cache = L.attention_forward(
+            lp["attn"],
+            h,
+            cfg,
+            positions,
+            window=window,
+            kv_cache=kv_cache,
+            cache_pos=cache_pos,
+        )
+    x = x + attn_out
+    h2 = L.apply_norm(lp["norm2"], x, cfg)
+    if moe:
+        mlp_out, aux = L.moe_forward(lp["mlp"], h2, cfg)
+    else:
+        mlp_out, aux = L.mlp_forward(lp["mlp"], h2, cfg), jnp.zeros((), jnp.float32)
+    return x + mlp_out, aux, new_cache
+
+
+def _ssm_layer(lp: Any, x: jax.Array, cfg: ModelConfig, *, state=None, decode=False):
+    h = L.apply_norm(lp["norm1"], x, cfg)
+    if decode:
+        out, new_state = L.ssd_block_decode(lp["ssd"], h, cfg, state)
+    else:
+        out, new_state = L.ssd_block_forward(lp["ssd"], h, cfg, state=state)
+    return x + out, new_state
+
+
+def _hybrid_layer(
+    lp: Any,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    window: int | None,
+    kv_cache=None,
+    cache_pos=None,
+    ssm_state=None,
+    decode=False,
+):
+    """Hymba: attention heads and SSD heads in parallel on the same input."""
+    h = L.apply_norm(lp["norm1"], x, cfg)
+    attn_out, new_kv = L.attention_forward(
+        lp["attn"], h, cfg, positions, window=window, kv_cache=kv_cache, cache_pos=cache_pos
+    )
+    if decode:
+        ssd_out, new_state = L.ssd_block_decode(lp["ssd"], h, cfg, ssm_state)
+    else:
+        ssd_out, new_state = L.ssd_block_forward(lp["ssd"], h, cfg, state=ssm_state)
+    x = x + 0.5 * (attn_out + ssd_out)
+    x = x + L.mlp_forward(lp["mlp"], L.apply_norm(lp["norm2"], x, cfg), cfg)
+    return x, new_kv, new_state
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / scoring): full sequence, no cache
+# ---------------------------------------------------------------------------
+def forward(
+    params: Any,
+    tokens: jax.Array,  # (B, S) int32
+    cfg: ModelConfig,
+    *,
+    prefix_embeds: jax.Array | None = None,  # (B, P, d) modality stub
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B, S', vocab), aux_loss). S' = P + S with prefix."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            x = carry
+            x, _ = _ssm_layer(lp, x, cfg)
+            return x, None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward_nocache(params, x, cfg, positions)
+    else:
+        moe = cfg.family == "moe"
+        if moe and cfg.first_k_dense:
+            def dense_body(carry, lp):
+                x = carry
+                x, _, _ = _attn_mlp_layer(lp, x, cfg, positions, moe=False, window=cfg.window)
+                return x, None
+
+            x, _ = jax.lax.scan(_maybe_remat(dense_body, cfg), x, params["dense_layers"])
+
+        def body(carry, lp):
+            x, aux = carry
+            x, a, _ = _attn_mlp_layer(lp, x, cfg, positions, moe=moe, window=cfg.window)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(body, cfg), (x, aux_total), params["layers"]
+        )
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, aux_total
+
+
+def _hybrid_forward_nocache(params, x, cfg, positions):
+    """Interleave unrolled global layers with scanned SWA segments."""
+    n_glob, n_swa = _hybrid_split(cfg)
+
+    def swa_body(carry, lp):
+        x = carry
+        x, _, _ = _hybrid_layer(lp, x, cfg, positions, window=cfg.window)
+        return x, None
+
+    swa_body = _maybe_remat(swa_body, cfg)
+    seg_bounds = _segments(n_swa, max(n_glob, 1))
+    for gi, (lo, hi) in enumerate(seg_bounds):
+        if n_glob and gi < n_glob:
+            gp = jax.tree_util.tree_map(lambda a: a[gi], params["global_layers"])
+            x, _, _ = _hybrid_layer(gp, x, cfg, positions, window=None)
+        if hi > lo:
+            seg = jax.tree_util.tree_map(lambda a: a[lo:hi], params["layers"])
+            x, _ = jax.lax.scan(swa_body, x, seg)
+    return x
+
+
+def _segments(n: int, g: int) -> list[tuple[int, int]]:
+    """Split n layers into g contiguous segments (lengths differ by <=1)."""
+    bounds = np.linspace(0, n, g + 1).astype(int)
+    return [(int(bounds[i]), int(bounds[i + 1])) for i in range(g)]
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Any:
+    """Abstract-friendly cache pytree for decode. ``max_len`` is the KV
+    capacity of *global* attention layers; SWA layers allocate only
+    ``cfg.window``; SSM layers allocate O(1) state."""
+    dtype = dtype or cfg.compute_dtype
+    hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
+
+    def kv_cache(n_layers: int, length: int) -> dict:
+        return {
+            "k": jnp.zeros((n_layers, batch, kv, length, hd), dtype),
+            "v": jnp.zeros((n_layers, batch, kv, length, hd), dtype),
+        }
+
+    def ssm_state(n_layers: int) -> dict:
+        conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return {
+            "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+            "ssm": jnp.zeros(
+                (n_layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim),
+                jnp.float32,
+            ),
+        }
+
+    if cfg.family == "ssm":
+        return {"ssm": ssm_state(cfg.num_layers)}
+    if cfg.family == "hybrid":
+        n_glob, n_swa = _hybrid_split(cfg)
+        cache: dict[str, Any] = {
+            "swa": kv_cache(n_swa, min(cfg.window or max_len, max_len)),
+            "swa_ssm": ssm_state(n_swa),
+        }
+        cache["slotpos"] = jnp.full(
+            (min(cfg.window or max_len, max_len),), -1, jnp.int32
+        )
+        if n_glob:
+            cache["global"] = kv_cache(n_glob, max_len)
+            cache["global_ssm"] = ssm_state(n_glob)
+        return cache
+    if cfg.attn_kind == "mla":
+        def mla_cache(n_layers: int) -> dict:
+            return {
+                "ckv": jnp.zeros((n_layers, batch, max_len, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((n_layers, batch, max_len, cfg.qk_rope_dim), dtype),
+            }
+
+        cache = {"layers": mla_cache(cfg.num_layers - cfg.first_k_dense)}
+        if cfg.first_k_dense:
+            cache["dense_layers"] = mla_cache(cfg.first_k_dense)
+        return cache
+    cache = {"layers": kv_cache(cfg.num_layers - cfg.first_k_dense, max_len)}
+    if cfg.first_k_dense:
+        cache["dense_layers"] = kv_cache(cfg.first_k_dense, max_len)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full prompt -> (logits, populated cache)
+# ---------------------------------------------------------------------------
+def prefill(
+    params: Any,
+    tokens: jax.Array,  # (B, S)
+    cfg: ModelConfig,
+    cache: Any,
+    *,
+    prefix_embeds: jax.Array | None = None,
+) -> tuple[jax.Array, Any]:
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    zero = jnp.zeros((), jnp.int32)
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            x = carry
+            lp, st = xs
+            x, new_state = _ssm_layer(lp, x, cfg, state=L.SSMState(**st))
+            return x, {"conv": new_state.conv, "ssm": new_state.ssm}
+
+        x, new_ssm = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+        new_cache = {"ssm": new_ssm}
+    elif cfg.family == "hybrid":
+        x, new_cache = _hybrid_prefill(params, x, cfg, positions, cache)
+    else:
+        moe = cfg.family == "moe"
+
+        def mk_body(is_moe):
+            def body(carry, xs):
+                x = carry
+                lp, c = xs
+                kv = _cache_tuple(c, cfg)
+                x, _, new_kv = _attn_mlp_layer(
+                    lp, x, cfg, positions, moe=is_moe, window=cfg.window,
+                    kv_cache=kv, cache_pos=zero,
+                )
+                return x, _cache_dict(new_kv, cfg)
+
+            return body
+
+        new_cache = {}
+        if moe and cfg.first_k_dense:
+            x, nc = jax.lax.scan(
+                mk_body(False), x, (params["dense_layers"], cache["dense_layers"])
+            )
+            new_cache["dense_layers"] = nc
+        x, nc = jax.lax.scan(mk_body(moe), x, (params["layers"], cache["layers"]))
+        new_cache["layers"] = nc
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)
+    return logits, new_cache
+
+
+def _cache_tuple(c: dict, cfg: ModelConfig):
+    if cfg.attn_kind == "mla":
+        return (c["ckv"], c["kr"])
+    return (c["k"], c["v"])
+
+
+def _cache_dict(kv, cfg: ModelConfig) -> dict:
+    if cfg.attn_kind == "mla":
+        return {"ckv": kv[0], "kr": kv[1]}
+    return {"k": kv[0], "v": kv[1]}
+
+
+def _hybrid_prefill(params, x, cfg, positions, cache):
+    n_glob, n_swa = _hybrid_split(cfg)
+    b, s, _ = x.shape
+    w = cache["swa"]["k"].shape[3]
+    zero = jnp.zeros((), jnp.int32)
+    new_cache: dict[str, Any] = {
+        "swa": {"k": cache["swa"]["k"], "v": cache["swa"]["v"]},
+        "swa_ssm": dict(cache["swa_ssm"]),
+    }
+    if n_glob:
+        new_cache["global"] = {"k": cache["global"]["k"], "v": cache["global"]["v"]}
+        new_cache["global_ssm"] = dict(cache["global_ssm"])
+
+    def run_layer(lp, x, gi_kv, gi_ssm, window, full_cache):
+        # full-sequence attention; cache holds either full seq or last-w ring
+        kv = None if not full_cache else gi_kv
+        x, new_kv, new_state = _hybrid_layer(
+            lp, x, cfg, positions, window=window,
+            kv_cache=kv, cache_pos=zero if full_cache else None,
+            ssm_state=L.SSMState(**gi_ssm),
+        )
+        return x, new_kv, new_state
+
+    seg_bounds = _segments(n_swa, max(n_glob, 1))
+    swa_k, swa_v = cache["swa"]["k"], cache["swa"]["v"]
+    swa_conv, swa_ssm = cache["swa_ssm"]["conv"], cache["swa_ssm"]["ssm"]
+    for gi, (lo, hi) in enumerate(seg_bounds):
+        if n_glob and gi < n_glob:
+            gp = jax.tree_util.tree_map(lambda a: a[gi], params["global_layers"])
+            gkv = (cache["global"]["k"][gi], cache["global"]["v"][gi])
+            gssm = {
+                "conv": cache["global_ssm"]["conv"][gi],
+                "ssm": cache["global_ssm"]["ssm"][gi],
+            }
+            x, new_kv, new_state = run_layer(gp, x, gkv, gssm, None, True)
+            new_cache["global"]["k"] = new_cache["global"]["k"].at[gi].set(new_kv[0])
+            new_cache["global"]["v"] = new_cache["global"]["v"].at[gi].set(new_kv[1])
+            new_cache["global_ssm"]["conv"] = (
+                new_cache["global_ssm"]["conv"].at[gi].set(new_state.conv)
+            )
+            new_cache["global_ssm"]["ssm"] = (
+                new_cache["global_ssm"]["ssm"].at[gi].set(new_state.ssm)
+            )
+        take = min(w, s)
+        ring_slots = jnp.mod(jnp.arange(s - take, s), w)
+        kv_hd = (b, cfg.num_kv_heads, s, cfg.resolved_head_dim)
+        for li in range(lo, hi):
+            lp = jax.tree_util.tree_map(lambda a: a[li], params["layers"])
+            gssm = {"conv": swa_conv[li], "ssm": swa_ssm[li]}
+            # temp full-length cache so prefill also yields the k/v stream;
+            # the trailing window lands in the ring cache for decode
+            tmp = (jnp.zeros(kv_hd, swa_k.dtype), jnp.zeros(kv_hd, swa_v.dtype))
+            x, new_kv, new_state = run_layer(lp, x, tmp, gssm, cfg.window, True)
+            swa_conv = swa_conv.at[li].set(new_state.conv)
+            swa_ssm = swa_ssm.at[li].set(new_state.ssm)
+            # mixed advanced indexing puts the slot axis first
+            swa_k = swa_k.at[li, :, :, ring_slots, :].set(
+                jnp.moveaxis(new_kv[0][:, :, s - take :, :], 2, 0)
+            )
+            swa_v = swa_v.at[li, :, :, ring_slots, :].set(
+                jnp.moveaxis(new_kv[1][:, :, s - take :, :], 2, 0)
+            )
+    take = min(w, s)
+    new_cache["slotpos"] = (
+        jnp.full((w,), -1, jnp.int32)
+        .at[jnp.arange(take)]
+        .set(jnp.arange(s - take, s, dtype=jnp.int32))
+    )
+    new_cache["swa"]["k"] = swa_k
+    new_cache["swa"]["v"] = swa_v
+    new_cache["swa_ssm"] = {"conv": swa_conv, "ssm": swa_ssm}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token against the cache
+# ---------------------------------------------------------------------------
+def decode_step(
+    params: Any,
+    tokens: jax.Array,  # (B, 1)
+    cfg: ModelConfig,
+    cache: Any,
+    pos: jax.Array,  # scalar int32: index of the new token
+) -> tuple[jax.Array, Any]:
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            x = carry
+            lp, st = xs
+            x, new_state = _ssm_layer(lp, x, cfg, state=L.SSMState(**st), decode=True)
+            return x, {"conv": new_state.conv, "ssm": new_state.ssm}
+
+        x, new_ssm = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+        new_cache = {"ssm": new_ssm}
+    elif cfg.family == "hybrid":
+        x, new_cache = _hybrid_decode(params, x, cfg, positions, cache, pos)
+    else:
+        moe = cfg.family == "moe"
+
+        def mk_body(is_moe):
+            def body(carry, xs):
+                x = carry
+                lp, c = xs
+                x, _, new_kv = _attn_mlp_layer(
+                    lp, x, cfg, positions, moe=is_moe, window=cfg.window,
+                    kv_cache=_cache_tuple(c, cfg), cache_pos=pos,
+                )
+                return x, _cache_dict(new_kv, cfg)
+
+            return body
+
+        new_cache = {}
+        if moe and cfg.first_k_dense:
+            x, nc = jax.lax.scan(
+                mk_body(False), x, (params["dense_layers"], cache["dense_layers"])
+            )
+            new_cache["dense_layers"] = nc
+        x, nc = jax.lax.scan(mk_body(moe), x, (params["layers"], cache["layers"]))
+        new_cache["layers"] = nc
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, new_cache
+
+
+def _ring_attention_decode(lp, h, cfg, positions, ring_k, ring_v, slotpos, pos):
+    """SWA decode against a ring cache: O(window) memory and compute."""
+    b = h.shape[0]
+    w = ring_k.shape[2]
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"].astype(h.dtype))
+    if cfg.qk_norm:
+        q = L._qk_normalize(q, lp["attn"]["q_norm"])
+        k = L._qk_normalize(k, lp["attn"]["k_norm"])
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    slot = jnp.mod(pos, w)
+    ring_k = jax.lax.dynamic_update_slice(
+        ring_k, jnp.moveaxis(k, 1, 2).astype(ring_k.dtype), (0, 0, slot, 0)
+    )
+    ring_v = jax.lax.dynamic_update_slice(
+        ring_v, jnp.moveaxis(v, 1, 2).astype(ring_v.dtype), (0, 0, slot, 0)
+    )
+    new_slotpos = slotpos.at[slot].set(pos.astype(jnp.int32))
+    qh = jnp.moveaxis(q, 1, 2)
+    valid = (new_slotpos >= 0) & (pos - new_slotpos < (cfg.window or w)) & (new_slotpos <= pos)
+    mask = valid[None, :]
+    out = L._masked_attention(qh, ring_k, ring_v, mask, cfg, hd)
+    out = jnp.moveaxis(out, 1, 2)
+    y = jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"].astype(h.dtype))
+    return y, ring_k, ring_v, new_slotpos
+
+
+def _hybrid_decode(params, x, cfg, positions, cache, pos):
+    n_glob, n_swa = _hybrid_split(cfg)
+    new_cache = jax.tree_util.tree_map(lambda a: a, cache)
+    slotpos = cache["slotpos"]
+    new_slotpos = slotpos
+
+    def swa_body(carry, xs):
+        x, sp = carry
+        lp, c = xs
+        h = L.apply_norm(lp["norm1"], x, cfg)
+        attn_out, rk, rv, nsp = _ring_attention_decode(
+            lp, h, cfg, positions, c["k"], c["v"], sp, pos
+        )
+        ssd_out, new_state = L.ssd_block_decode(
+            lp["ssd"], h, cfg, L.SSMState(conv=c["conv"], ssm=c["ssm"])
+        )
+        x = x + 0.5 * (attn_out + ssd_out)
+        x = x + L.mlp_forward(lp["mlp"], L.apply_norm(lp["norm2"], x, cfg), cfg)
+        return (x, nsp), {"k": rk, "v": rv, "conv": new_state.conv, "ssm": new_state.ssm}
+
+    seg_bounds = _segments(n_swa, max(n_glob, 1))
+    swa_cache = {
+        "k": cache["swa"]["k"],
+        "v": cache["swa"]["v"],
+        "conv": cache["swa_ssm"]["conv"],
+        "ssm": cache["swa_ssm"]["ssm"],
+    }
+    out_swa = jax.tree_util.tree_map(lambda a: a, swa_cache)
+    for gi, (lo, hi) in enumerate(seg_bounds):
+        if n_glob and gi < n_glob:
+            gp = jax.tree_util.tree_map(lambda a: a[gi], params["global_layers"])
+            gssm = L.SSMState(
+                conv=cache["global_ssm"]["conv"][gi], ssm=cache["global_ssm"]["ssm"][gi]
+            )
+            x, new_kv, new_state = _hybrid_layer(
+                gp, x, cfg, positions, window=None,
+                kv_cache=(cache["global"]["k"][gi], cache["global"]["v"][gi]),
+                cache_pos=pos, ssm_state=gssm, decode=True,
+            )
+            new_cache["global"]["k"] = new_cache["global"]["k"].at[gi].set(new_kv[0])
+            new_cache["global"]["v"] = new_cache["global"]["v"].at[gi].set(new_kv[1])
+            new_cache["global_ssm"]["conv"] = (
+                new_cache["global_ssm"]["conv"].at[gi].set(new_state.conv)
+            )
+            new_cache["global_ssm"]["ssm"] = (
+                new_cache["global_ssm"]["ssm"].at[gi].set(new_state.ssm)
+            )
+        if hi > lo:
+            seg_cache = jax.tree_util.tree_map(lambda a: a[lo:hi], swa_cache)
+            seg_params = jax.tree_util.tree_map(lambda a: a[lo:hi], params["layers"])
+            (x, new_slotpos), seg_out = jax.lax.scan(
+                swa_body, (x, new_slotpos), (seg_params, seg_cache)
+            )
+            for key in out_swa:
+                out_swa[key] = jax.lax.dynamic_update_slice_in_dim(
+                    out_swa[key], seg_out[key], lo, axis=0
+                )
+    new_cache["swa"] = {"k": out_swa["k"], "v": out_swa["v"]}
+    new_cache["swa_ssm"] = {"conv": out_swa["conv"], "ssm": out_swa["ssm"]}
+    new_cache["slotpos"] = new_slotpos
+    return x, new_cache

@@ -1,0 +1,232 @@
+"""The paper's example application: segmentation + feature computation.
+
+Mirrors Fig. 1: the segmentation stage turns an RGB tile into a nucleus
+mask + labels; the feature stage computes per-nucleus texture/shape
+features.  Exposed in two forms:
+
+  * plain functions (``segment_tile``, ``compute_features``) — the
+    "non-RT" baseline of Fig. 11;
+  * region-template stages (``SegmentationStage``, ``FeatureStage``) —
+    the RT-based version whose fine-grain operations flow through the
+    WRM with per-op speedup estimates (PATS-able), and whose data moves
+    through global storage.
+
+Every compute hot spot dispatches through repro.kernels.ops so the same
+pipeline runs the Pallas kernels on TPU and the jnp references on CPU.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.wsi import PAPER_OP_COSTS, PAPER_OP_SPEEDUPS, WSIConfig
+from repro.core import BoundingBox, Intent, RegionKind
+from repro.kernels import ops, ref
+from repro.runtime.dag import Stage, Task, TaskCost
+
+
+# ---------------------------------------------------------------------------
+# Plain (non-RT) pipeline functions
+# ---------------------------------------------------------------------------
+def segment_tile(rgb: jax.Array, cfg: WSIConfig, impl: str = "auto") -> dict:
+    """RGB (3, H, W) -> {"mask", "labels", "hematoxylin"}."""
+    minv = jnp.asarray(ref.stain_inverse())
+    stains = ops.color_deconv(rgb, minv, impl=impl)
+    hema = stains[0]  # hematoxylin density (nuclei stain)
+    # normalize to [0,1] for thresholding
+    h_lo = jnp.percentile(hema, 5.0)
+    h_hi = jnp.percentile(hema, 99.5)
+    hema_n = jnp.clip((hema - h_lo) / jnp.maximum(h_hi - h_lo, 1e-6), 0.0, 1.0)
+    raw = (hema_n > cfg.seg_threshold).astype(jnp.float32)
+    filled = ops.fill_holes(raw, impl=impl)
+    # morphological reconstruction opening: erode-ish marker then rebuild
+    marker = jnp.minimum(filled, jnp.roll(filled, 1, -1) * jnp.roll(filled, -1, -1)
+                         * jnp.roll(filled, 1, -2) * jnp.roll(filled, -1, -2))
+    opened = ops.morph_recon(marker, filled, impl=impl)
+    mask = (opened > 0.5).astype(jnp.int32)
+    labels = ops.connected_components(mask, impl=impl)
+    return {"mask": mask, "labels": labels, "hematoxylin": hema_n}
+
+
+def extract_object_rois(
+    labels: np.ndarray, intensity: np.ndarray, cfg: WSIConfig
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-object fixed-size ROI batch (replaces dynamic GPU block assignment).
+
+    Returns (rois (K, R, R) float32 intensity crops, boxes (K, 4) int32).
+    """
+    labels = np.asarray(labels)
+    intensity = np.asarray(intensity)
+    r = cfg.nucleus_roi
+    ids = np.unique(labels)
+    ids = ids[ids >= 0][: cfg.max_objects_per_tile]
+    rois = np.zeros((len(ids), r, r), np.float32)
+    boxes = np.zeros((len(ids), 4), np.int32)
+    h, w = labels.shape
+    for i, oid in enumerate(ids):
+        ys, xs = np.nonzero(labels == oid)
+        y0, y1 = ys.min(), ys.max() + 1
+        x0, x1 = xs.min(), xs.max() + 1
+        cy, cx = (y0 + y1) // 2, (x0 + x1) // 2
+        y0 = np.clip(cy - r // 2, 0, max(h - r, 0))
+        x0 = np.clip(cx - r // 2, 0, max(w - r, 0))
+        crop = intensity[y0 : y0 + r, x0 : x0 + r]
+        rois[i, : crop.shape[0], : crop.shape[1]] = crop
+        boxes[i] = (y0, x0, min(y0 + r, h), min(x0 + r, w))
+    return rois, boxes
+
+
+def compute_features(
+    rois: np.ndarray, cfg: WSIConfig, impl: str = "auto"
+) -> np.ndarray:
+    """(K, R, R) intensity crops -> (K, 9) texture features."""
+    if len(rois) == 0:
+        return np.zeros((0, 9), np.float32)
+    bins = ref.quantize_ref(jnp.asarray(rois), cfg.num_bins)
+    feats = ops.texture_features(bins, cfg.num_bins, impl=impl)
+    return np.asarray(feats)
+
+
+def analyze_tile(rgb: jax.Array, cfg: WSIConfig, impl: str = "auto") -> dict:
+    seg = segment_tile(rgb, cfg, impl)
+    rois, boxes = extract_object_rois(seg["labels"], seg["hematoxylin"], cfg)
+    feats = compute_features(rois, cfg, impl)
+    return {**seg, "rois": rois, "boxes": boxes, "features": feats}
+
+
+# ---------------------------------------------------------------------------
+# Region-template stages (paper Fig. 8)
+# ---------------------------------------------------------------------------
+def _task_cost(op: str, scale: float = 1.0) -> TaskCost:
+    return TaskCost(
+        cpu_s=PAPER_OP_COSTS.get(op, 1.0) * scale,
+        speedup=PAPER_OP_SPEEDUPS.get(op, 1.0),
+    )
+
+
+class SegmentationStage(Stage):
+    """Reads "RGB", produces "Mask" (+ float labels channel)."""
+
+    def __init__(self, cfg: WSIConfig | None = None, impl: str = "auto") -> None:
+        super().__init__("Segmentation")
+        self.cfg = cfg or WSIConfig()
+        self.impl = impl
+
+    def run(self, ctx) -> Any:
+        rgb_region = ctx.region("Patient", "RGB")
+        rgb = jnp.asarray(rgb_region.data)
+        rt = self.get_region_template("Patient")
+        roi = rgb_region.roi
+        # mask/hema live on the spatial (H, W) domain; drop the channel axis
+        spatial = (
+            roi
+            if roi.rank == 2
+            else BoundingBox(roi.lo[-2:], roi.hi[-2:], roi.t_lo, roi.t_hi)
+        )
+        mask_region = rt.new_region(
+            "Mask", spatial, np.int32, timestamp=rgb_region.key.timestamp
+        )
+        hema_region = rt.new_region(
+            "Hema", spatial, np.float32, timestamp=rgb_region.key.timestamp
+        )
+
+        results: dict[str, Any] = {}
+
+        def op(name, fn, deps=()):
+            def work():
+                results[name] = fn()
+
+            return ctx.submit(
+                Task(name, cpu_fn=work, accel_fn=work, deps=list(deps), cost=_task_cost(name))
+            )
+
+        t_deconv = op(
+            "Color deconv.",
+            lambda: ops.color_deconv(rgb, jnp.asarray(ref.stain_inverse()), impl=self.impl),
+        )
+
+        def threshold():
+            hema = results["Color deconv."][0]
+            lo = jnp.percentile(hema, 5.0)
+            hi = jnp.percentile(hema, 99.5)
+            hn = jnp.clip((hema - lo) / jnp.maximum(hi - lo, 1e-6), 0.0, 1.0)
+            results["hema_n"] = hn
+            return (hn > self.cfg.seg_threshold).astype(jnp.float32)
+
+        t_thr = op("AreaThreshold", threshold, deps=[t_deconv])
+        t_fill = op(
+            "FillHolles",
+            lambda: ops.fill_holes(results["AreaThreshold"], impl=self.impl),
+            deps=[t_thr],
+        )
+
+        def recon():
+            filled = results["FillHolles"]
+            marker = jnp.minimum(
+                filled,
+                jnp.roll(filled, 1, -1) * jnp.roll(filled, -1, -1)
+                * jnp.roll(filled, 1, -2) * jnp.roll(filled, -1, -2),
+            )
+            return ops.morph_recon(marker, filled, impl=self.impl)
+
+        t_recon = op("ReconToNuclei", recon, deps=[t_fill])
+        t_label = op(
+            "BWLabel",
+            lambda: ops.connected_components(
+                (results["ReconToNuclei"] > 0.5).astype(jnp.int32), impl=self.impl
+            ),
+            deps=[t_recon],
+        )
+
+        def finalize():
+            mask_region.set_data(np.asarray(results["BWLabel"], np.int32))
+            hema_region.set_data(np.asarray(results["hema_n"], np.float32))
+
+        ctx.submit(Task("stage-finalize", cpu_fn=finalize, deps=[t_label],
+                        cost=TaskCost(cpu_s=0.05)))
+        return None
+
+
+class FeatureStage(Stage):
+    """Reads "Mask"+"Hema", produces the "Features" object set."""
+
+    def __init__(self, cfg: WSIConfig | None = None, impl: str = "auto") -> None:
+        super().__init__("FeatureComputation")
+        self.cfg = cfg or WSIConfig()
+        self.impl = impl
+
+    def run(self, ctx) -> Any:
+        mask_region = ctx.region("Patient", "Mask")
+        hema_region = ctx.region("Patient", "Hema")
+        rt = self.get_region_template("Patient")
+        feat_region = rt.new_region(
+            "Features",
+            mask_region.roi,
+            np.float32,
+            kind=RegionKind.OBJECTSET,
+            timestamp=mask_region.key.timestamp,
+        )
+        results: dict[str, Any] = {}
+
+        def rois():
+            results["rois"], results["boxes"] = extract_object_rois(
+                mask_region.data, hema_region.data, self.cfg
+            )
+
+        t_rois = ctx.submit(Task("ObjectROIs", cpu_fn=rois, cost=_task_cost("BWLabel")))
+
+        def feats():
+            f = compute_features(results["rois"], self.cfg, self.impl)
+            feat_region.set_data({
+                "features": f,
+                "boxes": results["boxes"],
+            })
+
+        ctx.submit(
+            Task("Features", cpu_fn=feats, accel_fn=feats, deps=[t_rois],
+                 cost=_task_cost("Features"))
+        )
+        return None

@@ -1,0 +1,116 @@
+"""Data prefetching and asynchronous copy (paper S3.2.1, last subsection).
+
+Accelerator work is pipelined through three phases — *upload, processing,
+download* — so the upload of task N+1 and the download of task N-1 overlap
+the compute of task N.  On TPU/JAX the natural realization is
+double/triple-buffered ``jax.device_put`` plus async dispatch; this module
+provides
+
+  * :class:`DevicePipeline` — a generic 3-phase pipeline over an iterator
+    of host batches: ``put -> fn -> fetch`` with a bounded in-flight
+    window (the paper's upload/process/download chain);
+  * :func:`prefetch_to_device` — the standard training-loop helper: wraps
+    a host-batch iterator and keeps ``depth`` batches resident ahead of
+    the consumer.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Callable, Iterable, Iterator
+
+import jax
+import numpy as np
+
+
+def prefetch_to_device(
+    it: Iterable[Any],
+    depth: int = 2,
+    sharding: jax.sharding.Sharding | None = None,
+) -> Iterator[Any]:
+    """Keep ``depth`` batches device-resident ahead of the consumer.
+
+    Uploads happen on a background thread so host->device copies overlap
+    the consumer's compute (async dispatch does the rest).
+    """
+    if depth < 1:
+        raise ValueError("depth must be >= 1")
+    q: collections.deque = collections.deque()
+    cv = threading.Condition()
+    DONE = object()
+
+    def _put(batch: Any) -> Any:
+        tgt = sharding
+        return jax.tree.map(
+            lambda x: jax.device_put(x, tgt) if tgt is not None else jax.device_put(x),
+            batch,
+        )
+
+    def _producer() -> None:
+        try:
+            for batch in it:
+                staged = _put(batch)
+                with cv:
+                    while len(q) >= depth:
+                        cv.wait()
+                    q.append(staged)
+                    cv.notify_all()
+        finally:
+            with cv:
+                q.append(DONE)
+                cv.notify_all()
+
+    threading.Thread(target=_producer, daemon=True, name="prefetcher").start()
+    while True:
+        with cv:
+            while not q:
+                cv.wait()
+            item = q.popleft()
+            cv.notify_all()
+        if item is DONE:
+            return
+        yield item
+
+
+class DevicePipeline:
+    """Explicit upload -> compute -> download pipeline (paper's 3 phases).
+
+    ``fn`` must be an async-dispatching function (e.g. jitted); with
+    ``window`` outstanding computations the host thread stays ahead of the
+    device, so uploads/downloads of neighbours overlap compute.
+    """
+
+    def __init__(
+        self,
+        fn: Callable[..., Any],
+        *,
+        window: int = 2,
+        sharding: jax.sharding.Sharding | None = None,
+    ) -> None:
+        self.fn = fn
+        self.window = max(1, window)
+        self.sharding = sharding
+        self.stats = {"uploaded": 0, "computed": 0, "downloaded": 0}
+
+    def map(self, batches: Iterable[Any]) -> Iterator[Any]:
+        inflight: collections.deque = collections.deque()
+        for host_batch in batches:
+            dev_batch = jax.tree.map(
+                lambda x: jax.device_put(x, self.sharding)
+                if self.sharding is not None
+                else jax.device_put(x),
+                host_batch,
+            )
+            self.stats["uploaded"] += 1
+            out = self.fn(dev_batch)  # async dispatch: returns immediately
+            self.stats["computed"] += 1
+            inflight.append(out)
+            if len(inflight) >= self.window:
+                yield self._download(inflight.popleft())
+        while inflight:
+            yield self._download(inflight.popleft())
+
+    def _download(self, out: Any) -> Any:
+        host = jax.tree.map(np.asarray, out)
+        self.stats["downloaded"] += 1
+        return host

@@ -1,0 +1,20 @@
+"""Serving substrate: caches, prefill/decode steps, generation."""
+from repro.serve.step import (
+    abstract_cache,
+    cache_pspecs,
+    cache_shardings,
+    generate,
+    make_cache,
+    make_decode_step,
+    make_prefill_step,
+)
+
+__all__ = [
+    "abstract_cache",
+    "cache_pspecs",
+    "cache_shardings",
+    "generate",
+    "make_cache",
+    "make_decode_step",
+    "make_prefill_step",
+]

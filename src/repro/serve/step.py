@@ -1,0 +1,168 @@
+"""Serving substrate: cache construction, shardings, prefill/decode steps.
+
+``decode_*`` / ``long_*`` dry-run shapes lower these serve steps (one new
+token against a populated cache), per the assignment brief.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.models.spec import DEFAULT_RULES
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, *, enc_len: int = 4096):
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_len, enc_len)
+    return transformer.init_cache(cfg, batch, max_len)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, *, enc_len: int = 4096):
+    return jax.eval_shape(lambda: make_cache(cfg, batch, max_len, enc_len=enc_len))
+
+
+def _divisible(n: int, mesh, axes) -> bool:
+    names = [a for a in (axes if isinstance(axes, tuple) else (axes,)) if a in mesh.axis_names]
+    if not names:
+        return False
+    return n % int(np.prod([mesh.shape[a] for a in names])) == 0
+
+
+def cache_pspecs(
+    cfg: ModelConfig, cache: Any, mesh, rules=None, *, seq_shard: bool = False
+) -> Any:
+    """PartitionSpecs for a cache pytree: batch over (pod, data), heads /
+    inner dims over model where divisible.
+
+    ``seq_shard=True`` shards the cache *sequence* dim over "model" when
+    the kv-head dim cannot use it (MQA/GQA with kv < model size): decode
+    attention then runs sequence-parallel — XLA inserts the softmax
+    partial reductions — and per-chip cache traffic drops by the model
+    size.  This is the beyond-paper optimization for decode cells.
+    """
+    rules = rules or DEFAULT_RULES
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp = "model" if "model" in mesh.axis_names else None
+
+    def leaf_ps(path, leaf) -> P:
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        batch_ok = len(shape) >= 2 and _divisible(shape[1], mesh, dp)
+        b = dp_spec if batch_ok else None
+        if key in ("k", "v", "xk", "xv"):  # (L, B, kv, T, hd)
+            kv_ok = tp and _divisible(shape[2], mesh, tp)
+            if kv_ok:
+                return P(None, b, tp, None, None)
+            if seq_shard and tp and _divisible(shape[3], mesh, tp):
+                return P(None, b, None, tp, None)
+            return P(None, b, None, None, None)
+        if key in ("ckv", "kr"):  # (L, B, T, r)
+            if seq_shard and tp and _divisible(shape[2], mesh, tp):
+                return P(None, b, tp, None)
+            return P(None, b, None, None)
+        if key == "conv":  # (L, B, ck, conv_dim)
+            cd_ok = tp and _divisible(shape[3], mesh, tp)
+            return P(None, b, None, tp if cd_ok else None)
+        if key == "ssm":  # (L, B, H, N, P)
+            h_ok = tp and _divisible(shape[2], mesh, tp)
+            return P(None, b, tp if h_ok else None, None, None)
+        if key == "slotpos":
+            return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_ps, cache)
+
+
+def cache_shardings(
+    cfg: ModelConfig, cache: Any, mesh, rules=None, *, seq_shard: bool = False
+) -> Any:
+    ps = cache_pspecs(cfg, cache, mesh, rules, seq_shard=seq_shard)
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), ps, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serve step functions
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    if cfg.family == "encdec":
+        def prefill(params, batch, cache):
+            return encdec.prefill(params, batch["frames"], batch["tokens"], cfg, cache)
+
+        return prefill
+
+    def prefill(params, batch, cache):
+        prefix = batch.get("prefix") if cfg.frontend else None
+        return transformer.prefill(params, batch["tokens"], cfg, cache, prefix_embeds=prefix)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    if cfg.family == "encdec":
+        def decode(params, tokens, cache, pos):
+            return encdec.decode_step(params, tokens, cfg, cache, pos)
+
+        return decode
+
+    def decode(params, tokens, cache, pos):
+        return transformer.decode_step(params, tokens, cfg, cache, pos)
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# Simple batched generation loop (examples / tests)
+# ---------------------------------------------------------------------------
+def generate(
+    params: Any,
+    cfg: ModelConfig,
+    prompt: jax.Array,  # (B, S0)
+    *,
+    max_new: int = 16,
+    max_len: int | None = None,
+    temperature: float = 0.0,
+    key: jax.Array | None = None,
+    frames: jax.Array | None = None,
+    prefix: jax.Array | None = None,
+) -> jax.Array:
+    b, s0 = prompt.shape
+    max_len = max_len or (s0 + max_new + 1)
+    cache = make_cache(cfg, b, max_len, enc_len=frames.shape[1] if frames is not None else 64)
+    prefill = make_prefill_step(cfg)
+    decode = make_decode_step(cfg)
+    batch: dict[str, Any] = {"tokens": prompt}
+    if frames is not None:
+        batch["frames"] = frames
+    if prefix is not None:
+        batch["prefix"] = prefix
+    logits, cache = prefill(params, batch, cache)
+    out = [prompt]
+    pos_offset = cfg.frontend_len if (cfg.frontend and prefix is not None) else 0
+    tok = _sample(logits[:, -1], temperature, key, 0)
+    for i in range(max_new):
+        out.append(tok)
+        pos = jnp.asarray(s0 + pos_offset + i, jnp.int32)
+        logits, cache = decode(params, tok, cache, pos)
+        tok = _sample(logits[:, -1], temperature, key, i + 1)
+    return jnp.concatenate(out, axis=1)
+
+
+def _sample(logits: jax.Array, temperature: float, key, i: int) -> jax.Array:
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    k = jax.random.fold_in(key, i)
+    return jax.random.categorical(k, logits / temperature, axis=-1)[:, None].astype(jnp.int32)

@@ -1,0 +1,16 @@
+"""Global storage implementations for data regions (paper S4 + S7)."""
+from repro.storage.autotune import IOConfig, TuneResult, autotune_io
+from repro.storage.checkpoint import CheckpointManager
+from repro.storage.disk import DiskCostModel, DiskStats, DiskStorage
+from repro.storage.dms import DistributedMemoryStorage, InProcTransport, TransportStats
+from repro.storage.stcache import SpatioTemporalCache, STCacheStats
+
+__all__ = [
+    "CheckpointManager",
+    "DiskCostModel",
+    "DiskStats",
+    "DiskStorage",
+    "DistributedMemoryStorage",
+    "InProcTransport",
+    "TransportStats",
+]

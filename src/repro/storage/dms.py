@@ -1,0 +1,263 @@
+"""Distributed memory storage (DMS) — the DataSpaces-backed store of S4.1.
+
+Faithful mechanics:
+  * the application domain is gridded into fixed blocks;
+  * each block's coordinates are mapped to a 1-D key by a Hilbert SFC
+    (Morton for rank != 2);
+  * the (possibly sparse) set of SFC keys is *compacted into a virtual
+    domain* (rank among sorted keys) which is range-partitioned across the
+    storage servers (paper Fig. 9);
+  * a put stores payload blocks on their home servers and propagates only
+    *metadata* to every server's directory (paper: "data stored on a single
+    server, metadata propagated" — this is why inserts are cheap and reads
+    may move data);
+  * a get routes per-block requests to home servers and assembles the ROI.
+
+Servers here are thread-safe in-process shards behind a swappable
+``Transport`` so the same logic can ride a real network layer on a pod.
+Every byte moved is accounted (puts, gets, metadata) for the benchmark
+suite; an optional virtual-time bandwidth model reproduces the paper's
+throughput experiments without wall-clock sleeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Iterable
+
+import numpy as np
+
+from repro.core.bbox import BoundingBox
+from repro.core.hilbert import sfc_index, sfc_order_for
+from repro.core.regions import RegionKey
+
+
+@dataclasses.dataclass
+class TransportStats:
+    puts: int = 0
+    gets: int = 0
+    meta_msgs: int = 0
+    bytes_put: int = 0
+    bytes_get: int = 0
+    bytes_meta: int = 0
+
+    def reset(self) -> None:
+        self.puts = self.gets = self.meta_msgs = 0
+        self.bytes_put = self.bytes_get = self.bytes_meta = 0
+
+
+class InProcTransport:
+    """In-process stand-in for the RDMA layer; counts every byte moved.
+
+    ``link_bandwidth`` (bytes/s) and ``latency`` (s) feed a *virtual time*
+    model used by benchmarks (no sleeping): each message advances a
+    per-endpoint clock, and aggregate throughput is bytes / max(clock).
+    """
+
+    def __init__(self, num_servers: int, link_bandwidth: float = 6.0e9, latency: float = 2e-6):
+        self.stats = TransportStats()
+        self.link_bandwidth = link_bandwidth
+        self.latency = latency
+        self._clock = [0.0] * num_servers
+        self._lock = threading.Lock()
+
+    def account(self, server: int, nbytes: int, op: str) -> None:
+        with self._lock:
+            if op == "put":
+                self.stats.puts += 1
+                self.stats.bytes_put += nbytes
+            elif op == "get":
+                self.stats.gets += 1
+                self.stats.bytes_get += nbytes
+            else:
+                self.stats.meta_msgs += 1
+                self.stats.bytes_meta += nbytes
+            self._clock[server] += self.latency + nbytes / self.link_bandwidth
+
+    def virtual_time(self) -> float:
+        with self._lock:
+            return max(self._clock) if self._clock else 0.0
+
+    def reset(self) -> None:
+        with self._lock:
+            self.stats.reset()
+            self._clock = [0.0] * len(self._clock)
+
+
+class _Server:
+    """One storage server: payload blocks + a replicated metadata directory."""
+
+    def __init__(self, sid: int) -> None:
+        self.sid = sid
+        self._blocks: dict[tuple, np.ndarray] = {}
+        self._meta: dict[RegionKey, dict[tuple, tuple[BoundingBox, int]]] = {}
+        self._lock = threading.Lock()
+
+    def store(self, key: RegionKey, block_coord: tuple, box: BoundingBox, payload: np.ndarray) -> None:
+        with self._lock:
+            self._blocks[(key, block_coord)] = payload
+
+    def fetch(self, key: RegionKey, block_coord: tuple) -> np.ndarray:
+        with self._lock:
+            return self._blocks[(key, block_coord)]
+
+    def put_meta(self, key: RegionKey, block_coord: tuple, box: BoundingBox, home: int) -> None:
+        with self._lock:
+            self._meta.setdefault(key, {})[block_coord] = (box, home)
+
+    def lookup(self, key: RegionKey) -> dict[tuple, tuple[BoundingBox, int]]:
+        with self._lock:
+            return dict(self._meta.get(key, {}))
+
+    def keys(self) -> list[RegionKey]:
+        with self._lock:
+            return list(self._meta)
+
+    def drop(self, key: RegionKey) -> None:
+        with self._lock:
+            self._meta.pop(key, None)
+            for bk in [bk for bk in self._blocks if bk[0] == key]:
+                self._blocks.pop(bk, None)
+
+    @property
+    def payload_bytes(self) -> int:
+        with self._lock:
+            return sum(b.nbytes for b in self._blocks.values())
+
+
+class DistributedMemoryStorage:
+    """The ``DMS`` global storage backend (StorageBackend protocol)."""
+
+    def __init__(
+        self,
+        domain: BoundingBox,
+        block_shape: Iterable[int],
+        num_servers: int = 4,
+        *,
+        name: str = "DMS",
+        transport: InProcTransport | None = None,
+    ) -> None:
+        self.name = name
+        self.domain = domain
+        self.block_shape = tuple(int(b) for b in block_shape)
+        if len(self.block_shape) != domain.rank:
+            raise ValueError("block_shape rank != domain rank")
+        self.num_servers = int(num_servers)
+        self.transport = transport or InProcTransport(self.num_servers)
+        self._servers = [_Server(i) for i in range(self.num_servers)]
+        # --- virtual-domain construction (paper Fig. 9) ---
+        self._grid = tuple(
+            -(-s // b) for s, b in zip(domain.shape, self.block_shape)
+        )  # ceil-div block counts per dim
+        order = sfc_order_for(max(self._grid))
+        keys = sorted(
+            sfc_index(order, coord) for coord in np.ndindex(*self._grid)
+        )
+        self._sfc_order = order
+        # compaction: sfc key -> contiguous virtual rank
+        self._virtual_rank = {k: i for i, k in enumerate(keys)}
+        self._virtual_size = len(keys)
+
+    # -- routing ------------------------------------------------------------------
+    def _block_coord(self, point: tuple[int, ...]) -> tuple[int, ...]:
+        return tuple(
+            (p - l) // b for p, l, b in zip(point, self.domain.lo, self.block_shape)
+        )
+
+    def home_server(self, block_coord: tuple[int, ...]) -> int:
+        """SFC key -> virtual rank -> range partition over servers."""
+        k = sfc_index(self._sfc_order, block_coord)
+        rank = self._virtual_rank[k]
+        return (rank * self.num_servers) // self._virtual_size
+
+    def _blocks_overlapping(self, box: BoundingBox) -> list[tuple[tuple[int, ...], BoundingBox]]:
+        box = box.intersect(self.domain)
+        lo_blk = self._block_coord(tuple(box.lo))
+        hi_blk = self._block_coord(tuple(c - 1 for c in box.hi)) if not box.is_empty else lo_blk
+        out = []
+        for coord in np.ndindex(*[h - l + 1 for l, h in zip(lo_blk, hi_blk)]):
+            bc = tuple(l + c for l, c in zip(lo_blk, coord))
+            blo = tuple(
+                dl + c * b for dl, c, b in zip(self.domain.lo, bc, self.block_shape)
+            )
+            bhi = tuple(
+                min(dl + (c + 1) * b, dh)
+                for dl, dh, c, b in zip(self.domain.lo, self.domain.hi, bc, self.block_shape)
+            )
+            blk_box = BoundingBox(blo, bhi, box.t_lo, box.t_hi)
+            if blk_box.intersects(box):
+                out.append((bc, blk_box))
+        return out
+
+    # -- StorageBackend protocol -----------------------------------------------------
+    def put(self, key: RegionKey, bb: BoundingBox, array: np.ndarray) -> None:
+        array = np.asarray(array)
+        if tuple(array.shape)[: bb.rank] != bb.shape:
+            raise ValueError(f"payload shape {array.shape} != bb shape {bb.shape}")
+        for bc, blk_box in self._blocks_overlapping(bb):
+            part = blk_box.intersect(bb)
+            if part.is_empty:
+                continue
+            payload = np.ascontiguousarray(array[part.local_slices(bb)])
+            home = self.home_server(bc)
+            self._servers[home].store(key, bc, part, payload)
+            self.transport.account(home, payload.nbytes, "put")
+            # metadata propagation to every server (cheap, paper S5.4)
+            meta_bytes = 64
+            for srv in self._servers:
+                srv.put_meta(key, bc, part, home)
+                if srv.sid != home:
+                    self.transport.account(srv.sid, meta_bytes, "meta")
+
+    def get(self, key: RegionKey, roi: BoundingBox) -> np.ndarray:
+        # any server's directory can answer the lookup; use server 0
+        directory = self._servers[0].lookup(key)
+        if not directory:
+            raise KeyError(f"DMS: no data for {key}")
+        sample = None
+        out = None
+        covered = 0
+        for bc, (box, home) in directory.items():
+            part = box.intersect(roi)
+            if part.is_empty:
+                continue
+            block = self._servers[home].fetch(key, bc)
+            self.transport.account(home, block.nbytes, "get")
+            if out is None:
+                sample = block
+                trailing = block.shape[box.rank:]
+                out = np.zeros(roi.shape + trailing, dtype=block.dtype)
+            src = part.local_slices(box)
+            dst = part.local_slices(roi)
+            out[dst] = block[src]
+            covered += part.volume
+        if out is None:
+            raise KeyError(f"DMS: {key} has no blocks intersecting {roi}")
+        if covered < roi.volume:
+            raise KeyError(
+                f"DMS: {key} covers only {covered}/{roi.volume} cells of {roi}"
+            )
+        return out
+
+    def query(self, namespace: str, name: str) -> list[tuple[RegionKey, BoundingBox]]:
+        seen: dict[RegionKey, BoundingBox] = {}
+        for key in self._servers[0].keys():
+            if key.namespace == namespace and key.name == name:
+                for box, _ in self._servers[0].lookup(key).values():
+                    seen[key] = box if key not in seen else seen[key].union(box)
+        return sorted(seen.items(), key=lambda kv: kv[0])
+
+    def delete(self, key: RegionKey) -> None:
+        for srv in self._servers:
+            srv.drop(key)
+
+    # -- stats -----------------------------------------------------------------
+    def server_load(self) -> list[int]:
+        """Payload bytes per server — balance check for the SFC partition."""
+        return [s.payload_bytes for s in self._servers]
+
+    def aggregate_throughput(self) -> float:
+        """bytes moved / virtual time (paper Fig. 14 reports GB/s)."""
+        t = self.transport.virtual_time()
+        total = self.transport.stats.bytes_put + self.transport.stats.bytes_get
+        return total / t if t > 0 else 0.0

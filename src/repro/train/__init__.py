@@ -1,0 +1,34 @@
+"""Training substrate: optimizers, train step, sharding, compression."""
+from repro.train.compression import compressed_psum, compressed_psum_tree, make_dp_allreduce
+from repro.train.optim import Adafactor, AdafactorConfig, AdamW, AdamWConfig, cosine_lr
+from repro.train.step import (
+    abstract_state,
+    batch_pspecs,
+    cross_entropy,
+    init_state,
+    loss_fn,
+    make_eval_step,
+    make_train_step,
+    state_pspecs,
+    state_shardings,
+)
+
+__all__ = [
+    "compressed_psum",
+    "compressed_psum_tree",
+    "make_dp_allreduce",
+    "Adafactor",
+    "AdafactorConfig",
+    "AdamW",
+    "AdamWConfig",
+    "cosine_lr",
+    "abstract_state",
+    "batch_pspecs",
+    "cross_entropy",
+    "init_state",
+    "loss_fn",
+    "make_eval_step",
+    "make_train_step",
+    "state_pspecs",
+    "state_shardings",
+]

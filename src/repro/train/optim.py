@@ -1,0 +1,174 @@
+"""Optimizers implemented from scratch (no optax): AdamW and Adafactor.
+
+Functional API: ``init(params) -> state``, ``update(grads, state, params,
+lr) -> (updates_applied_params, new_state)``.  State pytrees mirror the
+param tree so the ZeRO-1 sharding machinery in ``train/step.py`` can
+shard them independently of the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8
+    eps: float = 1e-30
+    grad_clip: float = 1.0
+    min_dim_size_to_factor: int = 128
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    clipped = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32) * scale, tree)
+    return clipped, norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+class AdamW:
+    def __init__(self, cfg: AdamWConfig | None = None) -> None:
+        self.cfg = cfg or AdamWConfig()
+
+    def init(self, params: Any) -> Any:
+        zeros = lambda p: jnp.zeros(p.shape, self.cfg.state_dtype)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: Any, state: Any, params: Any, lr: jax.Array | float | None = None):
+        c = self.cfg
+        lr = c.lr if lr is None else lr
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(norm, 1e-12))
+        count = state["count"] + 1
+        b1c = 1.0 - c.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - c.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m_new = c.b1 * m.astype(jnp.float32) + (1 - c.b1) * g
+            v_new = c.b2 * v.astype(jnp.float32) + (1 - c.b2) * g * g
+            mh = m_new / b1c
+            vh = v_new / b2c
+            step = mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * step
+            return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state["m"])
+        flat_v = jax.tree_util.tree_leaves(state["v"])
+        new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree_util.tree_unflatten(treedef, [n[0] for n in new])
+        new_state = {
+            "m": jax.tree_util.tree_unflatten(treedef, [n[1] for n in new]),
+            "v": jax.tree_util.tree_unflatten(treedef, [n[2] for n in new]),
+            "count": count,
+        }
+        return new_params, new_state, {"grad_norm": norm}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment: O(n+m) state for (n, m) matrices)
+# ---------------------------------------------------------------------------
+class Adafactor:
+    def __init__(self, cfg: AdafactorConfig | None = None) -> None:
+        self.cfg = cfg or AdafactorConfig()
+
+    def _factored(self, shape: tuple[int, ...]) -> bool:
+        return (
+            len(shape) >= 2
+            and shape[-1] >= self.cfg.min_dim_size_to_factor
+            and shape[-2] >= self.cfg.min_dim_size_to_factor
+        )
+
+    def init(self, params: Any) -> Any:
+        def mk(p):
+            if self._factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree_util.tree_map(mk, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: Any, state: Any, params: Any, lr: jax.Array | float | None = None):
+        c = self.cfg
+        lr = c.lr if lr is None else lr
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(norm, 1e-12))
+        count = state["count"] + 1
+        rho = 1.0 - count.astype(jnp.float32) ** (-c.decay)
+
+        def upd(p, g, v):
+            g = g.astype(jnp.float32) * scale
+            g2 = g * g + c.eps
+            if "vr" in v:
+                vr = rho * v["vr"] + (1 - rho) * g2.mean(axis=-1)
+                vc = rho * v["vc"] + (1 - rho) * g2.mean(axis=-2)
+                denom = (
+                    vr[..., :, None]
+                    / jnp.clip(vr.mean(axis=-1, keepdims=True)[..., None], 1e-30)
+                ) * vc[..., None, :]
+                update = g * jax.lax.rsqrt(jnp.clip(denom, 1e-30))
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = rho * v["v"] + (1 - rho) * g2
+                update = g * jax.lax.rsqrt(jnp.clip(vv, 1e-30))
+                new_v = {"v": vv}
+            # update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+            update = update / jnp.maximum(1.0, rms)
+            p_new = p.astype(jnp.float32) - lr * update
+            return p_new.astype(p.dtype), new_v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        v_leaves = jax.tree_util.tree_leaves(
+            state["v"], is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        )
+        new = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, v_leaves)]
+        new_params = jax.tree_util.tree_unflatten(treedef, [n[0] for n in new])
+        new_v = jax.tree_util.tree_unflatten(treedef, [n[1] for n in new])
+        return new_params, {"v": new_v, "count": count}, {"grad_norm": norm}
+
+
+def cosine_lr(step: jax.Array, *, base: float, warmup: int, total: int, floor: float = 0.1):
+    """Linear warmup + cosine decay to ``floor * base``."""
+    step_f = step.astype(jnp.float32)
+    warm = step_f / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step_f - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return base * jnp.where(step_f < warmup, warm, cos)

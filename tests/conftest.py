@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device override is
+# dryrun-only, per the brief). Keep hypothesis deadlines off: CI boxes jit.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", deadline=None, max_examples=25, derandomize=True)
+settings.load_profile("ci")

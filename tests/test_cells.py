@@ -1,0 +1,64 @@
+"""Cell builder: sharding trees match argument trees (structure checks on
+a 1-device host mesh — no compilation, catches drift between models,
+caches and sharding derivation)."""
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cell_supported, get_config
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_host_mesh
+
+
+def _tree_shapes_match(args, shardings):
+    la = jax.tree_util.tree_structure(args)
+    ls = jax.tree_util.tree_structure(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding) or x is None
+    )
+    return la == ls or len(jax.tree_util.tree_leaves(args)) == len(
+        jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+        )
+    )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_cell_builds_and_shardings_align(arch, shape):
+    ok, _ = cell_supported(get_config(arch), shape)
+    if not ok:
+        pytest.skip("documented arch x shape skip")
+    mesh = make_host_mesh(1, 1)
+    cell = build_cell(arch, shape, mesh)
+    assert len(cell.args) == len(cell.in_shardings)
+    for arg, sh in zip(cell.args, cell.in_shardings):
+        assert _tree_shapes_match(arg, sh), f"{arch}/{shape}: sharding tree mismatch"
+    assert cell.meta["tokens"] > 0
+    # abstract inputs only — nothing allocated
+    leaves = jax.tree_util.tree_leaves(cell.args)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+
+
+def test_unsupported_cell_raises():
+    mesh = make_host_mesh(1, 1)
+    with pytest.raises(ValueError, match="unsupported"):
+        build_cell("gemma-2b", "long_500k", mesh)
+
+
+def test_decode_cell_shapes_match_spec():
+    mesh = make_host_mesh(1, 1)
+    cell = build_cell("qwen3-0.6b", "decode_32k", mesh)
+    params, tokens, cache, pos = cell.args
+    spec = SHAPES["decode_32k"]
+    assert tokens.shape == (spec.global_batch, 1)
+    assert cache["layers"]["k"].shape[3] == spec.seq_len
+    assert pos.shape == ()
+
+
+def test_train_cell_batch_matches_spec():
+    mesh = make_host_mesh(1, 1)
+    cell = build_cell("internvl2-1b", "train_4k", mesh)
+    state, batch = cell.args
+    spec = SHAPES["train_4k"]
+    cfg = cell.cfg
+    assert batch["tokens"].shape == (spec.global_batch, spec.seq_len - cfg.frontend_len)
+    assert batch["prefix"].shape == (spec.global_batch, cfg.frontend_len, cfg.d_model)

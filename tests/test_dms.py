@@ -1,0 +1,113 @@
+"""Distributed memory storage (DataSpaces analogue) tests."""
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core import BoundingBox, ElementType, RegionKey
+from repro.storage import DistributedMemoryStorage
+
+DOM = BoundingBox((0, 0), (64, 64))
+
+
+def _key(name="R", ts=0, v=0):
+    return RegionKey("t", name, ElementType.FLOAT32, ts, v)
+
+
+def test_put_get_identity():
+    dms = DistributedMemoryStorage(DOM, (16, 16), 4)
+    arr = np.random.default_rng(0).random((64, 64), dtype=np.float32)
+    dms.put(_key(), DOM, arr)
+    assert np.array_equal(dms.get(_key(), DOM), arr)
+
+
+@given(
+    st.integers(0, 63), st.integers(0, 63), st.data()
+)
+def test_roi_reads_match_numpy(y0, x0, data):
+    y1 = data.draw(st.integers(y0 + 1, 64))
+    x1 = data.draw(st.integers(x0 + 1, 64))
+    dms = DistributedMemoryStorage(DOM, (16, 16), 3)
+    arr = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
+    dms.put(_key(), DOM, arr)
+    roi = BoundingBox((y0, x0), (y1, x1))
+    assert np.array_equal(dms.get(_key(), roi), arr[roi.slices()])
+
+
+def test_partial_put_roi_get():
+    dms = DistributedMemoryStorage(DOM, (16, 16), 4)
+    arr = np.ones((32, 32), np.float32)
+    part = BoundingBox((16, 16), (48, 48))
+    dms.put(_key(), part, arr)
+    got = dms.get(_key(), BoundingBox((20, 20), (40, 40)))
+    assert got.shape == (20, 20) and (got == 1).all()
+
+
+def test_uncovered_roi_raises():
+    dms = DistributedMemoryStorage(DOM, (16, 16), 2)
+    dms.put(_key(), BoundingBox((0, 0), (16, 16)), np.ones((16, 16), np.float32))
+    import pytest
+
+    with pytest.raises(KeyError):
+        dms.get(_key(), DOM)
+
+
+def test_overlapping_writes_last_staged_wins():
+    """Paper S3.4: storage keeps the last staged version of overlaps."""
+    dms = DistributedMemoryStorage(DOM, (16, 16), 4)
+    a = np.zeros((64, 64), np.float32)
+    b = np.ones((32, 64), np.float32)
+    dms.put(_key(), DOM, a)
+    dms.put(_key(), BoundingBox((16, 0), (48, 64)), b)
+    got = dms.get(_key(), DOM)
+    assert (got[16:48] == 1).all() and (got[:16] == 0).all() and (got[48:] == 0).all()
+
+
+def test_sfc_balances_servers():
+    dms = DistributedMemoryStorage(DOM, (8, 8), 4)
+    arr = np.random.default_rng(1).random((64, 64), dtype=np.float32)
+    dms.put(_key(), DOM, arr)
+    load = dms.server_load()
+    assert len(load) == 4
+    assert max(load) <= 2 * min(load)  # SFC range partition is balanced
+
+
+def test_metadata_propagated_payload_single_home():
+    dms = DistributedMemoryStorage(DOM, (32, 32), 4)
+    arr = np.ones((32, 32), np.float32)
+    dms.put(_key(), BoundingBox((0, 0), (32, 32)), arr)
+    stats = dms.transport.stats
+    assert stats.puts == 1  # one payload block, one home server
+    assert stats.meta_msgs == 3  # metadata broadcast to the other servers
+    # every server's directory can answer
+    for srv in dms._servers:
+        assert srv.lookup(_key())
+
+
+def test_versioned_keys_coexist_and_query():
+    dms = DistributedMemoryStorage(DOM, (16, 16), 2)
+    dms.put(_key(ts=0), DOM, np.zeros((64, 64), np.float32))
+    dms.put(_key(ts=1), DOM, np.ones((64, 64), np.float32))
+    found = dms.query("t", "R")
+    assert [k.timestamp for k, _ in found] == [0, 1]
+    assert (dms.get(_key(ts=1), DOM) == 1).all()
+    dms.delete(_key(ts=0))
+    assert len(dms.query("t", "R")) == 1
+
+
+def test_trailing_channel_dims():
+    dms = DistributedMemoryStorage(DOM, (16, 16), 4)
+    key = RegionKey("t", "RGB", ElementType.UINT8)
+    arr = np.random.default_rng(2).integers(0, 255, (64, 64, 3), dtype=np.uint8)
+    dms.put(key, DOM, arr)
+    roi = BoundingBox((10, 20), (30, 60))
+    assert np.array_equal(dms.get(key, roi), arr[10:30, 20:60])
+
+
+def test_throughput_accounting():
+    dms = DistributedMemoryStorage(DOM, (16, 16), 4)
+    arr = np.ones((64, 64), np.float32)
+    dms.put(_key(), DOM, arr)
+    dms.get(_key(), DOM)
+    assert dms.transport.stats.bytes_put == arr.nbytes
+    assert dms.transport.stats.bytes_get == arr.nbytes
+    assert dms.aggregate_throughput() > 0

@@ -1,0 +1,196 @@
+"""Manager-Worker runtime: demand-driven dispatch, fault tolerance."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BoundingBox, Intent, RegionTemplate, StorageRegistry
+from repro.runtime import Stage, SysEnv, Task
+from repro.storage import DistributedMemoryStorage
+
+DOM = BoundingBox((0, 0), (64, 64))
+
+
+class AddOne(Stage):
+    def run(self, ctx):
+        reg = ctx.region("P", "X")
+        rt = self.get_region_template("P")
+        out = rt.new_region("Y", reg.roi, np.float32)
+
+        def work():
+            out.set_data(np.asarray(reg.data) + 1)
+
+        ctx.submit(Task("addone", cpu_fn=work))
+
+
+def _env(**kw):
+    reg = StorageRegistry()
+    dms = reg.register(DistributedMemoryStorage(DOM, (32, 32), 2, name="DMS"))
+    env = SysEnv(num_workers=2, cpus_per_worker=2, accels_per_worker=0,
+                 registry=reg, **kw)
+    return env, dms
+
+
+def _wire(env, dms, n_parts=4, stage_cls=AddOne):
+    rt = RegionTemplate("P")
+    x = rt.new_region("X", DOM, np.float32, input_storage="DMS", lazy=True)
+    data = np.random.default_rng(0).random((64, 64), dtype=np.float32)
+    dms.put(x.key, DOM, data)
+    stages = []
+    for part in list(DOM.tiles((32, 32)))[:n_parts]:
+        s = stage_cls()
+        s.add_region_template(rt, "X", part, Intent.INPUT, read_storage="DMS")
+        s.add_region_template(rt, "Y", part, Intent.OUTPUT, storage="DMS")
+        env.execute_component(s)
+        stages.append(s)
+    return rt, data, stages
+
+
+def test_e2e_pipeline_two_workers():
+    env, dms = _env()
+    rt, data, stages = _wire(env, dms)
+    env.startup_execution()
+    env.finalize_system()
+    key = stages[0].templates["P"].get("Y").key
+    assert np.allclose(dms.get(key, DOM), data + 1)
+    # demand-driven: both workers should have gotten work
+    dispatched = {w for ev, (sid, w) in env.manager.events if ev == "dispatch"}
+    assert len(dispatched) >= 1
+
+
+def test_stage_failure_retried_then_succeeds():
+    attempts = []
+
+    class Flaky(AddOne):
+        def run(self, ctx):
+            attempts.append(self.sid)
+            if len(attempts) == 1:
+                raise RuntimeError("transient")
+            return super().run(ctx)
+
+    env, dms = _env()
+    _wire(env, dms, n_parts=1, stage_cls=Flaky)
+    env.startup_execution()
+    env.finalize_system()
+    assert len(attempts) == 2  # failed once, re-ran elsewhere
+
+
+def test_stage_failure_exhausts_retries():
+    class AlwaysBad(Stage):
+        def run(self, ctx):
+            raise RuntimeError("permanent")
+
+    env, dms = _env()
+    rt = RegionTemplate("P")
+    s = AlwaysBad()
+    s.templates["P"] = rt
+    env.execute_component(s)
+    with pytest.raises(RuntimeError, match="failed after"):
+        env.startup_execution()
+    env.finalize_system()
+
+
+def test_worker_death_requeues_inflight():
+    """Node-failure fault tolerance: stages of a dead worker re-run."""
+    release = []
+
+    class Slow(AddOne):
+        def run(self, ctx):
+            while not release:
+                time.sleep(0.01)
+            return super().run(ctx)
+
+    env, dms = _env(heartbeat_timeout=10.0)
+    rt, data, stages = _wire(env, dms, n_parts=2, stage_cls=Slow)
+
+    import threading
+
+    def killer():
+        time.sleep(0.3)
+        env.workers[0].kill()  # node dies mid-stage
+        time.sleep(0.1)
+        release.append(1)
+
+    threading.Thread(target=killer, daemon=True).start()
+    env.startup_execution()
+    env.finalize_system()
+    key = stages[0].templates["P"].get("Y").key
+    covered = BoundingBox((0, 0), (32, 64))  # the two dispatched partitions
+    assert np.allclose(dms.get(key, covered), data[:32] + 1)
+    events = [ev for ev, _ in env.manager.events]
+    assert "requeue" in events
+
+
+def test_incremental_dag_spawn():
+    spawned = []
+
+    class Parent(Stage):
+        def run(self, ctx):
+            child = AddOne()
+            rt = self.get_region_template("P")
+            child.add_region_template(rt, "X", self.bindings[0].roi, Intent.INPUT,
+                                      read_storage="DMS")
+            child.add_region_template(rt, "Y", self.bindings[0].roi, Intent.OUTPUT,
+                                      storage="DMS")
+            spawned.append(ctx.spawn_stage(child, deps=[self]))
+
+    env, dms = _env()
+    rt = RegionTemplate("P")
+    x = rt.new_region("X", DOM, np.float32, input_storage="DMS", lazy=True)
+    data = np.ones((64, 64), np.float32)
+    dms.put(x.key, DOM, data)
+    p = Parent()
+    p.add_region_template(rt, "X", DOM, Intent.INPUT, read_storage="DMS")
+    env.execute_component(p)
+    env.startup_execution()
+    env.finalize_system()
+    assert spawned and spawned[0].state.name == "DONE"
+
+
+def test_zombie_execution_does_not_poison_retry():
+    """A stage killed AFTER it created its output region must retry
+    cleanly: the zombie's mutated template copy must never leak into the
+    retry (regression test for the thread-local template binding)."""
+    entered = []
+    release = []
+
+    class CreatesThenBlocks(Stage):
+        def run(self, ctx):
+            rt = self.get_region_template("P")
+            out = rt.new_region("Y", self.bindings[0].roi, np.float32)
+            entered.append(threading.get_ident())
+            if len(entered) == 1:  # first (to-be-killed) execution blocks
+                while not release:
+                    time.sleep(0.01)
+
+            def work():
+                out.set_data(np.ones(self.bindings[0].roi.shape, np.float32))
+
+            ctx.submit(Task("mk", cpu_fn=work))
+
+    env, dms = _env(heartbeat_timeout=10.0)
+    rt = RegionTemplate("P")
+    x = rt.new_region("X", DOM, np.float32, input_storage="DMS", lazy=True)
+    dms.put(x.key, DOM, np.zeros((64, 64), np.float32))
+    s = CreatesThenBlocks()
+    part = BoundingBox((0, 0), (32, 32))
+    s.add_region_template(rt, "X", part, Intent.INPUT, read_storage="DMS")
+    s.add_region_template(rt, "Y", part, Intent.OUTPUT, storage="DMS")
+    env.execute_component(s)
+
+    def killer():
+        while not entered:
+            time.sleep(0.01)
+        wid = s.worker
+        env.workers[wid].kill()  # dies after new_region, before finishing
+        time.sleep(0.05)
+        release.append(1)
+
+    threading.Thread(target=killer, daemon=True).start()
+    env.startup_execution()  # must NOT raise duplicate-region failures
+    env.finalize_system()
+    key = s.templates["P"].get("Y").key
+    assert (dms.get(key, part) == 1).all()
+    # the shared manager-side template was never polluted
+    assert "Y" not in rt.region_names() or rt.get("Y").empty()

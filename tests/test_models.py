@@ -1,0 +1,190 @@
+"""Model family behaviour: forward, prefill/decode==forward, MoE routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, encdec as ED, registry, spec, transformer as T
+
+BASE = dict(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=128, param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    remat="none",
+)
+
+FAMILIES = {
+    "dense": ModelConfig(name="d", family="dense", qk_norm=True, **BASE),
+    "relu2_ln": ModelConfig(name="n", family="dense", mlp_kind="relu2",
+                            norm_type="layernorm", **BASE),
+    "geglu_tied": ModelConfig(name="g", family="dense", mlp_kind="geglu",
+                              embed_scale=True, tie_embeddings=True, **BASE),
+    "moe": ModelConfig(name="m", family="moe", num_experts=4, experts_per_token=2,
+                       num_shared_experts=1, first_k_dense=1, dense_d_ff=128,
+                       capacity_factor=4.0, **BASE),
+    "mla": ModelConfig(name="mla", family="moe", attn_kind="mla", kv_lora_rank=32,
+                       qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+                       num_experts=4, experts_per_token=2, capacity_factor=4.0, **BASE),
+    "ssm": ModelConfig(name="s", family="ssm", ssm_state=16, ssm_headdim=16, **BASE),
+    "hybrid": ModelConfig(name="h", family="hybrid", window=8, num_global_layers=1,
+                          ssm_state=8, ssm_headdim=16, **{**BASE, "num_layers": 3}),
+}
+
+
+def _params(cfg, seed=1):
+    return spec.materialize(jax.random.key(seed), registry.abstract_params(cfg))
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_forward_shapes_and_finite(fam):
+    cfg = FAMILIES[fam]
+    params = _params(cfg)
+    toks = jnp.arange(2 * 16, dtype=jnp.int32).reshape(2, 16) % cfg.vocab
+    logits, aux = T.forward(params, toks, cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_prefill_decode_matches_forward(fam):
+    cfg = FAMILIES[fam]
+    params = _params(cfg)
+    rng = np.random.default_rng(0)
+    B, S, prompt = 2, 12, 6
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full, _ = T.forward(params, toks, cfg)
+    cache = T.init_cache(cfg, B, S + 2)
+    lp, cache = T.prefill(params, toks[:, :prompt], cfg, cache)
+    np.testing.assert_allclose(
+        np.asarray(lp[:, 0]), np.asarray(full[:, prompt - 1]), rtol=3e-4, atol=3e-4
+    )
+    for i in range(prompt, S):
+        ld, cache = T.decode_step(params, toks[:, i : i + 1], cfg, cache, jnp.asarray(i))
+        np.testing.assert_allclose(
+            np.asarray(ld[:, 0]), np.asarray(full[:, i]), rtol=5e-4, atol=5e-4
+        )
+
+
+def test_encdec_prefill_decode_matches_forward():
+    cfg = ModelConfig(name="e", family="encdec", enc_layers=2, cross_attention=True, **BASE)
+    params = _params(cfg)
+    rng = np.random.default_rng(0)
+    B, S, prompt = 2, 10, 5
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    frames = jnp.asarray(rng.standard_normal((B, 8, cfg.d_model)).astype(np.float32)) * 0.1
+    full, _ = ED.forward(params, frames, toks, cfg)
+    cache = ED.init_cache(cfg, B, S + 2, 8)
+    lp, cache = ED.prefill(params, frames, toks[:, :prompt], cfg, cache)
+    np.testing.assert_allclose(np.asarray(lp[:, 0]), np.asarray(full[:, prompt - 1]),
+                               rtol=3e-4, atol=3e-4)
+    for i in range(prompt, S):
+        ld, cache = ED.decode_step(params, toks[:, i : i + 1], cfg, cache, jnp.asarray(i))
+        np.testing.assert_allclose(np.asarray(ld[:, 0]), np.asarray(full[:, i]),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_vlm_prefix_shifts_logits():
+    cfg = ModelConfig(name="v", family="dense", frontend="patch", frontend_len=4, **BASE)
+    params = _params(cfg)
+    toks = jnp.arange(16, dtype=jnp.int32).reshape(1, 16) % cfg.vocab
+    pre = jnp.ones((1, 4, cfg.d_model), jnp.float32) * 0.02
+    logits, _ = T.forward(params, toks, cfg, prefix_embeds=pre)
+    assert logits.shape == (1, 20, cfg.vocab)
+
+
+def test_moe_routing_respects_topk_and_capacity():
+    cfg = FAMILIES["moe"]
+    from repro.models import layers as L
+
+    p = spec.materialize(jax.random.key(0), L.moe_spec(cfg))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 8, 64)), jnp.float32)
+    out, aux = L.moe_forward(p, x, cfg)
+    assert out.shape == x.shape
+    assert float(aux) >= 0.0
+    # capacity sanity: zero-capacity config must not crash, output may drop
+    tiny = cfg.replace(capacity_factor=0.01)
+    out2, _ = L.moe_forward(p, x, tiny)
+    assert out2.shape == x.shape
+
+
+def test_moe_matches_dense_per_token_oracle():
+    """Sort-based dispatch == naive per-token expert loop (big capacity)."""
+    cfg = ModelConfig(name="m0", family="moe", num_experts=4, experts_per_token=2,
+                      capacity_factor=8.0, **{**BASE, "num_layers": 1})
+    from repro.models import layers as L
+
+    p = spec.materialize(jax.random.key(3), L.moe_spec(cfg))
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 6, 64)), jnp.float32)
+    out, _ = L.moe_forward(p, x, cfg)
+
+    # oracle
+    xf = np.asarray(x).reshape(6, 64)
+    logits = xf @ np.asarray(p["router"], np.float64)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    want = np.zeros_like(xf)
+    for t in range(6):
+        top = np.argsort(-probs[t])[:2]
+        w = probs[t][top] / probs[t][top].sum()
+        for e, wi in zip(top, w):
+            h1 = xf[t] @ np.asarray(p["w1"][e], np.float64)
+            h3 = xf[t] @ np.asarray(p["w3"][e], np.float64)
+            h = h1 / (1 + np.exp(-h1)) * h3
+            want[t] += wi * (h @ np.asarray(p["w2"][e], np.float64))
+    np.testing.assert_allclose(np.asarray(out)[0], want, rtol=2e-3, atol=2e-3)
+
+
+def test_param_counts_match_published():
+    from repro.configs import get_config
+
+    expected = {
+        "qwen3-0.6b": (0.55e9, 0.65e9),
+        "gemma-2b": (2.4e9, 2.6e9),
+        "nemotron-4-340b": (330e9, 350e9),
+        "qwen3-moe-235b-a22b": (230e9, 240e9),
+        "deepseek-v2-lite-16b": (14e9, 17e9),
+        "mamba2-2.7b": (2.6e9, 2.9e9),
+        "hymba-1.5b": (1.4e9, 1.8e9),
+        "granite-20b": (19e9, 21.5e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = registry.count_params(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+    active = registry.count_active_params(get_config("qwen3-moe-235b-a22b"))
+    assert 20e9 <= active <= 24e9
+
+
+def test_grouped_moe_matches_global_dispatch():
+    """moe_groups > 1 (shard-local dispatch) == global dispatch when
+    capacity is ample — the §Perf collective fix must not change math."""
+    from repro.models import layers as L
+
+    base = dict(num_layers=1, d_model=32, num_heads=4, num_kv_heads=4, d_ff=64,
+                vocab=64, param_dtype=jnp.float32, compute_dtype=jnp.float32)
+    cfg_g = ModelConfig(name="m", family="moe", num_experts=4, experts_per_token=2,
+                        capacity_factor=16.0, moe_groups=2, **base)
+    cfg_1 = cfg_g.replace(moe_groups=1)
+    p = spec.materialize(jax.random.key(0), L.moe_spec(cfg_1))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 8, 32)), jnp.float32)
+    y1, a1 = L.moe_forward(p, x, cfg_1)
+    y2, a2 = L.moe_forward(p, x, cfg_g)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-5)
+
+
+def test_streaming_prefill_matches_masked_path_numerics():
+    """Prefill through the streaming attention path (attn_impl honored)
+    must equal the xla full-forward logits for every impl."""
+    cfg_x = FAMILIES["dense"].replace(attn_impl="xla")
+    cfg_c = FAMILIES["dense"].replace(attn_impl="chunked")
+    params = _params(cfg_x)
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, cfg_x.vocab, (2, 10)), jnp.int32)
+    full, _ = T.forward(params, toks, cfg_x)
+    for cfg in (cfg_x, cfg_c):
+        cache = T.init_cache(cfg, 2, 12)
+        lp, _ = T.prefill(params, toks, cfg, cache)
+        np.testing.assert_allclose(
+            np.asarray(lp[:, 0]), np.asarray(full[:, -1]), rtol=3e-4, atol=3e-4
+        )

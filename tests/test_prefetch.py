@@ -1,0 +1,25 @@
+"""3-phase prefetch pipeline (paper S3.2.1)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import DevicePipeline, prefetch_to_device
+
+
+def test_prefetch_preserves_order_and_values():
+    batches = [{"x": np.full((4,), i, np.float32)} for i in range(10)]
+    out = list(prefetch_to_device(iter(batches), depth=3))
+    assert len(out) == 10
+    for i, b in enumerate(out):
+        assert float(b["x"][0]) == i
+
+
+def test_device_pipeline_overlap_window():
+    import jax
+
+    fn = jax.jit(lambda b: {"y": b["x"] * 2})
+    pipe = DevicePipeline(fn, window=3)
+    batches = [{"x": np.full((8,), i, np.float32)} for i in range(7)]
+    outs = list(pipe.map(iter(batches)))
+    assert len(outs) == 7
+    assert all(float(o["y"][0]) == 2 * i for i, o in enumerate(outs))
+    assert pipe.stats == {"uploaded": 7, "computed": 7, "downloaded": 7}

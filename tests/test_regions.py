@@ -1,0 +1,91 @@
+"""Region template / data region semantics (paper S3.3)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BoundingBox,
+    DataRegion,
+    ElementType,
+    RegionKey,
+    RegionKind,
+    RegionTemplate,
+    StorageRegistry,
+)
+from repro.storage import DistributedMemoryStorage
+
+
+def test_template_bb_grows_to_minimum_cover():
+    rt = RegionTemplate("Patient")
+    rt.new_region("RGB", BoundingBox((0, 0), (50, 50)), np.float32)
+    assert rt.bb == BoundingBox((0, 0), (50, 50))
+    rt.new_region("Mask", BoundingBox((25, 25), (100, 80)), np.int32)
+    assert rt.bb == BoundingBox((0, 0), (100, 80))
+
+
+def test_versioning_latest_wins():
+    rt = RegionTemplate("P")
+    bb = BoundingBox((0, 0), (4, 4))
+    rt.new_region("RGB", bb, np.float32, timestamp=0, version=0)
+    rt.new_region("RGB", bb, np.float32, timestamp=0, version=1)
+    rt.new_region("RGB", bb, np.float32, timestamp=3, version=0)
+    assert rt.get("RGB").key.timestamp == 3
+    assert rt.get("RGB", timestamp=0).key.version == 1
+    assert rt.get("RGB", timestamp=0, version=0).key.version == 0
+    assert len(rt.versions("RGB")) == 3
+
+
+def test_duplicate_key_rejected():
+    rt = RegionTemplate("P")
+    bb = BoundingBox((0, 0), (4, 4))
+    rt.new_region("RGB", bb, np.float32)
+    with pytest.raises(ValueError):
+        rt.new_region("RGB", bb, np.float32)
+
+
+def test_lazy_instantiate_and_write_through_storage():
+    reg = StorageRegistry()
+    dom = BoundingBox((0, 0), (16, 16))
+    dms = reg.register(DistributedMemoryStorage(dom, (8, 8), 2, name="DMS"))
+    data = np.arange(256, dtype=np.float32).reshape(16, 16)
+    key = RegionKey("default", "RGB", ElementType.FLOAT32)
+    dms.put(key, dom, data)
+
+    rt = RegionTemplate("P")
+    r = rt.new_region("RGB", dom, np.float32, input_storage="DMS", lazy=True)
+    assert r.empty()
+    got = r.instantiate(reg)
+    assert np.array_equal(got, data)
+    assert r.stats["reads"] == 1
+
+    # ROI view + write-back with bumped version
+    roi = BoundingBox((4, 4), (12, 12))
+    view = r.with_roi(roi)
+    view.input_storage = "DMS"
+    view.instantiate(reg)
+    view.key = view.key.bump()
+    view.output_storage = "DMS"
+    view.set_data(np.asarray(view.data) + 1)
+    view.write(reg)
+    assert np.array_equal(dms.get(view.key, roi), data[4:12, 4:12] + 1)
+
+
+def test_pack_unpack_metadata_only():
+    rt = RegionTemplate("P", "ns")
+    bb = BoundingBox((0, 0), (8, 8))
+    r = rt.new_region("RGB", bb, np.uint8, data=np.zeros((8, 8), np.uint8),
+                      input_storage="DMS", output_storage="DISK")
+    blob = rt.pack()
+    rt2 = RegionTemplate.unpack(blob)
+    r2 = rt2.get("RGB")
+    assert r2.key == r.key and r2.bb == bb
+    assert r2.empty()  # payloads never ride the control channel
+    assert r2.input_storage == "DMS" and r2.output_storage == "DISK"
+    assert rt2.bb == rt.bb
+
+
+def test_elementtype_roundtrip():
+    import jax.numpy as jnp
+
+    for dt in (np.uint8, np.int32, np.int64, np.float32, np.float64, np.bool_, jnp.bfloat16):
+        et = ElementType.from_dtype(dt)
+        assert et.to_dtype() == np.dtype(dt)
