@@ -1,0 +1,159 @@
+"""Tiered staging vs. single-backend storage under the WSI access pattern.
+
+The WSI pipeline's storage traffic is tile-structured: a stage writes a
+tile-sized region, the downstream stage immediately reads it back, and
+re-analysis passes sweep the whole slide again later.  We replay that
+pattern against
+
+  * raw ``DiskStorage``      (every read pays the disk path),
+  * raw ``DistributedMemoryStorage``,
+  * ``TieredStore`` (bounded RAM -> DISK -> DMS) — the handoff read is
+    RAM-resident, the sweep shows promotion/demotion churn under a
+    memory budget of half the slide.
+
+Rows report per-op latency plus tier hit/promotion/demotion counters.
+Fast mode (``REPRO_BENCH_FAST=1``) shrinks the slide for CI smoke runs.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import BoundingBox, ElementType, RegionKey
+from repro.storage import DiskStorage, DistributedMemoryStorage, TieredStore
+
+FAST = bool(os.environ.get("REPRO_BENCH_FAST"))
+TILE = 128
+GRID = 3 if FAST else 6  # GRID x GRID tiles per slide
+SWEEPS = 2
+
+
+def _tiles(dom: BoundingBox):
+    return list(dom.tiles((TILE, TILE)))
+
+
+def _wsi_pattern(store) -> dict:
+    """Write every tile, read it back twice (stage handoff), then sweep."""
+    side = GRID * TILE
+    dom = BoundingBox((0, 0), (side, side))
+    rng = np.random.default_rng(0)
+    base = RegionKey("slide", "mask", ElementType.FLOAT32)
+    tiles = _tiles(dom)
+    payloads = [rng.random((TILE, TILE), np.float32) for _ in tiles]
+
+    t0 = time.perf_counter()
+    for i, bb in enumerate(tiles):
+        store.put(base.at(i), bb, payloads[i])
+    t_write = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for i, bb in enumerate(tiles):  # downstream stage reads the fresh tile
+        store.get(base.at(i), bb)
+        store.get(base.at(i), bb)
+    t_handoff = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for _ in range(SWEEPS):  # re-analysis sweeps
+        for i, bb in enumerate(tiles):
+            store.get(base.at(i), bb)
+    t_sweep = time.perf_counter() - t0
+
+    # warm set: a few tiles re-read until cache-resident, then measured
+    warm = list(enumerate(tiles))[:3]
+    for i, bb in warm:
+        store.get(base.at(i), bb)
+        store.get(base.at(i), bb)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        for i, bb in warm:
+            store.get(base.at(i), bb)
+    t_warm = time.perf_counter() - t0
+
+    n = len(tiles)
+    return {
+        "write_us": t_write * 1e6 / n,
+        "handoff_us": t_handoff * 1e6 / (2 * n),
+        "sweep_us": t_sweep * 1e6 / (SWEEPS * n),
+        "warm_us": t_warm * 1e6 / (5 * len(warm)),
+    }
+
+
+def run() -> list:
+    side = GRID * TILE
+    dom = BoundingBox((0, 0), (side, side))
+    tile_bytes = TILE * TILE * 4
+    rows = []
+
+    tmp_disk = tempfile.mkdtemp(prefix="bench_tiers_disk_")
+    disk = DiskStorage(tmp_disk, name="DISK")
+    r_disk = _wsi_pattern(disk)
+    rows.append(row("tiers_disk_write", r_disk["write_us"], "raw DiskStorage"))
+    rows.append(row("tiers_disk_read", r_disk["handoff_us"],
+                    f"sweep_us={r_disk['sweep_us']:.1f},warm_us={r_disk['warm_us']:.1f}"))
+
+    dms = DistributedMemoryStorage(dom, (TILE, TILE), 4, name="DMS")
+    r_dms = _wsi_pattern(dms)
+    rows.append(row("tiers_dms_read", r_dms["handoff_us"],
+                    f"write_us={r_dms['write_us']:.1f}"))
+
+    tmp_tier = tempfile.mkdtemp(prefix="bench_tiers_stack_")
+    tiered = TieredStore.standard(
+        dom,
+        (TILE, TILE),
+        root=tmp_tier,
+        mem_capacity_bytes=(GRID * GRID // 2 + 1) * tile_bytes,
+        promote_after=2,
+        write_policy="write_back",
+    )
+    r_tier = _wsi_pattern(tiered)
+    tiered.drain()
+    stats = tiered.tier_stats()
+    mem = stats["MEM"]
+    rows.append(row("tiers_tiered_write", r_tier["write_us"],
+                    "write_back(drained)"))
+    rows.append(row(
+        "tiers_tiered_read", r_tier["handoff_us"],
+        f"mem_hit_rate={mem.hit_rate:.2f},sweep_us={r_tier['sweep_us']:.1f},"
+        f"warm_us={r_tier['warm_us']:.1f}",
+    ))
+    rows.append(row(
+        "tiers_tiered_stats", 0.0,
+        f"hits={mem.hits},promotions={mem.promotions},"
+        f"demotions={mem.demotions},bytes_demoted={mem.bytes_demoted},"
+        f"flushes={stats['DMS'].flushes}",
+    ))
+    # acceptance: cache-resident reads must not lose to the raw disk
+    # path.  The margin is deliberately loose (1.5x): both sides are
+    # microsecond-scale wall timings and a CI scheduler hiccup must not
+    # fail the gate — real regressions here have been 10-75x.
+    ok = r_tier["warm_us"] <= r_disk["warm_us"] * 1.5
+    rows.append(row(
+        "tiers_warm_vs_disk", r_tier["warm_us"],
+        f"disk={r_disk['warm_us']:.1f}us,{'OK' if ok else 'REGRESSION'}",
+    ))
+
+    tiered.close()
+    shutil.rmtree(tmp_disk, ignore_errors=True)
+    shutil.rmtree(tmp_tier, ignore_errors=True)
+    return rows
+
+
+def main() -> None:
+    """CLI entry: unlike the aggregate harness, this is a CI gate — a
+    REGRESSION row fails the run so scripts/ci_smoke.sh can catch it."""
+    from benchmarks.common import emit
+
+    rows = run()
+    emit(rows)
+    bad = [r for r in rows if "REGRESSION" in r[2]]
+    if bad:
+        raise SystemExit(f"bench_tiers: {len(bad)} acceptance check(s) failed")
+
+
+if __name__ == "__main__":
+    main()

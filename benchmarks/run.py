@@ -28,6 +28,7 @@ from benchmarks import (
     bench_scaling,
     bench_scheduler,
     bench_stcache,
+    bench_tiers,
 )
 from benchmarks.common import emit
 
@@ -42,6 +43,7 @@ MODULES = [
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),
     ("sec7_stcache", bench_stcache),
+    ("tiered_staging", bench_tiers),
 ]
 
 

@@ -3,9 +3,14 @@ the hierarchical dataflow with PATS + DL + prefetch, masks persisted to
 the DISK store (I/O groups) for downstream analysis, and a fault injected
 mid-run to show checkpoint-free recovery via stage re-execution.
 
-  PYTHONPATH=src python examples/wsi_pipeline.py
+  PYTHONPATH=src python examples/wsi_pipeline.py [dms|tiered]
+
+Passing ``tiered`` swaps the flat DMS backends for TieredStore stacks
+(bounded RAM -> DISK -> DMS) under the same names — the stage wiring
+below does not change at all.
 """
 import shutil
+import sys
 import tempfile
 import threading
 import time
@@ -13,25 +18,27 @@ import time
 import numpy as np
 
 from repro.configs.wsi import WSIConfig
-from repro.core import BoundingBox, Intent, RegionTemplate, StorageRegistry
-from repro.pipeline import FeatureStage, SegmentationStage, make_slide
+from repro.core import BoundingBox, Intent, RegionTemplate
+from repro.pipeline import FeatureStage, SegmentationStage, make_slide, make_wsi_storage
 from repro.runtime import SchedulerConfig, SysEnv
-from repro.storage import DiskStorage, DistributedMemoryStorage
+from repro.storage import DiskStorage
 
 
 def main() -> None:
+    mode = sys.argv[1] if len(sys.argv) > 1 else "dms"
     tile = 96
     ty = tx = 3
     rgb, _ = make_slide(ty, tx, tile, seed=7)
     h, w = rgb.shape[1:]
     cfg = WSIConfig(seg_threshold=0.5, nucleus_roi=16)
     tmp = tempfile.mkdtemp(prefix="wsi_disk_")
+    tiers_root = tempfile.mkdtemp(prefix="wsi_tiers_")  # owned + cleaned here
 
-    registry = StorageRegistry()
+    registry = make_wsi_storage(h, w, mode=mode, tile=tile, root=tiers_root)
     dom3 = BoundingBox((0, 0, 0), (3, h, w))
     dom2 = BoundingBox((0, 0), (h, w))
-    dms3 = registry.register(DistributedMemoryStorage(dom3, (3, tile, tile), 4, name="DMS3"))
-    dms2 = registry.register(DistributedMemoryStorage(dom2, (tile, tile), 4, name="DMS2"))
+    dms3 = registry.get("DMS3")
+    dms2 = registry.get("DMS2")
     disk = registry.register(DiskStorage(tmp, transport="aggregated", io_group_size=2,
                                          queue_threshold=4, name="DISK"))
 
@@ -39,10 +46,20 @@ def main() -> None:
     rgb_region = rt.new_region("RGB", dom3, np.float32, input_storage="DMS3", lazy=True)
     dms3.put(rgb_region.key, dom3, rgb)
 
+    def tier_locality(key):
+        """region key -> tier name, across both tiered stacks."""
+        for name in ("DMS3", "DMS2"):
+            loc = getattr(registry.get(name), "locality", None)
+            if callable(loc):
+                tier = loc(key)
+                if tier is not None:
+                    return tier
+        return None
+
+    sched = SchedulerConfig(policy="PATS", data_locality=True, transfer_impact=0.3,
+                            locality_fn=tier_locality if mode == "tiered" else None)
     env = SysEnv(num_workers=3, cpus_per_worker=2, accels_per_worker=1,
-                 sched=SchedulerConfig(policy="PATS", data_locality=True,
-                                       transfer_impact=0.3),
-                 registry=registry, heartbeat_timeout=10.0)
+                 sched=sched, registry=registry, heartbeat_timeout=10.0)
     feats = []
     t0 = time.time()
     for part2 in dom2.tiles((tile, tile)):
@@ -83,7 +100,16 @@ def main() -> None:
           f"failure ({requeues} stage(s) requeued)")
     print(f"{objects} nuclei; masks persisted to DISK "
           f"({disk.stats.files_written} files, {disk.stats.bytes_written/1e6:.1f} MB)")
+    if mode == "tiered":
+        dms2.drain()
+        for name in ("DMS3", "DMS2"):
+            store = registry.get(name)
+            mem = store.tier_stats()["MEM"]
+            print(f"[{name}] MEM hit_rate={mem.hit_rate:.2f} "
+                  f"promotions={mem.promotions} demotions={mem.demotions}")
+            store.close()
     shutil.rmtree(tmp, ignore_errors=True)
+    shutil.rmtree(tiers_root, ignore_errors=True)
 
 
 if __name__ == "__main__":

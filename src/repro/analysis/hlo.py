@@ -52,6 +52,19 @@ _CALLED_RE = re.compile(
 )
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a one-element list of dicts (one per partition);
+    newer JAX returns the dict directly.  Always hand back a plain dict
+    (empty when XLA reports nothing).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
 def _shape_bytes(shape_str: str) -> int:
     total = 0
     for m in _SHAPE_RE.finditer(shape_str):

@@ -161,6 +161,21 @@ class StorageRegistry:
         with self._lock:
             return sorted(self._backends)
 
+    def locality(self, name: str, key: "RegionKey") -> str | None:
+        """Which layer of ``name`` holds ``key``.
+
+        Hierarchical backends (e.g. ``TieredStore``) answer with a tier
+        name ("MEM"/"DISK"/"DMS"); flat backends are their own single
+        tier, so their backend name is returned (informative for event
+        logs; tier pricing tables simply won't list it).  The Manager
+        uses this for locality-aware dispatch and per-input events.
+        """
+        backend = self.get(name)
+        loc = getattr(backend, "locality", None)
+        if callable(loc):
+            return loc(key)
+        return backend.name
+
 
 # A process-global registry; SysEnv (runtime.manager) populates it.
 STORAGE = StorageRegistry()

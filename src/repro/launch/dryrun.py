@@ -101,7 +101,7 @@ def run_cell(
         record["compile_s"] = round(time.time() - t1, 2)
         record["memory_analysis"] = _memory_analysis_dict(compiled)
 
-        ca = compiled.cost_analysis() or {}
+        ca = hlo_analysis.xla_cost_analysis(compiled)
         record["xla_cost_analysis"] = {
             "flops": float(ca.get("flops", 0.0)),
             "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

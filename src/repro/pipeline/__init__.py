@@ -6,6 +6,7 @@ from repro.pipeline.wsi import (
     analyze_tile,
     compute_features,
     extract_object_rois,
+    make_wsi_storage,
     segment_tile,
 )
 
@@ -17,5 +18,6 @@ __all__ = [
     "analyze_tile",
     "compute_features",
     "extract_object_rois",
+    "make_wsi_storage",
     "segment_tile",
 ]

@@ -16,6 +16,8 @@ pipeline runs the Pallas kernels on TPU and the jnp references on CPU.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 from typing import Any
 
 import jax
@@ -23,9 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.wsi import PAPER_OP_COSTS, PAPER_OP_SPEEDUPS, WSIConfig
-from repro.core import BoundingBox, Intent, RegionKind
+from repro.core import BoundingBox, Intent, RegionKind, StorageRegistry
 from repro.kernels import ops, ref
 from repro.runtime.dag import Stage, Task, TaskCost
+from repro.storage import DistributedMemoryStorage, PlacementPolicy, TieredStore
 
 
 # ---------------------------------------------------------------------------
@@ -98,12 +101,79 @@ def analyze_tile(rgb: jax.Array, cfg: WSIConfig, impl: str = "auto") -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Storage wiring: flat DMS baseline vs. opt-in tiered hierarchy
+# ---------------------------------------------------------------------------
+def make_wsi_storage(
+    h: int,
+    w: int,
+    *,
+    mode: str = "dms",
+    registry: StorageRegistry | None = None,
+    root: str | None = None,
+    tile: int | None = None,
+    num_servers: int = 4,
+    mem_capacity_bytes: int = 64 << 20,
+    write_policy: str = "write_through",
+    policy: PlacementPolicy | None = None,
+    promote_after: int = 2,
+) -> StorageRegistry:
+    """Build the storage backing the WSI stages under the canonical names
+    ("DMS3" for the (3, H, W) RGB volume, "DMS2" for the 2-D mask/hema
+    domain), so stage bindings never change.
+
+    ``mode="dms"`` is the paper baseline (one DMS per domain);
+    ``mode="tiered"`` swaps in :class:`TieredStore` stacks (bounded RAM
+    -> DISK -> DMS) behind the same names — the opt-in hierarchy with
+    zero call-site changes.
+
+    In tiered mode the DISK tiers live under ``root`` (subdirs per
+    store).  Pass your own ``root`` if you want to clean it up; the
+    default is a fresh ``tempfile.mkdtemp`` the caller owns (reachable
+    via each store's DISK backend: ``store.tiers[1].backend.root``).
+    """
+    registry = registry or StorageRegistry()
+    dom3 = BoundingBox((0, 0, 0), (3, h, w))
+    dom2 = BoundingBox((0, 0), (h, w))
+    blk = tile or max(h, w)
+    if mode == "dms":
+        registry.register(
+            DistributedMemoryStorage(dom3, (3, blk, blk), num_servers, name="DMS3")
+        )
+        registry.register(
+            DistributedMemoryStorage(dom2, (blk, blk), num_servers, name="DMS2")
+        )
+    elif mode == "tiered":
+        root = root or tempfile.mkdtemp(prefix="wsi_tiers_")
+        for name, dom, bshape in (
+            ("DMS3", dom3, (3, blk, blk)),
+            ("DMS2", dom2, (blk, blk)),
+        ):
+            registry.register(
+                TieredStore.standard(
+                    dom,
+                    bshape,
+                    root=os.path.join(root, name.lower()),
+                    name=name,
+                    mem_capacity_bytes=mem_capacity_bytes,
+                    num_servers=num_servers,
+                    write_policy=write_policy,
+                    policy=policy,
+                    promote_after=promote_after,
+                )
+            )
+    else:
+        raise ValueError(f"unknown storage mode {mode!r} (want 'dms' | 'tiered')")
+    return registry
+
+
+# ---------------------------------------------------------------------------
 # Region-template stages (paper Fig. 8)
 # ---------------------------------------------------------------------------
-def _task_cost(op: str, scale: float = 1.0) -> TaskCost:
+def _task_cost(op: str, scale: float = 1.0, input_bytes: int = 0) -> TaskCost:
     return TaskCost(
         cpu_s=PAPER_OP_COSTS.get(op, 1.0) * scale,
         speedup=PAPER_OP_SPEEDUPS.get(op, 1.0),
+        input_bytes=input_bytes,
     )
 
 
@@ -135,17 +205,26 @@ class SegmentationStage(Stage):
 
         results: dict[str, Any] = {}
 
-        def op(name, fn, deps=()):
+        def op(name, fn, deps=(), region_key=None, input_bytes=0):
             def work():
                 results[name] = fn()
 
             return ctx.submit(
-                Task(name, cpu_fn=work, accel_fn=work, deps=list(deps), cost=_task_cost(name))
+                Task(
+                    name,
+                    cpu_fn=work,
+                    accel_fn=work,
+                    deps=list(deps),
+                    cost=_task_cost(name, input_bytes=input_bytes),
+                    region_key=region_key,
+                )
             )
 
         t_deconv = op(
             "Color deconv.",
             lambda: ops.color_deconv(rgb, jnp.asarray(ref.stain_inverse()), impl=self.impl),
+            region_key=rgb_region.key,
+            input_bytes=rgb_region.nbytes,
         )
 
         def threshold():
@@ -216,7 +295,17 @@ class FeatureStage(Stage):
                 mask_region.data, hema_region.data, self.cfg
             )
 
-        t_rois = ctx.submit(Task("ObjectROIs", cpu_fn=rois, cost=_task_cost("BWLabel")))
+        t_rois = ctx.submit(
+            Task(
+                "ObjectROIs",
+                cpu_fn=rois,
+                cost=_task_cost(
+                    "BWLabel",
+                    input_bytes=mask_region.nbytes + hema_region.nbytes,
+                ),
+                region_key=mask_region.key,
+            )
+        )
 
         def feats():
             f = compute_features(results["rois"], self.cfg, self.impl)

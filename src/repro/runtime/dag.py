@@ -72,6 +72,7 @@ class Task:
         cost: TaskCost | None = None,
         produces: tuple[str, ...] = (),
         consumes: tuple[str, ...] = (),
+        region_key: Any = None,
     ) -> None:
         self.tid = next(_ids)
         self.name = name
@@ -89,6 +90,8 @@ class Task:
         self.cost = cost or TaskCost()
         self.produces = produces  # data ids this task outputs (DL)
         self.consumes = consumes  # data ids this task reads (DL)
+        # RegionKey of the input data region (tier-locality transfer costs)
+        self.region_key = region_key
         self.state = TaskState.PENDING
         self.result: Any = None
         self.error: BaseException | None = None

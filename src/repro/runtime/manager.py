@@ -133,6 +133,13 @@ class Worker:
                 local = region.with_roi(b.roi)
                 if b.read_storage:
                     local.input_storage = b.read_storage
+                    # record which storage layer serves this input
+                    # (observable consumption of the locality query)
+                    tier = self.registry.locality(b.read_storage, region.key)
+                    with self.manager._lock:
+                        self.manager.events.append(
+                            ("locality", (stage.sid, b.region, tier))
+                        )
                 local.instantiate(self.registry)
                 ctx.regions[(b.template, b.region)] = local
 
@@ -199,8 +206,21 @@ class Manager:
         max_retries: int = 2,
         speculative: bool = False,
         speculation_factor: float = 2.5,
+        registry: StorageRegistry | None = None,
     ) -> None:
         self.stages: dict[int, Stage] = {}
+        # storage registry for tier-locality-aware dispatch (optional):
+        # among equally-ready stages, prefer the one whose inputs sit in
+        # the fastest storage tier (cheapest staging transfer)
+        self.registry = registry
+        from repro.storage.tiers import TIER_BANDWIDTH
+
+        # overridden by SysEnv from SchedulerConfig.tier_bandwidth so
+        # dispatch and the WRM price tiers with the same table
+        self.tier_bandwidth: dict[str, float] = dict(TIER_BANDWIDTH)
+        # sticky: flips true once a hierarchical backend is registered,
+        # keeping flat-storage dispatch on the cheap first-ready path
+        self._locality_seen = False
         self.heartbeat_timeout = heartbeat_timeout
         self.max_retries = max_retries
         self.speculative = speculative
@@ -289,12 +309,62 @@ class Manager:
             worker.inbox.put(stage)
 
     def _pick_ready(self) -> Stage | None:
-        for s in self.stages.values():
-            if s.state == StageState.WAITING and all(
-                d.state == StageState.DONE for d in s.deps
-            ):
-                return s
-        return None
+        ready = [
+            s
+            for s in self.stages.values()
+            if s.state == StageState.WAITING
+            and all(d.state == StageState.DONE for d in s.deps)
+        ]
+        if not ready:
+            return None
+        if self.registry is None or len(ready) == 1 or not self._locality_available():
+            return ready[0]
+        # min() is stable: ties keep the original demand-driven order
+        return min(ready, key=self._staging_estimate)
+
+    def _locality_available(self) -> bool:
+        if self._locality_seen:
+            return True
+        try:
+            names = self.registry.names()
+        except Exception:  # noqa: BLE001 - registry shape is caller-defined
+            return False
+        for name in names:
+            if callable(getattr(self.registry.get(name), "locality", None)):
+                self._locality_seen = True
+                return True
+        return False
+
+    def _staging_estimate(self, stage: Stage) -> float:
+        """Virtual seconds to stage the stage's inputs, priced per tier.
+
+        Backends without a ``locality`` query contribute 0 (no
+        information), so flat-storage runs keep the original order.
+        """
+        total = 0.0
+        for b in stage.input_bindings():
+            if not b.read_storage:
+                continue
+            rt = stage.templates.get(b.template)
+            if rt is None:
+                continue
+            try:
+                backend = self.registry.get(b.read_storage)
+                region = rt.get(b.region)
+            except KeyError:
+                continue  # unknown backend / region produced upstream
+            # only hierarchical backends carry placement information; a
+            # flat backend whose *name* collides with a tier label must
+            # not be priced as that tier
+            if not callable(getattr(backend, "locality", None)):
+                continue
+            tier = backend.locality(region.key)
+            bw = self.tier_bandwidth.get(tier) if tier is not None else None
+            if bw:
+                # the stage stages only its bound ROI, not the whole region
+                roi_bytes = b.roi.volume * region.key.elem_type.to_dtype().itemsize
+                total += roi_bytes / bw
+        return total
 
     def _pick_straggler(self) -> Stage | None:
         """Speculative re-execution: duplicate the longest-running stage."""
@@ -358,8 +428,12 @@ class SysEnv:
     ) -> None:
         self.registry = registry or STORAGE
         self.manager = Manager(
-            speculative=speculative, heartbeat_timeout=heartbeat_timeout
+            speculative=speculative,
+            heartbeat_timeout=heartbeat_timeout,
+            registry=self.registry,
         )
+        if sched is not None:
+            self.manager.tier_bandwidth = dict(sched.tier_bandwidth)
         self.workers = [
             Worker(
                 w,

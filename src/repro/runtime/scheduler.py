@@ -28,9 +28,10 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import threading
-from typing import Iterable
+from typing import Callable, Iterable
 
 from repro.runtime.dag import DeviceKind, Task, TaskState
+from repro.storage.tiers import TIER_BANDWIDTH
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +56,37 @@ class SchedulerConfig:
     prefetch: bool = False  # Pref (simulator)
     transfer_impact: float = 0.2  # user-provided in the paper
     pcie_bandwidth: float = 8.0e9  # bytes/s, upload/download cost model
+    # tier-locality refinement: maps a task's region_key to the storage
+    # tier currently holding it (e.g. TieredStore.locality); tier names
+    # price the staging transfer.  None = the paper's flat cost model.
+    locality_fn: Callable | None = None
+    tier_bandwidth: dict = dataclasses.field(
+        default_factory=lambda: dict(TIER_BANDWIDTH)
+    )
+
+    def staging_cost(self, task: Task) -> float | None:
+        """Seconds to stage the task's input from its resident tier, or
+        None when locality is unknown (no refinement possible)."""
+        if self.locality_fn is None:
+            return None
+        key = getattr(task, "region_key", None)
+        if key is None:
+            return None
+        tier = self.locality_fn(key)
+        bw = self.tier_bandwidth.get(tier) if tier is not None else None
+        if bw is None:
+            return None
+        return task.cost.input_bytes / bw
+
+    def transfer_impact_for(self, task: Task) -> float:
+        """DL transfer impact, refined by tier locality when known:
+        memory-resident inputs are nearly free to move (impact -> 0),
+        DMS/DISK-resident inputs charge the modeled staging cost."""
+        staging = self.staging_cost(task)
+        if staging is None:
+            return self.transfer_impact
+        accel_s = task.cost.cpu_s / max(task.cost.speedup, 1e-9)
+        return min(0.95, staging / max(staging + accel_s, 1e-12))
 
 
 class ReadyQueue:
@@ -120,12 +152,15 @@ class ReadyQueue:
                 if cfg.policy == "FCFS":
                     return self.pop(best_reuse)
                 s_q, s_d = best.speedup, best_reuse.speedup
+                # impact of *not* reusing = cost of staging the queue-best
+                # task's data (tier-refined when locality is known)
+                impact = cfg.transfer_impact_for(best)
                 if kind == DeviceKind.ACCEL:
-                    if s_d >= s_q * (1.0 - cfg.transfer_impact):
+                    if s_d >= s_q * (1.0 - impact):
                         return self.pop(best_reuse)
                 else:
                     # CPU mirror: reuse unless it is much *better* on accel
-                    if s_d <= s_q / (1.0 - cfg.transfer_impact):
+                    if s_d <= s_q / (1.0 - impact):
                         return self.pop(best_reuse)
         return self.pop(best)
 
@@ -334,7 +369,11 @@ class SimulatedWRM:
                 if cfg.prefetch:
                     transfer = max(0.0, transfer - prev_compute[did])
                 accel_count[task.name] = accel_count.get(task.name, 0) + 1
-            duration = compute + transfer
+            # tier staging: inputs must reach host memory regardless of
+            # device; memory-resident data is near-free, DMS/DISK charge
+            # the modeled per-tier bandwidth (0.0 when unrefined)
+            staging = cfg.staging_cost(task) or 0.0
+            duration = compute + transfer + staging
             start = max(now, free_at[did])
             end = start + duration
             free_at[did] = end

@@ -1,9 +1,49 @@
-"""Global storage implementations for data regions (paper S4 + S7)."""
+"""Global storage implementations for data regions (paper S4 + S7).
+
+Storage hierarchy
+-----------------
+All backends implement the same ``StorageBackend`` protocol
+(``put``/``get``/``query``/``delete``), so stages never care where bytes
+live.  Picking one:
+
+* ``DistributedMemoryStorage`` (DMS) — in-memory, SFC-partitioned across
+  servers; the fastest *shared* layer.  Use for hot inter-stage exchange
+  when everything fits in aggregate RAM.
+* ``DiskStorage`` (DISK) — ADIOS-style chunked staging with I/O groups
+  and a crash-tolerant manifest.  Use for durable staging, checkpoints,
+  and payloads too large for memory.
+* ``SpatioTemporalCache`` — an LRU + motion-predictive prefetch *front*
+  for any single backend.  Use when one client re-reads a drifting ROI
+  stream (tracking workloads).
+* ``TieredStore`` — the automatic hierarchy (bounded RAM tier -> DISK ->
+  DMS) behind one name: read-through promotion, capacity-triggered
+  spill-down, write-through/write-back with ``flush()``/``drain()``, and
+  a ``PlacementPolicy`` hook (pin namespaces, size/dtype thresholds, ROI
+  spill granularity).  Prefer it whenever the working set is bigger than
+  any single layer or the access pattern is not known up front; its
+  ``locality(key)`` query also lets the runtime scheduler price
+  transfers per tier.
+"""
 from repro.storage.autotune import IOConfig, TuneResult, autotune_io
 from repro.storage.checkpoint import CheckpointManager
 from repro.storage.disk import DiskCostModel, DiskStats, DiskStorage
 from repro.storage.dms import DistributedMemoryStorage, InProcTransport, TransportStats
+from repro.storage.placement import (
+    Placement,
+    PlacementPolicy,
+    PlacementRule,
+    dtype_tier,
+    pin_namespace,
+    size_threshold,
+)
 from repro.storage.stcache import SpatioTemporalCache, STCacheStats
+from repro.storage.tiers import (
+    TIER_BANDWIDTH,
+    MemoryTier,
+    Tier,
+    TieredStore,
+    TierStats,
+)
 
 __all__ = [
     "CheckpointManager",
@@ -13,4 +53,20 @@ __all__ = [
     "DistributedMemoryStorage",
     "InProcTransport",
     "TransportStats",
+    "IOConfig",
+    "TuneResult",
+    "autotune_io",
+    "SpatioTemporalCache",
+    "STCacheStats",
+    "Placement",
+    "PlacementPolicy",
+    "PlacementRule",
+    "dtype_tier",
+    "pin_namespace",
+    "size_threshold",
+    "TIER_BANDWIDTH",
+    "MemoryTier",
+    "Tier",
+    "TieredStore",
+    "TierStats",
 ]

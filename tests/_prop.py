@@ -1,0 +1,71 @@
+"""Property-testing compat shim: real ``hypothesis`` when installed,
+otherwise skip-only stand-ins.
+
+The CI image does not always ship ``hypothesis``; a hard import in
+conftest/test modules would abort *collection* of the whole suite.  Route
+all property-test imports through this module::
+
+    from tests._prop import HAVE_HYPOTHESIS, given, settings, st
+
+When hypothesis is missing, ``@given(...)`` turns the test into a
+``pytest.skip`` and the ``st`` strategies namespace returns inert
+placeholders, so example-based tests in the same modules still run.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on hypothesis-less CI
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Inert placeholder accepted anywhere a strategy is expected."""
+
+        def __init__(self, name: str = "strategy") -> None:
+            self._name = name
+
+        def __call__(self, *a, **kw) -> "_Strategy":
+            return self
+
+        def __getattr__(self, attr: str) -> "_Strategy":
+            return _Strategy(f"{self._name}.{attr}")
+
+        def map(self, fn) -> "_Strategy":
+            return self
+
+        def filter(self, fn) -> "_Strategy":
+            return self
+
+        def __repr__(self) -> str:
+            return f"<{self._name} (hypothesis unavailable)>"
+
+    class _StrategiesModule:
+        def __getattr__(self, attr: str) -> _Strategy:
+            return _Strategy(f"st.{attr}")
+
+    st = _StrategiesModule()
+
+    def given(*_a, **_kw):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_a, **_kw):
+        """Decorator form is a no-op; profile registration is a no-op."""
+
+        def deco(fn):
+            return fn
+
+        return deco
+
+    settings.register_profile = lambda *a, **kw: None
+    settings.load_profile = lambda *a, **kw: None
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

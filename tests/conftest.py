@@ -1,10 +1,15 @@
 import os
+import sys
 
 # Tests run on the single real CPU device (the 512-device override is
 # dryrun-only, per the brief). Keep hypothesis deadlines off: CI boxes jit.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import settings
+# Make `from tests._prop import ...` work regardless of rootdir layout.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-settings.register_profile("ci", deadline=None, max_examples=25, derandomize=True)
-settings.load_profile("ci")
+from tests._prop import HAVE_HYPOTHESIS, settings
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile("ci", deadline=None, max_examples=25, derandomize=True)
+    settings.load_profile("ci")

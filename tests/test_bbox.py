@@ -1,8 +1,7 @@
 """BoundingBox unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given
-from hypothesis import strategies as st
+from tests._prop import given, st
 
 from repro.core import BoundingBox, union_all
 

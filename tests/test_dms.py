@@ -1,7 +1,6 @@
 """Distributed memory storage (DataSpaces analogue) tests."""
 import numpy as np
-from hypothesis import given
-from hypothesis import strategies as st
+from tests._prop import given, st
 
 from repro.core import BoundingBox, ElementType, RegionKey
 from repro.storage import DistributedMemoryStorage

@@ -1,6 +1,5 @@
 """Hilbert / Morton SFC property tests (DHT routing foundation)."""
-from hypothesis import given
-from hypothesis import strategies as st
+from tests._prop import given, st
 
 from repro.core import (
     hilbert_d2xy,

@@ -30,7 +30,7 @@ def test_scan_flops_exact():
     assert cost.flops == pytest.approx(L * 2 * B * D * D, rel=0.01)
     assert L in cost.while_trip_counts
     # XLA's own analysis counts the body once — ours must exceed it
-    xla_flops = comp.cost_analysis()["flops"]
+    xla_flops = H.xla_cost_analysis(comp)["flops"]
     assert cost.flops > 2 * xla_flops
 
 

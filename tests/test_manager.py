@@ -55,7 +55,7 @@ def test_e2e_pipeline_two_workers():
     key = stages[0].templates["P"].get("Y").key
     assert np.allclose(dms.get(key, DOM), data + 1)
     # demand-driven: both workers should have gotten work
-    dispatched = {w for ev, (sid, w) in env.manager.events if ev == "dispatch"}
+    dispatched = {pay[1] for ev, pay in env.manager.events if ev == "dispatch"}
     assert len(dispatched) >= 1
 
 

@@ -2,8 +2,7 @@
 import threading
 
 import pytest
-from hypothesis import given
-from hypothesis import strategies as st
+from tests._prop import given, st
 
 from repro.runtime import (
     DeviceKind,
