@@ -1,0 +1,94 @@
+"""Socket vs in-proc DMS transport: put/get throughput + metadata overhead.
+
+Replays the tile-exchange pattern of Fig. 13/14 against the same
+``DistributedMemoryStorage`` routing logic over both transports:
+
+  * ``InProcTransport`` — direct calls into local shards (the upper
+    bound: zero wire cost, virtual-time link model only);
+  * ``SocketTransport`` — framed TCP to live ``ServerProcess`` hosts
+    (2 processes x 2 shards), the real multi-host path.
+
+Rows report per-tile put/get wall latency, wire throughput (MB/s), and
+the metadata fraction of wire traffic (the paper's "metadata propagated,
+payload stays home" claim means this must stay small).  Fast mode
+(``REPRO_BENCH_FAST=1``) shrinks the grid for CI smoke runs.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import BoundingBox, ElementType, RegionKey
+from repro.storage import DistributedMemoryStorage, spawn_servers
+
+FAST = bool(os.environ.get("REPRO_BENCH_FAST"))
+TILE = 128
+GRID = 2 if FAST else 5
+NUM_SERVERS = 4
+PROCESSES = 2
+
+
+def _exchange(store: DistributedMemoryStorage, dom: BoundingBox) -> dict:
+    key = RegionKey("x", "Mask", ElementType.FLOAT32)
+    arr = np.random.default_rng(0).random((TILE, TILE)).astype(np.float32)
+    tiles = list(dom.tiles((TILE, TILE)))
+    t0 = time.perf_counter()
+    for box in tiles:
+        store.put(key, box, arr)
+    t_put = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for box in tiles:
+        store.get(key, box)
+    t_get = time.perf_counter() - t0
+    n = len(tiles)
+    moved = arr.nbytes * n
+    stats = store.transport.stats
+    meta_frac = stats.bytes_meta / max(stats.bytes_put + stats.bytes_get, 1)
+    return {
+        "put_us": t_put * 1e6 / n,
+        "get_us": t_get * 1e6 / n,
+        "put_mbs": moved / max(t_put, 1e-9) / 1e6,
+        "get_mbs": moved / max(t_get, 1e-9) / 1e6,
+        "meta_frac": meta_frac,
+        "meta_msgs": stats.meta_msgs,
+    }
+
+
+def run() -> list:
+    side = GRID * TILE
+    dom = BoundingBox((0, 0), (side, side))
+    rows = []
+
+    inproc = DistributedMemoryStorage(dom, (TILE, TILE), NUM_SERVERS, name="DMS")
+    r_in = _exchange(inproc, dom)
+    rows.append(row("transport_inproc_put", r_in["put_us"],
+                    f"{r_in['put_mbs']:.0f}MB/s"))
+    rows.append(row("transport_inproc_get", r_in["get_us"],
+                    f"{r_in['get_mbs']:.0f}MB/s"))
+
+    with spawn_servers(NUM_SERVERS, processes=PROCESSES) as group:
+        sock = DistributedMemoryStorage(
+            dom, (TILE, TILE), NUM_SERVERS, name="DMS", transport=group.transport()
+        )
+        r_so = _exchange(sock, dom)
+        sock.close()
+    rows.append(row("transport_socket_put", r_so["put_us"],
+                    f"{r_so['put_mbs']:.0f}MB/s,{PROCESSES}procs"))
+    rows.append(row("transport_socket_get", r_so["get_us"],
+                    f"{r_so['get_mbs']:.0f}MB/s"))
+    rows.append(row("transport_socket_meta", 0.0,
+                    f"meta_frac={r_so['meta_frac']:.4f},msgs={r_so['meta_msgs']}"))
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

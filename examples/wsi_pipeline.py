@@ -3,11 +3,13 @@ the hierarchical dataflow with PATS + DL + prefetch, masks persisted to
 the DISK store (I/O groups) for downstream analysis, and a fault injected
 mid-run to show checkpoint-free recovery via stage re-execution.
 
-  PYTHONPATH=src python examples/wsi_pipeline.py [dms|tiered]
+  PYTHONPATH=src python examples/wsi_pipeline.py [dms|tiered] [inproc|socket]
 
 Passing ``tiered`` swaps the flat DMS backends for TieredStore stacks
 (bounded RAM -> DISK -> DMS) under the same names — the stage wiring
-below does not change at all.
+below does not change at all.  Passing ``socket`` additionally puts the
+DMS servers in real subprocesses behind the TCP transport (see README
+"Multi-host DMS transport") — again with zero wiring changes.
 """
 import shutil
 import sys
@@ -26,6 +28,7 @@ from repro.storage import DiskStorage
 
 def main() -> None:
     mode = sys.argv[1] if len(sys.argv) > 1 else "dms"
+    transport = sys.argv[2] if len(sys.argv) > 2 else "inproc"
     tile = 96
     ty = tx = 3
     rgb, _ = make_slide(ty, tx, tile, seed=7)
@@ -34,7 +37,11 @@ def main() -> None:
     tmp = tempfile.mkdtemp(prefix="wsi_disk_")
     tiers_root = tempfile.mkdtemp(prefix="wsi_tiers_")  # owned + cleaned here
 
-    registry = make_wsi_storage(h, w, mode=mode, tile=tile, root=tiers_root)
+    registry = make_wsi_storage(h, w, mode=mode, transport=transport,
+                                tile=tile, root=tiers_root)
+    if transport == "socket":
+        print(f"DMS servers: {len(registry.server_group.procs)} processes, "
+              f"endpoints {registry.server_group.endpoints}")
     dom3 = BoundingBox((0, 0, 0), (3, h, w))
     dom2 = BoundingBox((0, 0), (h, w))
     dms3 = registry.get("DMS3")
@@ -108,6 +115,12 @@ def main() -> None:
             print(f"[{name}] MEM hit_rate={mem.hit_rate:.2f} "
                   f"promotions={mem.promotions} demotions={mem.demotions}")
             store.close()
+    elif transport == "socket":
+        for name in ("DMS3", "DMS2"):
+            registry.get(name).close()
+    group = getattr(registry, "server_group", None)
+    if group is not None:
+        group.close()
     shutil.rmtree(tmp, ignore_errors=True)
     shutil.rmtree(tiers_root, ignore_errors=True)
 

@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: diff a ``benchmarks.run --json`` report
+against the committed baseline and fail on latency regressions.
+
+Usage:
+    python scripts/bench_gate.py --run bench.json \
+        [--baseline benchmarks/baseline.json] [--tolerance 0.20]
+
+The baseline pins ``us_per_call`` for the gated metrics (the tiered
+read/write latencies and the socket transport path).  A metric fails
+when the measured latency exceeds
+
+    max(baseline * (1 + tolerance), floor_us)
+
+``tolerance`` defaults to 20% (a *relative* regression budget);
+``floor_us`` is a per-metric *absolute* allowance so microsecond-scale
+timings cannot fail on CI scheduler noise — real regressions on these
+paths have historically been 10-75x, far above both bars.  Missing
+metrics and failed benchmark modules also fail the gate.
+
+To re-baseline after an intentional perf change:
+    REPRO_BENCH_FAST=1 python -m benchmarks.run --json bench.json --only tiered_staging,transport
+    python scripts/bench_gate.py --run bench.json --rebaseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--run", required=True, help="JSON report from benchmarks.run --json")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=None,
+        help="relative regression budget (default: baseline file's, else 0.20)",
+    )
+    ap.add_argument(
+        "--rebaseline",
+        action="store_true",
+        help="rewrite the baseline's us_per_call from this run instead of gating",
+    )
+    args = ap.parse_args(argv)
+
+    run = load(args.run)
+    baseline = load(args.baseline)
+    tolerance = (
+        args.tolerance
+        if args.tolerance is not None
+        else float(baseline.get("tolerance", 0.20))
+    )
+    rows = {r["name"]: r for r in run.get("rows", [])}
+
+    if args.rebaseline:
+        missing = [n for n in baseline["metrics"] if n not in rows]
+        if missing:
+            # refuse to write a baseline with stale entries: they would
+            # fail every future gate run as "missing from run"
+            print(
+                f"bench_gate: refusing to rebaseline — metrics absent from "
+                f"the run: {missing} (renamed or removed? edit "
+                f"{args.baseline} first)",
+                file=sys.stderr,
+            )
+            return 1
+        for name, spec in baseline["metrics"].items():
+            spec["us_per_call"] = round(rows[name]["us_per_call"], 1)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2)
+            f.write("\n")
+        print(f"bench_gate: rebaselined {args.baseline}")
+        return 0
+
+    failures: list[str] = []
+    for tag in run.get("failed_modules", []):
+        failures.append(f"benchmark module {tag!r} failed")
+    for name, spec in baseline["metrics"].items():
+        base = float(spec["us_per_call"])
+        floor = float(spec.get("floor_us", 0.0))
+        allowed = max(base * (1.0 + tolerance), floor)
+        row = rows.get(name)
+        if row is None:
+            failures.append(f"{name}: missing from run (baseline {base:.1f}us)")
+            continue
+        got = float(row["us_per_call"])
+        verdict = "OK" if got <= allowed else "REGRESSION"
+        print(
+            f"bench_gate: {name:28s} {got:10.1f}us  baseline {base:10.1f}us  "
+            f"allowed {allowed:10.1f}us  {verdict}"
+        )
+        if verdict != "OK":
+            failures.append(
+                f"{name}: {got:.1f}us > allowed {allowed:.1f}us "
+                f"(baseline {base:.1f}us, tolerance {tolerance:.0%}, floor {floor:.0f}us)"
+            )
+    if failures:
+        print("bench_gate: FAILED", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"bench_gate: OK ({len(baseline['metrics'])} metrics within budget)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

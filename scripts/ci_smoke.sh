@@ -1,21 +1,35 @@
 #!/usr/bin/env bash
-# One-command PR gate: tier-1 tests + the tiered-staging benchmark in
-# fast mode.  Usage: ./scripts/ci_smoke.sh
+# One-command PR gate: tier-1 tests + benchmark perf gate.
+# Usage: ./scripts/ci_smoke.sh [bench-json-out]
+# (the benchmark JSON lands in $1, default bench.json — CI uploads it as
+# an artifact; scripts/bench_gate.py diffs it against the committed
+# benchmarks/baseline.json and fails on regression)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+BENCH_JSON="${1:-bench.json}"
 
 echo "== tier-1: pytest =="
-# Fail fast (-x) over the healthy set.  The deselected tests are
-# pre-existing environment/API drifts tracked in ROADMAP.md "Open items"
-# (jax.sharding.AxisType deprecation and friends), not regressions.
-python -m pytest -x -q \
-  --ignore=tests/test_cells.py \
-  --deselect tests/test_compression.py::test_compressed_psum_multi_device_subprocess \
-  --deselect tests/test_system.py::test_train_driver_end_to_end_with_restart
+# Fail fast (-x) over the healthy set.  The unhealthy set (pre-existing
+# environment/API drifts tracked in ROADMAP.md "Open items") is marked
+# `envdrift` and auto-skipped by tests/conftest.py, so plain pytest and
+# CI agree on what must be green.
+python -m pytest -x -q
 
-echo "== bench_tiers (fast) =="
-REPRO_BENCH_FAST=1 python -m benchmarks.bench_tiers
+echo "== benchmarks (fast) + perf gate =="
+bench_and_gate() {
+  REPRO_BENCH_FAST=1 python -m benchmarks.run \
+    --json "$BENCH_JSON" --only tiered_staging,transport \
+  && python scripts/bench_gate.py --run "$BENCH_JSON" \
+       --baseline benchmarks/baseline.json
+}
+# retry once: the gated paths include fsync-heavy I/O whose tail latency
+# on shared runners can transiently exceed the gate's absolute floors —
+# a real regression fails both runs
+if ! bench_and_gate; then
+  echo "ci_smoke: perf gate failed; retrying once to rule out an I/O stall"
+  bench_and_gate
+fi
 
 echo "ci_smoke: OK"

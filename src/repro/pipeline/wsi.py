@@ -108,10 +108,13 @@ def make_wsi_storage(
     w: int,
     *,
     mode: str = "dms",
+    transport: str = "inproc",
     registry: StorageRegistry | None = None,
     root: str | None = None,
     tile: int | None = None,
     num_servers: int = 4,
+    server_processes: int = 2,
+    endpoints=None,
     mem_capacity_bytes: int = 64 << 20,
     write_policy: str = "write_through",
     policy: PlacementPolicy | None = None,
@@ -126,21 +129,63 @@ def make_wsi_storage(
     -> DISK -> DMS) behind the same names — the opt-in hierarchy with
     zero call-site changes.
 
+    ``transport`` picks the DMS server link: ``"inproc"`` keeps the
+    in-process shards, ``"socket"`` puts the DMS tier on real TCP
+    servers.  With ``endpoints`` (a list of ``(host, port)`` / "host:port"
+    addresses, one per server id) the stores attach to an already-running
+    fleet; otherwise ``num_servers`` shards are spawned locally across
+    ``server_processes`` processes and the started
+    :class:`~repro.storage.net.ServerGroup` is attached to the returned
+    registry as ``registry.server_group`` — the caller owns it (close it
+    after closing the stores).
+
     In tiered mode the DISK tiers live under ``root`` (subdirs per
     store).  Pass your own ``root`` if you want to clean it up; the
     default is a fresh ``tempfile.mkdtemp`` the caller owns (reachable
     via each store's DISK backend: ``store.tiers[1].backend.root``).
     """
+    from repro.storage import SocketTransport, spawn_servers
+
     registry = registry or StorageRegistry()
     dom3 = BoundingBox((0, 0, 0), (3, h, w))
     dom2 = BoundingBox((0, 0), (h, w))
     blk = tile or max(h, w)
+    if transport not in ("inproc", "socket"):
+        raise ValueError(f"unknown transport {transport!r} (want 'inproc' | 'socket')")
+    if endpoints is not None:
+        if transport != "socket":
+            raise ValueError(
+                f"endpoints= only makes sense with transport='socket' (got "
+                f"transport={transport!r}); refusing to silently build "
+                f"in-process shards"
+            )
+        num_servers = len(endpoints)  # one server id per endpoint entry
+
+    def _transport(scope: str):
+        """One transport per store: shards are shared across stores, so
+        each store scopes its keyspace (and owns its connections)."""
+        if transport == "inproc":
+            return None
+        if endpoints is not None:
+            return SocketTransport(endpoints, scope=scope)
+        group = getattr(registry, "server_group", None)
+        if group is None:
+            group = spawn_servers(num_servers, processes=server_processes)
+            registry.server_group = group
+        return group.transport(scope=scope)
+
     if mode == "dms":
         registry.register(
-            DistributedMemoryStorage(dom3, (3, blk, blk), num_servers, name="DMS3")
+            DistributedMemoryStorage(
+                dom3, (3, blk, blk), num_servers, name="DMS3",
+                transport=_transport("DMS3"),
+            )
         )
         registry.register(
-            DistributedMemoryStorage(dom2, (blk, blk), num_servers, name="DMS2")
+            DistributedMemoryStorage(
+                dom2, (blk, blk), num_servers, name="DMS2",
+                transport=_transport("DMS2"),
+            )
         )
     elif mode == "tiered":
         root = root or tempfile.mkdtemp(prefix="wsi_tiers_")
@@ -159,6 +204,7 @@ def make_wsi_storage(
                     write_policy=write_policy,
                     policy=policy,
                     promote_after=promote_after,
+                    dms_transport=_transport(name),
                 )
             )
     else:

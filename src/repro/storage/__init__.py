@@ -8,7 +8,10 @@ live.  Picking one:
 
 * ``DistributedMemoryStorage`` (DMS) — in-memory, SFC-partitioned across
   servers; the fastest *shared* layer.  Use for hot inter-stage exchange
-  when everything fits in aggregate RAM.
+  when everything fits in aggregate RAM.  Its servers sit behind the
+  ``Transport`` message protocol: ``InProcTransport`` (in-process shards
+  + virtual-time link model) or ``SocketTransport`` (framed TCP to
+  ``ServerProcess`` hosts — the multi-host deployment).
 * ``DiskStorage`` (DISK) — ADIOS-style chunked staging with I/O groups
   and a crash-tolerant manifest.  Use for durable staging, checkpoints,
   and payloads too large for memory.
@@ -25,9 +28,20 @@ live.  Picking one:
   transfers per tier.
 """
 from repro.storage.autotune import IOConfig, TuneResult, autotune_io
-from repro.storage.checkpoint import CheckpointManager
 from repro.storage.disk import DiskCostModel, DiskStats, DiskStorage
-from repro.storage.dms import DistributedMemoryStorage, InProcTransport, TransportStats
+from repro.storage.dms import (
+    DistributedMemoryStorage,
+    InProcTransport,
+    Transport,
+    TransportStats,
+)
+from repro.storage.net import (
+    ServerGroup,
+    ServerProcess,
+    SocketTransport,
+    TransportError,
+    spawn_servers,
+)
 from repro.storage.placement import (
     Placement,
     PlacementPolicy,
@@ -52,7 +66,13 @@ __all__ = [
     "DiskStorage",
     "DistributedMemoryStorage",
     "InProcTransport",
+    "Transport",
     "TransportStats",
+    "ServerGroup",
+    "ServerProcess",
+    "SocketTransport",
+    "TransportError",
+    "spawn_servers",
     "IOConfig",
     "TuneResult",
     "autotune_io",
@@ -70,3 +90,14 @@ __all__ = [
     "TieredStore",
     "TierStats",
 ]
+
+
+def __getattr__(name: str):
+    # CheckpointManager pulls in jax at import time; loading it lazily
+    # keeps `python -m repro.storage.net` server processes jax-free (they
+    # only move numpy buffers) and fast to spawn.
+    if name == "CheckpointManager":
+        from repro.storage.checkpoint import CheckpointManager
+
+        return CheckpointManager
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

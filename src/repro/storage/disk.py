@@ -356,32 +356,30 @@ class DiskStorage:
 
     # -- read path ---------------------------------------------------------------------
     def get(self, key: RegionKey, roi: BoundingBox) -> np.ndarray:
+        from repro.storage.tiers import _assemble
+
         with self._lock:
             entries = list(self._index.get(key, []))
         if not entries:
             raise KeyError(f"DISK: no data for {key}")
-        out = None
-        covered = 0
-        for e in entries:
-            part = e.bb.intersect(roi)
-            if part.is_empty:
-                continue
+
+        def _read(e: _ManifestEntry) -> np.ndarray:
             path = os.path.join(self.root, e.file)
             with open(path, "rb") as f:
                 f.seek(e.offset)
                 raw = f.read(e.nbytes)
-            block = np.frombuffer(raw, dtype=np.dtype(e.dtype)).reshape(e.shape)
             with self._lock:
                 self.stats.bytes_read += e.nbytes
-            if out is None:
-                trailing = block.shape[e.bb.rank:]
-                out = np.zeros(roi.shape + trailing, dtype=block.dtype)
-            out[part.local_slices(roi)] = block[part.local_slices(e.bb)]
-            covered += part.volume
+            return np.frombuffer(raw, dtype=np.dtype(e.dtype)).reshape(e.shape)
+
+        pieces = ((e.bb, _read(e)) for e in entries if e.bb.intersects(roi))
+        out, covered = _assemble(pieces, roi)
         if out is None:
             raise KeyError(f"DISK: {key} has no chunks intersecting {roi}")
-        if covered < roi.volume:
-            raise KeyError(f"DISK: {key} covers only {covered}/{roi.volume} of {roi}")
+        if not covered.all():
+            raise KeyError(
+                f"DISK: {key} covers only {int(covered.sum())}/{roi.volume} of {roi}"
+            )
         return out
 
     def query(self, namespace: str, name: str) -> list[tuple[RegionKey, BoundingBox]]:

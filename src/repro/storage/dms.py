@@ -13,17 +13,25 @@ Faithful mechanics:
     may move data);
   * a get routes per-block requests to home servers and assembles the ROI.
 
-Servers here are thread-safe in-process shards behind a swappable
-``Transport`` so the same logic can ride a real network layer on a pod.
+Every server interaction goes through the message-based :class:`Transport`
+protocol (``store``/``fetch``/``put_meta``/``lookup``/``keys``/``drop``),
+so the same routing logic rides either
+
+  * :class:`InProcTransport` — thread-safe in-process shards plus a
+    virtual-time bandwidth model (reproduces the paper's throughput
+    experiments without wall-clock sleeps), or
+  * :class:`repro.storage.net.SocketTransport` — length-prefixed frames
+    over TCP to :class:`repro.storage.net.ServerProcess` hosts, the real
+    multi-host deployment.
+
 Every byte moved is accounted (puts, gets, metadata) for the benchmark
-suite; an optional virtual-time bandwidth model reproduces the paper's
-throughput experiments without wall-clock sleeps.
+suite in both cases.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Iterable
+from typing import Iterable, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -46,42 +54,49 @@ class TransportStats:
         self.bytes_put = self.bytes_get = self.bytes_meta = 0
 
 
-class InProcTransport:
-    """In-process stand-in for the RDMA layer; counts every byte moved.
+@runtime_checkable
+class Transport(Protocol):
+    """Message API between a DMS client and its storage servers.
 
-    ``link_bandwidth`` (bytes/s) and ``latency`` (s) feed a *virtual time*
-    model used by benchmarks (no sleeping): each message advances a
-    per-endpoint clock, and aggregate throughput is bytes / max(clock).
+    One method per wire message; ``server`` is the global server id
+    (0..num_servers).  Implementations route the message however they
+    like (direct call, TCP frame, RDMA verb) but must preserve these
+    semantics:
+
+      * ``fetch``/``lookup`` raise ``KeyError`` when the server does not
+        hold the requested data;
+      * arrays round-trip bit-exact with dtype and shape preserved;
+      * ``stats`` accounts every byte moved.
     """
 
-    def __init__(self, num_servers: int, link_bandwidth: float = 6.0e9, latency: float = 2e-6):
-        self.stats = TransportStats()
-        self.link_bandwidth = link_bandwidth
-        self.latency = latency
-        self._clock = [0.0] * num_servers
-        self._lock = threading.Lock()
+    num_servers: int
+    stats: TransportStats
 
-    def account(self, server: int, nbytes: int, op: str) -> None:
-        with self._lock:
-            if op == "put":
-                self.stats.puts += 1
-                self.stats.bytes_put += nbytes
-            elif op == "get":
-                self.stats.gets += 1
-                self.stats.bytes_get += nbytes
-            else:
-                self.stats.meta_msgs += 1
-                self.stats.bytes_meta += nbytes
-            self._clock[server] += self.latency + nbytes / self.link_bandwidth
+    def store(
+        self, server: int, key: RegionKey, block_coord: tuple, box: BoundingBox, payload: np.ndarray
+    ) -> None: ...
 
-    def virtual_time(self) -> float:
-        with self._lock:
-            return max(self._clock) if self._clock else 0.0
+    def fetch(self, server: int, key: RegionKey, block_coord: tuple) -> np.ndarray: ...
 
-    def reset(self) -> None:
-        with self._lock:
-            self.stats.reset()
-            self._clock = [0.0] * len(self._clock)
+    def put_meta(
+        self, server: int, key: RegionKey, block_coord: tuple, box: BoundingBox, home: int
+    ) -> None: ...
+
+    def put_meta_batch(
+        self, server: int, entries: list[tuple[RegionKey, tuple, BoundingBox, int]]
+    ) -> None: ...
+
+    def lookup(self, server: int, key: RegionKey) -> dict[tuple, tuple[BoundingBox, int]]: ...
+
+    def keys(self, server: int) -> list[RegionKey]: ...
+
+    def drop(self, server: int, key: RegionKey) -> None: ...
+
+    def payload_bytes(self, server: int) -> int: ...
+
+    def virtual_time(self) -> float: ...
+
+    def close(self) -> None: ...
 
 
 class _Server:
@@ -125,6 +140,88 @@ class _Server:
             return sum(b.nbytes for b in self._blocks.values())
 
 
+# Directory entries are small fixed-size records (key hash, coords, box,
+# home id); both transports charge this nominal size per metadata message.
+META_MSG_BYTES = 64
+
+
+class InProcTransport:
+    """In-process Transport: local ``_Server`` shards + byte accounting.
+
+    The RDMA stand-in.  ``link_bandwidth`` (bytes/s) and ``latency`` (s)
+    feed a *virtual time* model used by benchmarks (no sleeping): each
+    message advances a per-endpoint clock, and aggregate throughput is
+    bytes / max(clock).
+    """
+
+    def __init__(self, num_servers: int, link_bandwidth: float = 6.0e9, latency: float = 2e-6):
+        self.num_servers = int(num_servers)
+        self.stats = TransportStats()
+        self.link_bandwidth = link_bandwidth
+        self.latency = latency
+        self.servers = [_Server(i) for i in range(self.num_servers)]
+        self._clock = [0.0] * self.num_servers
+        self._lock = threading.Lock()
+
+    # -- accounting ---------------------------------------------------------------
+    def _account(self, server: int, nbytes: int, op: str) -> None:
+        with self._lock:
+            if op == "put":
+                self.stats.puts += 1
+                self.stats.bytes_put += nbytes
+            elif op == "get":
+                self.stats.gets += 1
+                self.stats.bytes_get += nbytes
+            else:
+                self.stats.meta_msgs += 1
+                self.stats.bytes_meta += nbytes
+            self._clock[server] += self.latency + nbytes / self.link_bandwidth
+
+    # -- Transport message API -----------------------------------------------------
+    def store(self, server, key, block_coord, box, payload) -> None:
+        self.servers[server].store(key, block_coord, box, payload)
+        self._account(server, payload.nbytes, "put")
+
+    def fetch(self, server, key, block_coord) -> np.ndarray:
+        block = self.servers[server].fetch(key, block_coord)
+        self._account(server, block.nbytes, "get")
+        return block
+
+    def put_meta(self, server, key, block_coord, box, home) -> None:
+        self.servers[server].put_meta(key, block_coord, box, home)
+        if server != home:  # the home server learns the entry for free
+            self._account(server, META_MSG_BYTES, "meta")
+
+    def put_meta_batch(self, server, entries) -> None:
+        for key, block_coord, box, home in entries:
+            self.put_meta(server, key, block_coord, box, home)
+
+    def lookup(self, server, key) -> dict[tuple, tuple[BoundingBox, int]]:
+        return self.servers[server].lookup(key)
+
+    def keys(self, server) -> list[RegionKey]:
+        return self.servers[server].keys()
+
+    def drop(self, server, key) -> None:
+        self.servers[server].drop(key)
+
+    def payload_bytes(self, server) -> int:
+        return self.servers[server].payload_bytes
+
+    # -- virtual time ---------------------------------------------------------------
+    def virtual_time(self) -> float:
+        with self._lock:
+            return max(self._clock) if self._clock else 0.0
+
+    def reset(self) -> None:
+        with self._lock:
+            self.stats.reset()
+            self._clock = [0.0] * len(self._clock)
+
+    def close(self) -> None:
+        pass
+
+
 class DistributedMemoryStorage:
     """The ``DMS`` global storage backend (StorageBackend protocol)."""
 
@@ -132,19 +229,30 @@ class DistributedMemoryStorage:
         self,
         domain: BoundingBox,
         block_shape: Iterable[int],
-        num_servers: int = 4,
+        num_servers: int | None = None,
         *,
         name: str = "DMS",
-        transport: InProcTransport | None = None,
+        transport: Transport | None = None,
     ) -> None:
         self.name = name
         self.domain = domain
         self.block_shape = tuple(int(b) for b in block_shape)
         if len(self.block_shape) != domain.rank:
             raise ValueError("block_shape rank != domain rank")
-        self.num_servers = int(num_servers)
-        self.transport = transport or InProcTransport(self.num_servers)
-        self._servers = [_Server(i) for i in range(self.num_servers)]
+        # num_servers defaults from the transport (or to 4 without one);
+        # an *explicit* count must agree with the transport's fleet size
+        self.transport: Transport = transport or InProcTransport(
+            4 if num_servers is None else int(num_servers)
+        )
+        self.num_servers = self.transport.num_servers
+        if (
+            transport is not None
+            and num_servers is not None
+            and int(num_servers) != self.num_servers
+        ):
+            raise ValueError(
+                f"num_servers={num_servers} != transport.num_servers={self.num_servers}"
+            )
         # --- virtual-domain construction (paper Fig. 9) ---
         self._grid = tuple(
             -(-s // b) for s, b in zip(domain.shape, self.block_shape)
@@ -157,6 +265,18 @@ class DistributedMemoryStorage:
         # compaction: sfc key -> contiguous virtual rank
         self._virtual_rank = {k: i for i, k in enumerate(keys)}
         self._virtual_size = len(keys)
+
+    @property
+    def _servers(self) -> list[_Server]:
+        """Local shard objects — only meaningful for in-process transports
+        (tests and white-box introspection; network transports have no
+        local servers)."""
+        servers = getattr(self.transport, "servers", None)
+        if servers is None:
+            raise AttributeError(
+                f"{self.name}: transport {type(self.transport).__name__} has no local servers"
+            )
+        return servers
 
     # -- routing ------------------------------------------------------------------
     def _block_coord(self, point: tuple[int, ...]) -> tuple[int, ...]:
@@ -194,70 +314,70 @@ class DistributedMemoryStorage:
         array = np.asarray(array)
         if tuple(array.shape)[: bb.rank] != bb.shape:
             raise ValueError(f"payload shape {array.shape} != bb shape {bb.shape}")
+        meta: list[tuple[RegionKey, tuple, BoundingBox, int]] = []
         for bc, blk_box in self._blocks_overlapping(bb):
             part = blk_box.intersect(bb)
             if part.is_empty:
                 continue
             payload = np.ascontiguousarray(array[part.local_slices(bb)])
             home = self.home_server(bc)
-            self._servers[home].store(key, bc, part, payload)
-            self.transport.account(home, payload.nbytes, "put")
-            # metadata propagation to every server (cheap, paper S5.4)
-            meta_bytes = 64
-            for srv in self._servers:
-                srv.put_meta(key, bc, part, home)
-                if srv.sid != home:
-                    self.transport.account(srv.sid, meta_bytes, "meta")
+            self.transport.store(home, key, bc, part, payload)
+            meta.append((key, bc, part, home))
+        # metadata propagation to every server (cheap, paper S5.4) —
+        # batched: one message per server per put, not per block, so a
+        # socket transport pays N round-trips instead of blocks x N
+        if meta:
+            for sid in range(self.num_servers):
+                self.transport.put_meta_batch(sid, meta)
 
     def get(self, key: RegionKey, roi: BoundingBox) -> np.ndarray:
+        from repro.storage.tiers import _assemble
+
         # any server's directory can answer the lookup; use server 0
-        directory = self._servers[0].lookup(key)
+        directory = self.transport.lookup(0, key)
         if not directory:
             raise KeyError(f"DMS: no data for {key}")
-        sample = None
-        out = None
-        covered = 0
-        for bc, (box, home) in directory.items():
-            part = box.intersect(roi)
-            if part.is_empty:
-                continue
-            block = self._servers[home].fetch(key, bc)
-            self.transport.account(home, block.nbytes, "get")
-            if out is None:
-                sample = block
-                trailing = block.shape[box.rank:]
-                out = np.zeros(roi.shape + trailing, dtype=block.dtype)
-            src = part.local_slices(box)
-            dst = part.local_slices(roi)
-            out[dst] = block[src]
-            covered += part.volume
+        pieces = [
+            (box, self.transport.fetch(home, key, bc))
+            for bc, (box, home) in directory.items()
+            if box.intersects(roi)
+        ]
+        out, covered = _assemble(pieces, roi)
         if out is None:
             raise KeyError(f"DMS: {key} has no blocks intersecting {roi}")
-        if covered < roi.volume:
+        if not covered.all():
             raise KeyError(
-                f"DMS: {key} covers only {covered}/{roi.volume} cells of {roi}"
+                f"DMS: {key} covers only {int(covered.sum())}/{roi.volume} cells of {roi}"
             )
         return out
 
     def query(self, namespace: str, name: str) -> list[tuple[RegionKey, BoundingBox]]:
         seen: dict[RegionKey, BoundingBox] = {}
-        for key in self._servers[0].keys():
+        for key in self.transport.keys(0):
             if key.namespace == namespace and key.name == name:
-                for box, _ in self._servers[0].lookup(key).values():
+                for box, _ in self.transport.lookup(0, key).values():
                     seen[key] = box if key not in seen else seen[key].union(box)
         return sorted(seen.items(), key=lambda kv: kv[0])
 
     def delete(self, key: RegionKey) -> None:
-        for srv in self._servers:
-            srv.drop(key)
+        for sid in range(self.num_servers):
+            self.transport.drop(sid, key)
+
+    def close(self) -> None:
+        """Release transport resources (sockets); in-proc is a no-op."""
+        self.transport.close()
 
     # -- stats -----------------------------------------------------------------
     def server_load(self) -> list[int]:
         """Payload bytes per server — balance check for the SFC partition."""
-        return [s.payload_bytes for s in self._servers]
+        return [self.transport.payload_bytes(s) for s in range(self.num_servers)]
 
     def aggregate_throughput(self) -> float:
-        """bytes moved / virtual time (paper Fig. 14 reports GB/s)."""
+        """bytes moved / transport time (paper Fig. 14 reports GB/s).
+
+        In-proc transports answer in virtual time (the paper's modeled
+        links); socket transports answer in measured wall time.
+        """
         t = self.transport.virtual_time()
         total = self.transport.stats.bytes_put + self.transport.stats.bytes_get
         return total / t if t > 0 else 0.0

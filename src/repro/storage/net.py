@@ -1,0 +1,670 @@
+"""Multi-host network layer for the DMS (paper S4.1's RDMA transport).
+
+The paper's DataSpaces deployment keeps payload blocks on their home
+servers and moves bytes between hosts over an RDMA transport; this module
+is the TCP equivalent, implementing the same :class:`~repro.storage.dms.
+Transport` message API as :class:`~repro.storage.dms.InProcTransport` so
+the two are drop-in swaps under :class:`~repro.storage.dms.
+DistributedMemoryStorage` (and therefore under the DMS tier of a
+:class:`~repro.storage.tiers.TieredStore`).
+
+Wire protocol (one request/response round-trip per message)::
+
+    frame    := u32 header_len | u64 payload_len | header | payload
+    header   := JSON (op, sid, key/coord/bb/home..., array meta)
+    payload  := raw little-endian array bytes (C order), only for
+                store requests and fetch responses
+
+Array payloads travel as ``header {shape, dtype} + raw buffer`` — no
+pickling, dtype and shape preserved bit-exact (including float16 /
+bfloat16 / empty arrays; non-contiguous inputs are compacted once on the
+sending side).
+
+Pieces:
+  * :class:`SocketTransport` — the client: one pipelined TCP connection
+    per server endpoint, thread-safe, every wire byte accounted in
+    ``TransportStats``.
+  * :class:`ServerProcess` — a subprocess handle that runs ``python -m
+    repro.storage.net`` hosting one or more ``_Server`` shards behind a
+    threaded socket loop (the standalone entry point documented in the
+    README).
+  * :func:`spawn_servers` — convenience: start N shards across M
+    processes and hand back a :class:`ServerGroup` with the endpoint
+    list, ready for ``SocketTransport``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import socket
+import socketserver
+import struct
+import subprocess
+import sys
+import threading
+import time
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core.bbox import BoundingBox
+from repro.core.regions import RegionKey
+from repro.storage.disk import _bb_from_json, _bb_to_json, _key_from_json, _key_to_json
+from repro.storage.dms import META_MSG_BYTES, TransportStats, _Server
+
+_PREFIX = struct.Struct("!IQ")  # header_len, payload_len
+
+
+class TransportError(ConnectionError):
+    """A wire-level failure (server down, connection reset, bad frame)."""
+
+
+# ---------------------------------------------------------------------------
+# framing + array codec
+# ---------------------------------------------------------------------------
+def _recv_exact(sock: socket.socket, n: int) -> bytearray:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        r = sock.recv_into(view[got:], n - got)
+        if r == 0:
+            raise TransportError("connection closed mid-frame")
+        got += r
+    return buf
+
+
+def send_frame(sock: socket.socket, header: dict, payload=b"") -> int:
+    """Send one frame; returns the number of bytes put on the wire."""
+    hbytes = json.dumps(header, separators=(",", ":")).encode()
+    plen = payload.nbytes if isinstance(payload, memoryview) else len(payload)
+    sock.sendall(_PREFIX.pack(len(hbytes), plen) + hbytes)
+    if plen:
+        sock.sendall(payload)
+    return _PREFIX.size + len(hbytes) + plen
+
+
+def recv_frame(sock: socket.socket) -> tuple[dict, bytearray, int]:
+    """Receive one frame; returns (header, payload, wire_bytes)."""
+    hlen, plen = _PREFIX.unpack(bytes(_recv_exact(sock, _PREFIX.size)))
+    header = json.loads(bytes(_recv_exact(sock, hlen)))
+    payload = _recv_exact(sock, plen) if plen else bytearray()
+    return header, payload, _PREFIX.size + hlen + plen
+
+
+def _dtype_from_str(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        # jax extended dtypes (bfloat16, float8_*) register with ml_dtypes
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def encode_array(arr: np.ndarray) -> tuple[dict, memoryview]:
+    """(meta, buffer): raw C-order bytes + {shape, dtype} — no pickling."""
+    arr = np.ascontiguousarray(arr)
+    meta = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    if not arr.nbytes:
+        return meta, memoryview(b"")
+    try:
+        return meta, arr.data.cast("B")  # zero-copy
+    except ValueError:
+        # extended dtypes (bfloat16, float8_*) refuse the buffer protocol
+        return meta, memoryview(arr.tobytes())
+
+
+def decode_array(meta: dict, payload: bytearray) -> np.ndarray:
+    dt = _dtype_from_str(meta["dtype"])
+    return np.frombuffer(payload, dtype=dt).reshape(tuple(meta["shape"]))
+
+
+# ---------------------------------------------------------------------------
+# client: SocketTransport
+# ---------------------------------------------------------------------------
+def _parse_endpoint(ep) -> tuple[str, int]:
+    if isinstance(ep, str):
+        host, _, port = ep.rpartition(":")
+        return host or "127.0.0.1", int(port)
+    host, port = ep
+    return str(host), int(port)
+
+
+_SCOPE_SEP = "\x1f"  # unit separator: cannot appear in a sane namespace
+
+
+class SocketTransport:
+    """Transport over framed TCP to one or more :class:`ServerProcess`es.
+
+    ``endpoints[i]`` is the address serving global server id ``i``; the
+    same address may appear for several ids when one process hosts
+    multiple shards.  One connection per distinct address, guarded by a
+    lock (requests to the same host serialize; different hosts proceed
+    concurrently).  A failed connection is dropped and re-dialed on the
+    next message, so a restarted server becomes reachable again — but the
+    failing message itself surfaces as :class:`TransportError`.
+
+    ``scope`` isolates keyspaces on a *shared* server fleet: every key is
+    namespace-prefixed on the wire and filtered/stripped on the way back,
+    so several stores (e.g. the WSI pipeline's DMS3 + DMS2) can share one
+    fleet without ``query``/``delete`` cross-contamination — matching the
+    isolation that separate ``InProcTransport`` instances give for free.
+    (``payload_bytes`` stays physical: it reports the server's total
+    resident bytes across scopes.)
+    """
+
+    def __init__(
+        self,
+        endpoints: Sequence,
+        *,
+        connect_timeout: float = 10.0,
+        op_timeout: float = 120.0,
+        scope: str | None = None,
+    ) -> None:
+        self.endpoints = [_parse_endpoint(e) for e in endpoints]
+        if not self.endpoints:
+            raise ValueError("SocketTransport needs at least one endpoint")
+        self.scope = scope
+        self.num_servers = len(self.endpoints)
+        self.stats = TransportStats()
+        self.connect_timeout = connect_timeout
+        self.op_timeout = op_timeout
+        self._conns: dict[tuple[str, int], socket.socket] = {}
+        self._conn_locks: dict[tuple[str, int], threading.Lock] = {
+            addr: threading.Lock() for addr in set(self.endpoints)
+        }
+        self._stats_lock = threading.Lock()
+        self._elapsed = 0.0
+        self._busy_until = 0.0  # interval-union bookkeeping for virtual_time
+
+    # -- connection management ----------------------------------------------------
+    def _connection(self, addr: tuple[str, int]) -> socket.socket:
+        sock = self._conns.get(addr)
+        if sock is not None:
+            return sock
+        try:
+            sock = socket.create_connection(addr, timeout=self.connect_timeout)
+        except OSError as e:
+            raise TransportError(f"cannot reach DMS server at {addr[0]}:{addr[1]}: {e}") from e
+        sock.settimeout(self.op_timeout)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._conns[addr] = sock
+        return sock
+
+    def _drop_connection(self, addr: tuple[str, int]) -> None:
+        sock = self._conns.pop(addr, None)
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def _request(self, server: int, header: dict, payload=b"") -> tuple[dict, bytearray, int]:
+        addr = self.endpoints[server]
+        t0 = time.perf_counter()
+        with self._conn_locks[addr]:
+            sock = self._connection(addr)
+            try:
+                wire = send_frame(sock, header, payload)
+                rheader, rpayload, rwire = recv_frame(sock)
+            except (OSError, TransportError) as e:
+                self._drop_connection(addr)
+                raise TransportError(
+                    f"DMS server {server} at {addr[0]}:{addr[1]} failed during "
+                    f"{header.get('op')!r}: {e}"
+                ) from e
+        t1 = time.perf_counter()
+        with self._stats_lock:
+            # union of in-flight intervals: concurrent requests to
+            # different hosts must not double-count wall time
+            start = max(t0, self._busy_until)
+            if t1 > start:
+                self._elapsed += t1 - start
+                self._busy_until = t1
+        if not rheader.get("ok"):
+            if rheader.get("etype") == "KeyError":
+                raise KeyError(rheader.get("msg", "remote KeyError"))
+            raise TransportError(
+                f"server {server} rejected {header.get('op')!r}: "
+                f"{rheader.get('etype')}: {rheader.get('msg')}"
+            )
+        return rheader, rpayload, wire + rwire
+
+    def _scoped(self, key: RegionKey) -> RegionKey:
+        if not self.scope:
+            return key
+        return dataclasses.replace(
+            key, namespace=self.scope + _SCOPE_SEP + key.namespace
+        )
+
+    def _unscoped(self, key: RegionKey) -> RegionKey | None:
+        """Strip the scope prefix; None for keys outside this scope."""
+        if not self.scope:
+            return key
+        prefix = self.scope + _SCOPE_SEP
+        if not key.namespace.startswith(prefix):
+            return None
+        return dataclasses.replace(key, namespace=key.namespace[len(prefix):])
+
+    def _account(self, op: str, nbytes: int) -> None:
+        with self._stats_lock:
+            if op == "put":
+                self.stats.puts += 1
+                self.stats.bytes_put += nbytes
+            elif op == "get":
+                self.stats.gets += 1
+                self.stats.bytes_get += nbytes
+            else:
+                self.stats.meta_msgs += 1
+                self.stats.bytes_meta += nbytes
+
+    # -- Transport message API -----------------------------------------------------
+    def store(self, server, key, block_coord, box, payload) -> None:
+        meta, buf = encode_array(np.asarray(payload))
+        header = {
+            "op": "store",
+            "sid": server,
+            "key": _key_to_json(self._scoped(key)),
+            "coord": list(block_coord),
+            "bb": _bb_to_json(box),
+            "array": meta,
+        }
+        _, _, wire = self._request(server, header, buf)
+        self._account("put", wire)
+
+    def fetch(self, server, key, block_coord) -> np.ndarray:
+        header = {
+            "op": "fetch",
+            "sid": server,
+            "key": _key_to_json(self._scoped(key)),
+            "coord": list(block_coord),
+        }
+        rheader, rpayload, wire = self._request(server, header)
+        self._account("get", wire)
+        return decode_array(rheader["array"], rpayload)
+
+    def put_meta(self, server, key, block_coord, box, home) -> None:
+        header = {
+            "op": "put_meta",
+            "sid": server,
+            "key": _key_to_json(self._scoped(key)),
+            "coord": list(block_coord),
+            "bb": _bb_to_json(box),
+            "home": home,
+        }
+        self._request(server, header)
+        self._account("meta", META_MSG_BYTES)
+
+    def put_meta_batch(self, server, entries) -> None:
+        """One frame carrying every directory record of a put — N
+        round-trips per put instead of blocks x N."""
+        header = {
+            "op": "put_meta_batch",
+            "sid": server,
+            "entries": [
+                [_key_to_json(self._scoped(key)), list(coord), _bb_to_json(box), home]
+                for key, coord, box, home in entries
+            ],
+        }
+        _, _, wire = self._request(server, header)
+        with self._stats_lock:
+            # one wire frame, len(entries) logical directory records
+            self.stats.meta_msgs += len(entries)
+            self.stats.bytes_meta += wire
+
+    def lookup(self, server, key) -> dict[tuple, tuple[BoundingBox, int]]:
+        header = {"op": "lookup", "sid": server, "key": _key_to_json(self._scoped(key))}
+        rheader, _, wire = self._request(server, header)
+        self._account("meta", wire)
+        return {
+            tuple(coord): (_bb_from_json(bb), home)
+            for coord, bb, home in rheader["blocks"]
+        }
+
+    def keys(self, server) -> list[RegionKey]:
+        rheader, _, wire = self._request(server, {"op": "keys", "sid": server})
+        self._account("meta", wire)
+        decoded = (self._unscoped(_key_from_json(k)) for k in rheader["keys"])
+        return [k for k in decoded if k is not None]
+
+    def drop(self, server, key) -> None:
+        self._request(
+            server, {"op": "drop", "sid": server, "key": _key_to_json(self._scoped(key))}
+        )
+        self._account("meta", META_MSG_BYTES)
+
+    def payload_bytes(self, server) -> int:
+        rheader, _, _ = self._request(server, {"op": "payload_bytes", "sid": server})
+        return int(rheader["nbytes"])
+
+    def ping(self, server: int) -> list[int]:
+        """Liveness probe; returns the shard ids the endpoint hosts."""
+        rheader, _, _ = self._request(server, {"op": "ping", "sid": server})
+        return list(rheader.get("sids", []))
+
+    # -- lifecycle / accounting ------------------------------------------------------
+    def virtual_time(self) -> float:
+        """Measured wall seconds during which at least one request was on
+        the wire (keeps ``aggregate_throughput`` meaningful over real
+        sockets, including multi-threaded clients)."""
+        with self._stats_lock:
+            return self._elapsed
+
+    def reset(self) -> None:
+        with self._stats_lock:
+            self.stats.reset()
+            self._elapsed = 0.0
+            self._busy_until = 0.0
+
+    def close(self) -> None:
+        for addr in list(self._conns):
+            self._drop_connection(addr)
+
+
+# ---------------------------------------------------------------------------
+# server: _Server shards behind a threaded socket loop
+# ---------------------------------------------------------------------------
+class _NetServer(socketserver.ThreadingTCPServer):
+    allow_reuse_address = True
+    daemon_threads = True
+
+    def __init__(self, address: tuple[str, int], sids: Iterable[int]) -> None:
+        self.shards: dict[int, _Server] = {int(s): _Server(int(s)) for s in sids}
+        super().__init__(address, _FrameHandler)
+
+    def dispatch(self, header: dict, payload: bytearray) -> tuple[dict, object]:
+        op = header.get("op")
+        if op == "ping":
+            return {"ok": True, "sids": sorted(self.shards)}, b""
+        sid = header.get("sid")
+        if sid not in self.shards:
+            raise ValueError(f"shard {sid} not hosted here (have {sorted(self.shards)})")
+        shard = self.shards[sid]
+        if op == "store":
+            shard.store(
+                _key_from_json(header["key"]),
+                tuple(header["coord"]),
+                _bb_from_json(header["bb"]),
+                decode_array(header["array"], payload),
+            )
+            return {"ok": True}, b""
+        if op == "fetch":
+            block = shard.fetch(_key_from_json(header["key"]), tuple(header["coord"]))
+            meta, buf = encode_array(block)
+            return {"ok": True, "array": meta}, buf
+        if op == "put_meta":
+            shard.put_meta(
+                _key_from_json(header["key"]),
+                tuple(header["coord"]),
+                _bb_from_json(header["bb"]),
+                int(header["home"]),
+            )
+            return {"ok": True}, b""
+        if op == "put_meta_batch":
+            for kj, coord, bbj, home in header["entries"]:
+                shard.put_meta(
+                    _key_from_json(kj), tuple(coord), _bb_from_json(bbj), int(home)
+                )
+            return {"ok": True}, b""
+        if op == "lookup":
+            blocks = shard.lookup(_key_from_json(header["key"]))
+            return {
+                "ok": True,
+                "blocks": [
+                    [list(coord), _bb_to_json(bb), home]
+                    for coord, (bb, home) in blocks.items()
+                ],
+            }, b""
+        if op == "keys":
+            return {"ok": True, "keys": [_key_to_json(k) for k in shard.keys()]}, b""
+        if op == "drop":
+            shard.drop(_key_from_json(header["key"]))
+            return {"ok": True}, b""
+        if op == "payload_bytes":
+            return {"ok": True, "nbytes": shard.payload_bytes}, b""
+        raise ValueError(f"unknown op {op!r}")
+
+
+class _FrameHandler(socketserver.BaseRequestHandler):
+    def handle(self) -> None:
+        sock: socket.socket = self.request
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        while True:
+            try:
+                header, payload, _ = recv_frame(sock)
+            except (TransportError, ConnectionError, OSError):
+                return  # client went away
+            try:
+                rheader, rpayload = self.server.dispatch(header, payload)
+            except Exception as e:  # noqa: BLE001 — every error crosses the wire
+                rheader, rpayload = (
+                    {"ok": False, "etype": type(e).__name__, "msg": str(e)},
+                    b"",
+                )
+            try:
+                send_frame(sock, rheader, rpayload)
+            except OSError:
+                return
+
+
+def serve(host: str = "127.0.0.1", port: int = 0, sids: Iterable[int] = (0,)) -> None:
+    """Run a shard host in the foreground (the ``python -m`` entry).
+
+    Prints ``REPRO_NET LISTENING <port>`` once bound so a parent process
+    (or an operator's script) can discover the ephemeral port.
+    """
+    server = _NetServer((host, port), sids)
+    print(f"REPRO_NET LISTENING {server.server_address[1]}", flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.server_close()
+
+
+# ---------------------------------------------------------------------------
+# process management
+# ---------------------------------------------------------------------------
+def _src_root() -> str:
+    # net.py lives at <src>/repro/storage/net.py
+    return os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+class ServerProcess:
+    """Handle on one shard-host subprocess (``python -m repro.storage.net``)."""
+
+    def __init__(
+        self,
+        sids: Iterable[int] = (0,),
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        startup_timeout: float = 60.0,
+    ) -> None:
+        self.sids = [int(s) for s in sids]
+        self.host = host
+        self.port = int(port)
+        self.startup_timeout = startup_timeout
+        self.proc: subprocess.Popen | None = None
+
+    @property
+    def address(self) -> tuple[str, int]:
+        return (self.host, self.port)
+
+    def start(self) -> "ServerProcess":
+        if self.proc is not None:
+            raise RuntimeError("ServerProcess already started")
+        env = os.environ.copy()
+        env["PYTHONPATH"] = _src_root() + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+        )
+        cmd = [
+            sys.executable,
+            "-u",
+            "-m",
+            "repro.storage.net",
+            "--host",
+            self.host,
+            "--port",
+            str(self.port),
+            "--sids",
+            ",".join(map(str, self.sids)),
+        ]
+        self.proc = subprocess.Popen(
+            cmd,
+            stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT,
+            env=env,
+            text=True,
+        )
+        # a reader thread feeds a queue so the deadline holds even when
+        # the child stays alive but silent (readline would block forever);
+        # after startup the same thread keeps the pipe drained
+        lines: "queue.Queue[str | None]" = queue.Queue()
+        threading.Thread(
+            target=self._drain, args=(self.proc.stdout, lines), daemon=True
+        ).start()
+        deadline = time.monotonic() + self.startup_timeout
+        banner: list[str] = []
+        while True:
+            try:
+                line = lines.get(timeout=max(deadline - time.monotonic(), 0.01))
+            except queue.Empty:
+                self.stop()
+                raise TransportError(
+                    f"DMS server startup timed out after {self.startup_timeout}s: "
+                    + "".join(banner[-20:])
+                ) from None
+            if line is None:
+                raise TransportError(
+                    f"DMS server failed to start (exit={self.proc.poll()}): "
+                    + "".join(banner[-20:])
+                )
+            if line.startswith("REPRO_NET LISTENING"):
+                self.port = int(line.split()[2])
+                break
+            banner.append(line)
+        return self
+
+    @staticmethod
+    def _drain(stream, lines: "queue.Queue") -> None:
+        try:
+            for line in stream:
+                lines.put(line)
+        except (ValueError, OSError):
+            pass
+        finally:
+            lines.put(None)
+
+    def alive(self) -> bool:
+        return self.proc is not None and self.proc.poll() is None
+
+    def stop(self, timeout: float = 5.0) -> None:
+        if self.proc is None:
+            return
+        if self.proc.poll() is None:
+            self.proc.terminate()
+            try:
+                self.proc.wait(timeout=timeout)
+            except subprocess.TimeoutExpired:
+                self.proc.kill()
+                self.proc.wait()
+
+    def kill(self) -> None:
+        """Hard-kill (crash simulation for restart tests)."""
+        if self.proc is not None and self.proc.poll() is None:
+            self.proc.kill()
+            self.proc.wait()
+
+    def __enter__(self) -> "ServerProcess":
+        return self.start() if self.proc is None else self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+class ServerGroup:
+    """A started fleet of shard hosts + the endpoint table for clients."""
+
+    def __init__(self, procs: list[ServerProcess], endpoints: list[tuple[str, int]]):
+        self.procs = procs
+        self.endpoints = endpoints
+
+    @property
+    def num_servers(self) -> int:
+        return len(self.endpoints)
+
+    def transport(self, **kw) -> SocketTransport:
+        return SocketTransport(self.endpoints, **kw)
+
+    def close(self) -> None:
+        for p in self.procs:
+            p.stop()
+
+    def __enter__(self) -> "ServerGroup":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def spawn_servers(
+    num_servers: int,
+    *,
+    processes: int | None = None,
+    host: str = "127.0.0.1",
+    startup_timeout: float = 60.0,
+) -> ServerGroup:
+    """Start ``num_servers`` shards spread over ``processes`` hosts.
+
+    Defaults to one process per shard (the fully distributed shape);
+    ``processes=M`` packs shards contiguously onto M processes, matching
+    a deployment where each node runs one server daemon with several
+    shards.
+    """
+    num_servers = int(num_servers)
+    if num_servers < 1:
+        raise ValueError("need at least one server")
+    processes = num_servers if processes is None else max(1, min(processes, num_servers))
+    per = -(-num_servers // processes)  # ceil
+    procs: list[ServerProcess] = []
+    endpoints: list[tuple[str, int] | None] = [None] * num_servers
+    try:
+        for p in range(processes):
+            sids = list(range(p * per, min((p + 1) * per, num_servers)))
+            if not sids:
+                break
+            sp = ServerProcess(sids, host=host, startup_timeout=startup_timeout).start()
+            procs.append(sp)
+            for sid in sids:
+                endpoints[sid] = sp.address
+    except Exception:
+        for sp in procs:
+            sp.stop()
+        raise
+    return ServerGroup(procs, endpoints)
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.storage.net",
+        description="Host DMS storage shards behind a TCP socket loop.",
+    )
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0, help="0 = pick an ephemeral port")
+    ap.add_argument(
+        "--sids", default="0", help="comma-separated global shard ids hosted here"
+    )
+    args = ap.parse_args(argv)
+    sids = [int(s) for s in args.sids.split(",") if s.strip() != ""]
+    serve(args.host, args.port, sids)
+
+
+if __name__ == "__main__":
+    main()

@@ -734,6 +734,10 @@ class TieredStore:
         self.flush()
         self._flushq.put(_FLUSH_STOP)
         self._flusher.join(timeout=2.0)
+        for tier in self.tiers:
+            backend_close = getattr(tier.backend, "close", None)
+            if callable(backend_close):
+                backend_close()  # e.g. DMS socket transports
 
     # -- introspection -------------------------------------------------------------
     def locality(self, key: RegionKey, *, probe: bool = False) -> str | None:
@@ -800,15 +804,26 @@ class TieredStore:
         write_policy: str = "write_through",
         promote_after: int = 2,
         disk_kwargs: dict | None = None,
+        dms_transport=None,
     ) -> "TieredStore":
-        """The paper-shaped stack: bounded RAM -> DISK (ADIOS-style) -> DMS."""
+        """The paper-shaped stack: bounded RAM -> DISK (ADIOS-style) -> DMS.
+
+        ``dms_transport`` swaps the DMS tier's server link: ``None`` keeps
+        the in-process shards, a :class:`~repro.storage.net.
+        SocketTransport` (or a pre-spawned ``ServerGroup().transport()``)
+        makes the bottom tier span hosts — demotion, write-back flush and
+        ``locality()`` are unchanged, only the bytes ride TCP.  The store
+        owns the transport: ``close()`` closes it.
+        """
         from repro.storage.disk import DiskStorage
         from repro.storage.dms import DistributedMemoryStorage
 
         mem = MemoryTier(name="MEM")
         disk = DiskStorage(root, name=f"{name}-DISK", **(disk_kwargs or {}))
         dms = DistributedMemoryStorage(
-            domain, block_shape, num_servers, name=f"{name}-DMS"
+            domain, block_shape,
+            num_servers if dms_transport is None else None,
+            name=f"{name}-DMS", transport=dms_transport,
         )
         return TieredStore(
             [

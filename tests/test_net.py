@@ -1,0 +1,435 @@
+"""Multi-host DMS transport: wire codec, Transport conformance, live
+ServerProcess round-trips, tiered staging over sockets, WSI on sockets."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BoundingBox, ElementType, RegionKey, StorageRegistry
+from repro.storage import (
+    DistributedMemoryStorage,
+    InProcTransport,
+    MemoryTier,
+    SocketTransport,
+    Tier,
+    TieredStore,
+    Transport,
+    TransportError,
+    spawn_servers,
+)
+from repro.storage.net import ServerProcess, decode_array, encode_array
+
+DOM = BoundingBox((0, 0), (64, 64))
+
+
+def _key(name="R", ts=0):
+    return RegionKey("t", name, ElementType.FLOAT32, ts)
+
+
+# ---------------------------------------------------------------------------
+# shared fleet: 4 shards across 2 real server processes
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def group():
+    g = spawn_servers(4, processes=2)
+    assert len(g.procs) == 2 and g.num_servers == 4
+    yield g
+    g.close()
+
+
+@pytest.fixture(params=["inproc", "socket"])
+def transport(request, group):
+    if request.param == "inproc":
+        tr = InProcTransport(4)
+        yield tr
+    else:
+        tr = group.transport()
+        # module-scoped servers: isolate tests by dropping our keys
+        yield tr
+        for sid in range(tr.num_servers):
+            for key in tr.keys(sid):
+                tr.drop(sid, key)
+        tr.close()
+
+
+# ---------------------------------------------------------------------------
+# wire codec
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "arr",
+    [
+        np.arange(12, dtype=np.float32).reshape(3, 4),
+        np.arange(12, dtype=np.float16).reshape(3, 4),
+        np.zeros((0, 5), np.float64),
+        np.arange(24, dtype=np.int64).reshape(2, 3, 4)[:, :, ::2],  # non-contiguous
+        np.asarray(np.random.default_rng(0).random((4, 4)) > 0.5),  # bool
+        np.arange(6, dtype=np.uint8).reshape(6, 1, 1),  # trailing dims
+    ],
+    ids=["f32", "f16", "empty", "noncontig", "bool", "trailing"],
+)
+def test_array_codec_roundtrip(arr):
+    meta, buf = encode_array(arr)
+    back = decode_array(meta, bytearray(buf))
+    assert back.dtype == arr.dtype
+    assert back.shape == arr.shape
+    np.testing.assert_array_equal(back, arr)
+
+
+def test_array_codec_bfloat16():
+    import jax.numpy as jnp
+
+    arr = np.asarray(jnp.arange(8, dtype=jnp.bfloat16).reshape(2, 4))
+    meta, buf = encode_array(arr)
+    back = decode_array(meta, bytearray(buf))
+    assert back.dtype == arr.dtype
+    np.testing.assert_array_equal(back.astype(np.float32), arr.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Transport conformance: InProcTransport and SocketTransport obey the same
+# message API (the drop-in-swap guarantee under DistributedMemoryStorage)
+# ---------------------------------------------------------------------------
+def test_transport_protocol_conformance(transport):
+    assert isinstance(transport, Transport)
+    assert transport.num_servers == 4
+    key = _key("conf")
+    box = BoundingBox((0, 0), (8, 8))
+    payload = np.random.default_rng(1).random((8, 8)).astype(np.float32)
+
+    # store/fetch round-trip on every server
+    for sid in range(transport.num_servers):
+        transport.store(sid, key, (sid, 0), box, payload)
+        got = transport.fetch(sid, key, (sid, 0))
+        assert got.dtype == payload.dtype and got.shape == payload.shape
+        np.testing.assert_array_equal(got, payload)
+
+    # fetch of an absent block raises KeyError (not a transport failure)
+    with pytest.raises(KeyError):
+        transport.fetch(0, _key("absent"), (9, 9))
+
+    # metadata: propagate to all, any directory answers, home preserved
+    for sid in range(transport.num_servers):
+        transport.put_meta(sid, key, (1, 2), box, home=3)
+    looked = transport.lookup(2, key)
+    assert looked[(1, 2)] == (box, 3)
+    assert key in transport.keys(2)
+
+    # batched metadata (what DMS.put sends): same directory semantics
+    box2 = BoundingBox((8, 8), (16, 16))
+    for sid in range(transport.num_servers):
+        transport.put_meta_batch(sid, [(key, (3, 4), box, 1), (key, (5, 6), box2, 2)])
+    looked = transport.lookup(0, key)
+    assert looked[(3, 4)] == (box, 1) and looked[(5, 6)] == (box2, 2)
+
+    # byte accounting is real on both transports
+    assert transport.stats.puts == 4
+    assert transport.stats.gets >= 4
+    assert transport.stats.bytes_put >= 4 * payload.nbytes
+    assert transport.stats.bytes_get >= 4 * payload.nbytes
+    assert transport.stats.meta_msgs >= 3
+    assert transport.payload_bytes(0) >= payload.nbytes
+
+    # drop removes payload + metadata
+    for sid in range(transport.num_servers):
+        transport.drop(sid, key)
+    assert key not in transport.keys(2)
+    with pytest.raises(KeyError):
+        transport.fetch(0, key, (0, 0))
+
+
+def test_dms_identical_results_over_both_transports(group):
+    arr = np.random.default_rng(2).random((64, 64)).astype(np.float32)
+    rois = [DOM, BoundingBox((3, 7), (41, 64)), BoundingBox((17, 0), (18, 53))]
+    results = []
+    for tr in (InProcTransport(4), group.transport()):
+        dms = DistributedMemoryStorage(DOM, (16, 16), 4, transport=tr)
+        dms.put(_key(), DOM, arr)
+        results.append([dms.get(_key(), roi) for roi in rois])
+        dms.delete(_key())
+        dms.close()
+    for a, b in zip(*results):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# DMS over live server processes
+# ---------------------------------------------------------------------------
+def test_dms_put_get_bit_exact_across_processes(group):
+    tr = group.transport()
+    dms = DistributedMemoryStorage(DOM, (16, 16), 4, transport=tr, name="NETDMS")
+    arr = np.random.default_rng(3).random((64, 64)).astype(np.float32)
+    dms.put(_key("net"), DOM, arr)
+    np.testing.assert_array_equal(dms.get(_key("net"), DOM), arr)
+    roi = BoundingBox((9, 21), (40, 60))
+    np.testing.assert_array_equal(dms.get(_key("net"), roi), arr[roi.slices()])
+    # payload landed on real remote shards, balanced by the SFC partition
+    load = dms.server_load()
+    assert sum(load) == arr.nbytes
+    assert min(load) > 0
+    # every server process hosts two shards of the fleet
+    assert sorted(tr.ping(0)) == [0, 1]
+    assert sorted(tr.ping(2)) == [2, 3]
+    dms.delete(_key("net"))
+    dms.close()
+
+
+def test_scoped_transports_isolate_stores_on_shared_fleet(group):
+    """Two stores sharing one server fleet must not see each other's keys
+    (the isolation separate InProcTransports give for free)."""
+    a = DistributedMemoryStorage(DOM, (16, 16), transport=group.transport(scope="A"))
+    b = DistributedMemoryStorage(DOM, (16, 16), transport=group.transport(scope="B"))
+    arr = np.ones((64, 64), np.float32)
+    a.put(_key("shared"), DOM, arr)
+    assert b.query("t", "shared") == []  # b cannot see a's regions
+    with pytest.raises(KeyError):
+        b.get(_key("shared"), DOM)
+    b.put(_key("shared"), DOM, 2 * arr)
+    b.delete(_key("shared"))  # must not destroy a's copy
+    np.testing.assert_array_equal(a.get(_key("shared"), DOM), arr)
+    a.delete(_key("shared"))
+    a.close()
+    b.close()
+
+
+def test_dms_query_and_versioning_over_socket(group):
+    tr = group.transport()
+    dms = DistributedMemoryStorage(DOM, (16, 16), 4, transport=tr)
+    dms.put(_key("v", ts=0), DOM, np.zeros((64, 64), np.float32))
+    dms.put(_key("v", ts=1), DOM, np.ones((64, 64), np.float32))
+    found = dms.query("t", "v")
+    assert [k.timestamp for k, _ in found] == [0, 1]
+    assert (dms.get(_key("v", ts=1), DOM) == 1).all()
+    dms.delete(_key("v", ts=0))
+    assert len(dms.query("t", "v")) == 1
+    dms.delete(_key("v", ts=1))
+    dms.close()
+
+
+def test_concurrent_put_get_hammer(group):
+    """Many threads sharing one SocketTransport against live servers."""
+    tr = group.transport()
+    dms = DistributedMemoryStorage(DOM, (16, 16), 4, transport=tr)
+    tiles = list(DOM.tiles((16, 16)))
+    rng = np.random.default_rng(4)
+    payloads = {i: rng.random((16, 16)).astype(np.float32) for i in range(len(tiles))}
+    errors = []
+
+    def worker(wid: int):
+        try:
+            key = _key(f"hammer{wid}")
+            for rep in range(3):
+                for i, bb in enumerate(tiles):
+                    dms.put(key.at(i), bb, payloads[i])
+                for i, bb in enumerate(tiles):
+                    np.testing.assert_array_equal(dms.get(key.at(i), bb), payloads[i])
+        except Exception as e:  # noqa: BLE001
+            errors.append((wid, e))
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(8)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    wall = time.perf_counter() - t0
+    assert not errors, errors
+    # virtual_time is the union of on-the-wire intervals: it can never
+    # exceed elapsed wall time, no matter how many threads overlap
+    assert tr.virtual_time() <= wall * 1.05
+    assert dms.aggregate_throughput() > 0
+    for w in range(8):
+        for i in range(len(tiles)):
+            dms.delete(_key(f"hammer{w}").at(i))
+    dms.close()
+
+
+def test_server_restart_error_surfacing():
+    """A killed server surfaces as TransportError; a fresh server on a new
+    port is reachable through a fresh transport."""
+    proc = ServerProcess([0]).start()
+    tr = SocketTransport([proc.address], connect_timeout=5.0, op_timeout=10.0)
+    box = BoundingBox((0, 0), (4, 4))
+    payload = np.ones((4, 4), np.float32)
+    tr.store(0, _key("crash"), (0, 0), box, payload)
+    np.testing.assert_array_equal(tr.fetch(0, _key("crash"), (0, 0)), payload)
+
+    proc.kill()
+    assert not proc.alive()
+    with pytest.raises((TransportError, ConnectionError)):
+        tr.fetch(0, _key("crash"), (0, 0))
+    # still down: reconnect attempt also surfaces, doesn't hang
+    with pytest.raises((TransportError, ConnectionError)):
+        tr.store(0, _key("crash"), (0, 0), box, payload)
+    tr.close()
+
+    fresh = ServerProcess([0]).start()
+    try:
+        tr2 = SocketTransport([fresh.address])
+        # restarted server is empty: data did not silently survive
+        with pytest.raises(KeyError):
+            tr2.fetch(0, _key("crash"), (0, 0))
+        tr2.store(0, _key("crash"), (0, 0), box, payload)
+        np.testing.assert_array_equal(tr2.fetch(0, _key("crash"), (0, 0)), payload)
+        tr2.close()
+    finally:
+        fresh.stop()
+
+
+# ---------------------------------------------------------------------------
+# tiered staging over the socket tier
+# ---------------------------------------------------------------------------
+def test_tiered_store_demotes_and_flushes_through_socket_tier(group, tmp_path):
+    tile_bytes = 16 * 16 * 4
+    store = TieredStore(
+        [
+            Tier("MEM", MemoryTier(name="MEM"), 2 * tile_bytes),
+            Tier(
+                "DMS",
+                DistributedMemoryStorage(
+                    DOM, (16, 16), 4, name="NET-DMS", transport=group.transport()
+                ),
+            ),
+        ],
+        name="NETTIER",
+        write_policy="write_back",
+    )
+    tiles = list(DOM.tiles((16, 16)))
+    rng = np.random.default_rng(5)
+    payloads = [rng.random((16, 16)).astype(np.float32) for _ in tiles]
+    keys = [_key("spill").at(i) for i in range(len(tiles))]
+    for k, bb, a in zip(keys, tiles, payloads):
+        store.put(k, bb, a)
+    store.flush()  # write-backs reach the socket tier
+    # capacity 2 tiles -> most keys were demoted over the wire
+    stats = store.tier_stats()
+    assert stats["MEM"].demotions > 0
+    assert store.used_bytes("MEM") <= 2 * tile_bytes
+    # every key still reads back bit-exact (MEM hit or socket fetch)
+    for k, bb, a in zip(keys, tiles, payloads):
+        np.testing.assert_array_equal(store.get(k, bb), a)
+    # the cold ones are DMS-resident and the network tier answers locality
+    locs = {store.locality(k) for k in keys}
+    assert "DMS" in locs
+    store.drain()  # push-down: bottom tier holds everything
+    for k in keys:
+        assert not store.dirty(k)
+    dms = store.tiers[1].backend
+    assert sum(dms.server_load()) >= len(tiles) * tile_bytes
+    for k in keys:
+        store.delete(k)
+    store.close()  # closes the socket transport too
+
+
+def test_make_wsi_storage_socket_tiered(group):
+    """The opt-in pipeline wiring: make_wsi_storage(mode='tiered',
+    transport='socket') against an already-running fleet."""
+    from repro.pipeline import make_wsi_storage
+
+    reg = make_wsi_storage(
+        64, 64, mode="tiered", transport="socket", endpoints=group.endpoints, tile=32
+    )
+    store3 = reg.get("DMS3")
+    dms3 = store3.tiers[2].backend
+    assert type(dms3.transport).__name__ == "SocketTransport"
+    key = RegionKey("t", "RGB", ElementType.FLOAT32)
+    dom3 = BoundingBox((0, 0, 0), (3, 64, 64))
+    rgb = np.random.default_rng(6).random((3, 64, 64)).astype(np.float32)
+    store3.put(key, dom3, rgb)
+    np.testing.assert_array_equal(store3.get(key, dom3), rgb)
+    store3.drain()  # reaches the socket-backed DMS tier
+    assert not store3.dirty(key)
+    store3.delete(key)
+    for name in ("DMS3", "DMS2"):
+        reg.get(name).close()
+
+    # endpoints without transport="socket" is a deployment mistake, not a
+    # silent fallback to in-process shards
+    with pytest.raises(ValueError, match="transport='socket'"):
+        make_wsi_storage(64, 64, mode="tiered", endpoints=group.endpoints)
+
+
+def test_wsi_pipeline_green_on_socket_transport(group):
+    """End-to-end: the RT two-stage pipeline over socket-backed storage
+    matches the plain-function pipeline."""
+    import jax.numpy as jnp
+
+    from repro.configs.wsi import WSIConfig
+    from repro.core import Intent, RegionTemplate
+    from repro.pipeline import FeatureStage, SegmentationStage, analyze_tile, make_tile
+    from repro.pipeline import make_wsi_storage
+    from repro.runtime import SysEnv
+
+    rgb, _ = make_tile(64, num_nuclei=4, seed=7)
+    h, w = rgb.shape[1:]
+    cfg = WSIConfig(seg_threshold=0.5, nucleus_roi=16)
+    plain = analyze_tile(jnp.asarray(rgb), cfg, impl="xla")
+
+    reg = make_wsi_storage(
+        h, w, mode="tiered", transport="socket", endpoints=group.endpoints
+    )
+    dom3 = BoundingBox((0, 0, 0), (3, h, w))
+    dom2 = BoundingBox((0, 0), (h, w))
+    rt = RegionTemplate("Patient")
+    rgb_region = rt.new_region("RGB", dom3, np.float32, input_storage="DMS3", lazy=True)
+    reg.get("DMS3").put(rgb_region.key, dom3, np.asarray(rgb))
+
+    env = SysEnv(num_workers=1, cpus_per_worker=2, accels_per_worker=1, registry=reg)
+    seg = SegmentationStage(cfg, impl="xla")
+    seg.add_region_template(rt, "RGB", dom3, Intent.INPUT, read_storage="DMS3")
+    seg.add_region_template(rt, "Mask", dom2, Intent.OUTPUT, storage="DMS2")
+    seg.add_region_template(rt, "Hema", dom2, Intent.OUTPUT, storage="DMS2")
+    feat = FeatureStage(cfg, impl="xla")
+    feat.add_region_template(rt, "Mask", dom2, Intent.INPUT, read_storage="DMS2")
+    feat.add_region_template(rt, "Hema", dom2, Intent.INPUT, read_storage="DMS2")
+    feat.add_dependency(seg)
+    env.execute_component(seg)
+    env.execute_component(feat)
+    env.startup_execution()
+    env.finalize_system()
+
+    mask_key = seg.templates["Patient"].get("Mask").key
+    got_mask = reg.get("DMS2").get(mask_key, dom2)
+    np.testing.assert_array_equal(got_mask, np.asarray(plain["labels"]))
+    feats_region = feat.templates["Patient"].get("Features")
+    np.testing.assert_allclose(
+        feats_region.data["features"], plain["features"], rtol=1e-4, atol=1e-4
+    )
+    for name in ("DMS3", "DMS2"):
+        reg.get(name).close()
+
+
+# ---------------------------------------------------------------------------
+# regression: overlapping re-put chunks must not double-count coverage
+# (ROADMAP open item: per-chunk volume counters -> mask-based _assemble)
+# ---------------------------------------------------------------------------
+def test_disk_overlap_coverage_is_mask_based(tmp_path):
+    """Two overlapping puts whose volumes sum to the ROI volume but leave
+    a hole: the old per-chunk counters accepted this and served zeros."""
+    from repro.storage import DiskStorage
+
+    disk = DiskStorage(str(tmp_path), name="DISK")
+    a = np.ones((32, 64), np.float32)
+    disk.put(_key("hole"), BoundingBox((0, 0), (32, 64)), a)
+    disk.put(_key("hole"), BoundingBox((16, 0), (48, 64)), a)
+    # chunk volumes sum to 64*64 == DOM volume, but rows 48..64 are a hole
+    with pytest.raises(KeyError):
+        disk.get(_key("hole"), DOM)
+    got = disk.get(_key("hole"), BoundingBox((0, 0), (48, 64)))
+    assert (got == 1).all()
+
+
+def test_dms_partial_coverage_still_raises(group):
+    """Same contract over both transports: holes surface as KeyError."""
+    for tr in (InProcTransport(4), group.transport()):
+        dms = DistributedMemoryStorage(DOM, (16, 16), 4, transport=tr)
+        a = np.ones((32, 64), np.float32)
+        dms.put(_key("hole"), BoundingBox((0, 0), (32, 64)), a)
+        dms.put(_key("hole"), BoundingBox((16, 0), (48, 64)), a)
+        # covered rows: 0..48 of 64 -> full-domain read must fail
+        with pytest.raises(KeyError):
+            dms.get(_key("hole"), DOM)
+        got = dms.get(_key("hole"), BoundingBox((0, 0), (48, 64)))
+        assert (got == 1).all()
+        dms.delete(_key("hole"))
+        dms.close()
