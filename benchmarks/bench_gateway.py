@@ -1,0 +1,146 @@
+"""Region gateway: coalesced shared reads vs naive per-client reads.
+
+Many clients reading overlapping ROI windows of one region is the
+serving-path analogue of the paper's inter-stage exchange (Fig. 13/14):
+the interesting cost is transport round-trips, not wall-clock.  This
+module replays the same overlapping read mix two ways against a
+DMS-tier store over BOTH transports:
+
+  * naive   — every read goes straight to the store: one ``lookup`` +
+    one scatter-gather ``fetch_many`` per touched server, per read;
+  * gateway — the reads are queued on a ``RegionGateway`` and drained
+    by its worker pool, which merges overlapping/adjacent ROIs into
+    windows and issues one store read per window.
+
+The round-trip counts come from ``TransportStats`` (gets + meta_msgs),
+and the module FAILS (which fails the benchmark harness and therefore
+the CI gate) if the gateway does not issue strictly fewer round-trips
+than the naive replay.  Fast mode (``REPRO_BENCH_FAST=1``) shrinks the
+mix for CI smoke runs.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import BoundingBox, ElementType, RegionKey
+from repro.serve.gateway import GatewayConfig, RegionGateway
+from repro.storage import DistributedMemoryStorage, Tier, TieredStore, spawn_servers
+
+FAST = bool(os.environ.get("REPRO_BENCH_FAST"))
+TILE = 128
+GRID = 4 if FAST else 8
+CLIENTS = 4 if FAST else 8
+READS = 6 if FAST else 20
+WINDOW = 160
+
+
+def _read_mix(side: int) -> list[BoundingBox]:
+    """CLIENTS x READS overlapping windows: a shared hot band plus a
+    deterministic scatter (heavy cross-client overlap, like concurrent
+    stages sweeping the same slide)."""
+    rng = np.random.default_rng(2)
+    rois = []
+    for c in range(CLIENTS):
+        for r in range(READS):
+            if r % 2 == 0:
+                y, x = (r * 32) % (side - WINDOW), 64
+            else:
+                y = int(rng.integers(0, side - WINDOW))
+                x = int(rng.integers(0, side - WINDOW))
+            rois.append(BoundingBox((y, x), (y + WINDOW, x + WINDOW)))
+    return rois
+
+
+def _round_trips(transport) -> int:
+    return transport.stats.gets + transport.stats.meta_msgs
+
+
+def _measure(transport_name: str, dms: DistributedMemoryStorage) -> list:
+    side = GRID * TILE
+    dom = BoundingBox((0, 0), (side, side))
+    key = RegionKey("bench", "Slide", ElementType.FLOAT32)
+    slide = np.random.default_rng(0).random((side, side)).astype(np.float32)
+    # single DMS tier: every read pays the transport, so the frame counts
+    # isolate exactly what coalescing saves (no promotion noise)
+    store = TieredStore([Tier("DMS", dms)], name="GW-BENCH")
+    for tile in dom.tiles((TILE, TILE)):
+        store.put(key, tile, slide[tile.slices()])
+    rois = _read_mix(side)
+    transport = dms.transport
+
+    transport.reset()
+    t0 = time.perf_counter()
+    for roi in rois:
+        store.get(key, roi)
+    naive_wall = time.perf_counter() - t0
+    naive_rtts = _round_trips(transport)
+
+    # max_queue must admit the whole paused burst (160 reads in full mode)
+    gw = RegionGateway(
+        store,
+        config=GatewayConfig(workers=2, batch_window=64, max_queue=len(rois)),
+    )
+    gw.pause()  # queue the whole burst so the drain is maximally batched
+    tickets = [gw.submit(key, roi) for roi in rois]
+    transport.reset()
+    t0 = time.perf_counter()
+    gw.resume()
+    outs = [t.result(120.0) for t in tickets]
+    gw_wall = time.perf_counter() - t0
+    gw_rtts = _round_trips(transport)
+    for roi, out in zip(rois, outs):
+        if not np.array_equal(out, slide[roi.slices()]):
+            raise RuntimeError(f"gateway read mismatch at {roi} ({transport_name})")
+    if gw_rtts >= naive_rtts:
+        raise RuntimeError(
+            f"gateway coalescing regression ({transport_name}): "
+            f"{gw_rtts} round-trips not fewer than naive {naive_rtts}"
+        )
+    stats = gw.stats
+    gw.close(close_store=False)
+    store.close()
+
+    n = len(rois)
+    return [
+        row(
+            f"gateway_{transport_name}_naive",
+            naive_wall * 1e6 / n,
+            f"rtts={naive_rtts}",
+        ),
+        row(
+            f"gateway_{transport_name}_read",
+            gw_wall * 1e6 / n,
+            f"rtts={gw_rtts},{naive_rtts / gw_rtts:.1f}x_fewer,"
+            f"windows={stats.windows},coalesced={stats.coalesced}",
+        ),
+    ]
+
+
+def run() -> list:
+    side = GRID * TILE
+    dom = BoundingBox((0, 0), (side, side))
+    rows = _measure(
+        "inproc", DistributedMemoryStorage(dom, (TILE, TILE), 4, name="DMS")
+    )
+    with spawn_servers(4, processes=2) as group:
+        rows += _measure(
+            "socket",
+            DistributedMemoryStorage(
+                dom, (TILE, TILE), 4, name="DMS", transport=group.transport()
+            ),
+        )
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ import traceback
 from benchmarks import (
     bench_disk_groups,
     bench_dms_vs_disk,
+    bench_gateway,
     bench_kernels,
     bench_op_speedups,
     bench_overhead,
@@ -50,6 +51,7 @@ MODULES = [
     ("sec7_stcache", bench_stcache),
     ("tiered_staging", bench_tiers),
     ("transport", bench_transport),
+    ("gateway", bench_gateway),
 ]
 
 

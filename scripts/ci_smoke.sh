@@ -11,16 +11,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 BENCH_JSON="${1:-bench.json}"
 
 echo "== tier-1: pytest =="
-# Fail fast (-x) over the healthy set.  The unhealthy set (pre-existing
-# environment/API drifts tracked in ROADMAP.md "Open items") is marked
-# `envdrift` and auto-skipped by tests/conftest.py, so plain pytest and
-# CI agree on what must be green.
+# Fail fast (-x) over the whole suite: the former envdrift skip set is
+# empty (the jax API drifts were fixed with version-tolerant accessors).
 python -m pytest -x -q
 
 echo "== benchmarks (fast) + perf gate =="
 bench_and_gate() {
+  # the gateway module self-asserts that coalesced reads issue fewer
+  # transport round-trips than naive per-client reads (frame counts)
   REPRO_BENCH_FAST=1 python -m benchmarks.run \
-    --json "$BENCH_JSON" --only tiered_staging,transport \
+    --json "$BENCH_JSON" --only tiered_staging,transport,gateway \
   && python scripts/bench_gate.py --run "$BENCH_JSON" \
        --baseline benchmarks/baseline.json
 }

@@ -13,20 +13,24 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types where the installed
+    jax supports them (``axis_types=`` and ``jax.sharding.AxisType`` only
+    exist from jax 0.5; Auto is already the default on older versions)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1) -> jax.sharding.Mesh:
     """Small mesh over host devices (tests / smoke runs)."""
     if pod > 1:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"), axis_types=_auto(3)
-        )
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+        return _make_mesh((pod, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))

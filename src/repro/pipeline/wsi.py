@@ -119,6 +119,7 @@ def make_wsi_storage(
     write_policy: str = "write_through",
     policy: PlacementPolicy | None = None,
     promote_after: int = 2,
+    serve=False,
 ) -> StorageRegistry:
     """Build the storage backing the WSI stages under the canonical names
     ("DMS3" for the (3, H, W) RGB volume, "DMS2" for the 2-D mask/hema
@@ -143,6 +144,15 @@ def make_wsi_storage(
     store).  Pass your own ``root`` if you want to clean it up; the
     default is a fresh ``tempfile.mkdtemp`` the caller owns (reachable
     via each store's DISK backend: ``store.tiers[1].backend.root``).
+
+    ``serve`` fronts every store with a
+    :class:`~repro.serve.gateway.RegionGateway` (pass ``True`` for the
+    defaults or a :class:`~repro.serve.gateway.GatewayConfig`): many
+    concurrent clients then share one hierarchy through a bounded,
+    request-coalescing worker pool with ``TierStats``-driven admission
+    control.  The gateways register under the same names ("DMS3"/
+    "DMS2"), so stage bindings never change; closing a gateway closes
+    its store.
     """
     from repro.storage import SocketTransport, spawn_servers
 
@@ -209,6 +219,20 @@ def make_wsi_storage(
             )
     else:
         raise ValueError(f"unknown storage mode {mode!r} (want 'dms' | 'tiered')")
+    if serve:
+        from repro.serve.gateway import GatewayConfig, RegionGateway
+
+        if isinstance(serve, GatewayConfig):
+            gw_config = serve
+        elif serve is True:
+            gw_config = None  # gateway defaults
+        else:
+            raise TypeError(
+                f"serve= wants True or a GatewayConfig, got {serve!r}; "
+                f"refusing to silently ignore gateway settings"
+            )
+        for name in ("DMS3", "DMS2"):
+            registry.register(RegionGateway(registry.get(name), config=gw_config))
     return registry
 
 

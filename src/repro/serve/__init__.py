@@ -1,4 +1,13 @@
-"""Serving substrate: caches, prefill/decode steps, generation."""
+"""Serving substrate: caches, prefill/decode steps, generation, and the
+region-serving gateway (batching front for the tiered region store)."""
+from repro.serve.gateway import (
+    GatewayClosed,
+    GatewayConfig,
+    GatewayStats,
+    Overloaded,
+    ReadTicket,
+    RegionGateway,
+)
 from repro.serve.step import (
     abstract_cache,
     cache_pspecs,
@@ -10,6 +19,12 @@ from repro.serve.step import (
 )
 
 __all__ = [
+    "GatewayClosed",
+    "GatewayConfig",
+    "GatewayStats",
+    "Overloaded",
+    "ReadTicket",
+    "RegionGateway",
     "abstract_cache",
     "cache_pspecs",
     "cache_shardings",

@@ -1,0 +1,438 @@
+"""Region-serving gateway: many clients, one tiered region store.
+
+The paper's runtime keeps many concurrent analysis stages reading from
+one shared region store, and its hierarchical-pipelines companion work
+(arXiv:1209.3332) shows throughput comes from batching fine-grain
+requests onto shared resources.  :class:`RegionGateway` is that front
+door: it implements the ``StorageBackend`` protocol (so it registers
+under the store's own name with zero call-site changes) while
+
+* **bounding admission** — requests enter a bounded queue; when the
+  queue is full a client waits at most ``admit_timeout`` seconds for a
+  slot and then gets an explicit :class:`Overloaded` (never a deadlock,
+  never an unbounded pile-up);
+* **shedding load under RAM pressure** — the top (RAM) tier's fill
+  fraction, read from the store's ``TierStats``/capacity accounting,
+  shrinks the admission queue to ``shed_queue_factor`` of its size and
+  turns the bounded wait into an immediate :class:`Overloaded` — when
+  the hot tier is thrashing, queueing more reads only makes it worse;
+* **coalescing reads** — a worker that picks up a request drains every
+  queued request for the same region, merges overlapping/adjacent ROIs
+  into minimal bounding windows (duplicates collapse for free), issues
+  ONE tier fetch per window, and slices each caller's ROI out of the
+  shared payload.  Under a DMS-backed tier each window fetch rides the
+  transport's scatter-gather ``fetch_many`` frame, so N clients hitting
+  M servers cost one round-trip per server instead of one per block per
+  client.
+
+A merged window can cover cells none of the members asked for; if the
+store cannot serve the window (a coverage hole raises ``KeyError``) the
+gateway falls back to per-request fetches, so coalescing is a pure
+optimization — results are always bit-exact with direct reads.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures
+import dataclasses
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.bbox import BoundingBox
+from repro.core.regions import RegionKey, StorageBackend
+
+
+class Overloaded(RuntimeError):
+    """Admission control rejected the request; retry later or back off."""
+
+
+class GatewayClosed(RuntimeError):
+    """The gateway is shut down; no new requests are accepted."""
+
+
+@dataclasses.dataclass
+class GatewayConfig:
+    """Admission + coalescing knobs (see class docstring for semantics)."""
+
+    workers: int = 4
+    max_queue: int = 128          # bounded admission queue (requests)
+    batch_window: int = 32        # max requests drained into one batch
+    admit_timeout: float = 10.0   # bounded wait for a queue slot (s)
+    request_timeout: float | None = 120.0  # get() wait for the result (s)
+    mem_highwater: float = 0.85   # RAM-tier fill fraction that sheds load
+    shed_queue_factor: float = 0.25  # queue share admitted under pressure
+    max_window_waste: float = 1.5  # window vol <= waste * sum(member vols)
+    coalesce: bool = True
+
+    def __post_init__(self) -> None:
+        if self.workers < 1:
+            raise ValueError("gateway needs at least one worker")
+        if self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        if self.batch_window < 1:
+            raise ValueError("batch_window must be >= 1")
+
+
+@dataclasses.dataclass
+class GatewayStats:
+    """Request accounting (all counters monotonic, read under the lock)."""
+
+    requests: int = 0     # submitted (admitted + rejected)
+    served: int = 0       # completed with a payload
+    failed: int = 0       # completed with a backend error
+    rejected: int = 0     # Overloaded at admission
+    batches: int = 0      # worker drain cycles
+    windows: int = 0      # tier fetches issued (merged windows)
+    coalesced: int = 0    # requests served from a window shared with others
+    window_fallbacks: int = 0  # window had a hole -> per-request reads
+    queue_peak: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ReadTicket(concurrent.futures.Future):
+    """Handle on one submitted ROI read (a Future carrying key + roi)."""
+
+    def __init__(self, key: RegionKey, roi: BoundingBox) -> None:
+        super().__init__()
+        self.key = key
+        self.roi = roi
+
+    def result(self, timeout: float | None = None) -> np.ndarray:
+        try:
+            return super().result(timeout)
+        except concurrent.futures.TimeoutError:
+            # on 3.10 the futures TimeoutError is NOT the builtin; callers
+            # should only ever need `except TimeoutError`
+            raise TimeoutError(
+                f"gateway read of {self.key} {self.roi} timed out"
+            ) from None
+
+
+def _deliver(ticket: ReadTicket, value: np.ndarray) -> bool:
+    """set_result unless the client cancelled meanwhile; True = counted."""
+    try:
+        ticket.set_result(value)
+        return True
+    except concurrent.futures.InvalidStateError:
+        return False
+
+
+def _deliver_error(ticket: ReadTicket, error: BaseException) -> bool:
+    try:
+        ticket.set_exception(error)
+        return True
+    except concurrent.futures.InvalidStateError:
+        return False
+
+
+class _Cluster:
+    """One merged fetch window and the requests it serves.
+
+    ``covered`` is a lower bound on the union volume of the member ROIs
+    (each absorbed ROI contributes only its cells OUTSIDE the window so
+    far, so duplicates and overlaps contribute nothing) — the waste
+    check is against distinct requested cells, never an inflated sum.
+    """
+
+    __slots__ = ("window", "covered", "members")
+
+    def __init__(self, first: ReadTicket) -> None:
+        self.window = first.roi
+        self.covered = first.roi.volume
+        self.members = [first]
+
+    def try_absorb(self, req: ReadTicket, max_waste: float) -> bool:
+        # overlapping or adjacent (touching counts: the merged window is
+        # still gap-free along the shared face)
+        if not self.window.inflate(1).intersects(req.roi):
+            return False
+        merged = self.window.union(req.roi)
+        gain = req.roi.volume - req.roi.intersect(self.window).volume
+        if merged.volume > max_waste * (self.covered + gain):
+            return False  # merging would fetch mostly unrequested cells
+        self.window = merged
+        self.covered += gain
+        self.members.append(req)
+        return True
+
+
+class RegionGateway:
+    """Request-batching front for one shared region store.
+
+    Implements ``StorageBackend`` (``get`` blocks on a submitted ticket;
+    ``put``/``query``/``delete`` pass through), so a gateway registers in
+    a :class:`~repro.core.regions.StorageRegistry` under the store's own
+    name and stages never notice.  Unknown attributes (``drain``,
+    ``tier_stats``, ``locality``, ...) delegate to the wrapped store.
+    """
+
+    def __init__(
+        self,
+        store: StorageBackend,
+        *,
+        name: str | None = None,
+        config: GatewayConfig | None = None,
+        pressure_fn: Callable[[], float] | None = None,
+    ) -> None:
+        self.store = store
+        self.name = name or getattr(store, "name", "GATEWAY")
+        self.config = config or GatewayConfig()
+        self.stats = GatewayStats()
+        self._pressure_fn = pressure_fn
+        self._pending: "collections.deque[ReadTicket]" = collections.deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._slot_free = threading.Condition(self._lock)
+        self._paused = False
+        self._closed = False
+        self._workers = [
+            threading.Thread(
+                target=self._worker_loop, daemon=True, name=f"{self.name}-gw{i}"
+            )
+            for i in range(self.config.workers)
+        ]
+        for w in self._workers:
+            w.start()
+
+    # -- admission control --------------------------------------------------------
+    def pressure(self) -> float:
+        """RAM-tier fill fraction in [0, 1] (0 when unbounded/unknown).
+
+        Reads the wrapped :class:`~repro.storage.tiers.TieredStore`'s
+        capacity accounting; a custom ``pressure_fn`` overrides (e.g. to
+        fold in host RSS or downstream backpressure).
+        """
+        if self._pressure_fn is not None:
+            return max(0.0, min(1.0, float(self._pressure_fn())))
+        tiers = getattr(self.store, "tiers", None)
+        used = getattr(self.store, "used_bytes", None)
+        if tiers and callable(used):
+            top = tiers[0]
+            cap = getattr(top, "capacity_bytes", None)
+            if cap:
+                return min(1.0, used(top.name) / cap)
+        return 0.0
+
+    def _admit_limit(self, pressure: float) -> int:
+        cfg = self.config
+        if pressure >= cfg.mem_highwater:
+            return max(1, int(cfg.max_queue * cfg.shed_queue_factor))
+        return cfg.max_queue
+
+    def submit(self, key: RegionKey, roi: BoundingBox) -> ReadTicket:
+        """Enqueue one ROI read; returns a ticket to wait on.
+
+        Blocks at most ``admit_timeout`` for a queue slot; raises
+        :class:`Overloaded` when the queue stays full (immediately when
+        the RAM tier is past ``mem_highwater`` — shedding, not queueing,
+        is the right response to memory pressure).
+        """
+        ticket = ReadTicket(key, roi)
+        deadline = time.monotonic() + self.config.admit_timeout
+        with self._lock:
+            self.stats.requests += 1
+        while True:
+            # sample pressure OUTSIDE the gateway lock: the store takes
+            # its own lock, and a custom pressure_fn may legitimately
+            # consult this gateway (e.g. queue_depth)
+            p = self.pressure()
+            with self._lock:
+                if self._closed:
+                    raise GatewayClosed(f"gateway {self.name} is closed")
+                limit = self._admit_limit(p)
+                depth = len(self._pending)
+                if depth < limit:
+                    self._pending.append(ticket)
+                    self.stats.queue_peak = max(self.stats.queue_peak, depth + 1)
+                    self._not_empty.notify()
+                    return ticket
+                if p >= self.config.mem_highwater:
+                    self.stats.rejected += 1
+                    raise Overloaded(
+                        f"{self.name}: queue {depth} >= {limit} with RAM tier at "
+                        f"{p:.0%} of capacity; shedding load (retry with backoff)"
+                    )
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    self.stats.rejected += 1
+                    raise Overloaded(
+                        f"{self.name}: queue full ({depth}/{limit}) for "
+                        f"{self.config.admit_timeout:.1f}s; rejecting (bounded wait)"
+                    )
+                self._slot_free.wait(remaining)
+
+    # -- worker pool --------------------------------------------------------------
+    def _worker_loop(self) -> None:
+        while True:
+            batch = self._next_batch()
+            if batch is None:
+                return
+            try:
+                self._serve_batch(batch)
+            except BaseException as e:  # noqa: BLE001 — a worker must
+                # survive anything (even MemoryError mid-batch): answer
+                # every unresolved ticket and keep draining, or queued
+                # clients would hang for their full request_timeout
+                failed = sum(
+                    1 for m in batch if not m.done() and _deliver_error(m, e)
+                )
+                with self._lock:
+                    self.stats.failed += failed
+
+    def _next_batch(self) -> list[ReadTicket] | None:
+        """Pop the head request plus every queued same-key request (up to
+        ``batch_window``) — the coalescing unit.  None = closed + drained."""
+        with self._lock:
+            while True:
+                if self._pending and (not self._paused or self._closed):
+                    break
+                if self._closed and not self._pending:
+                    return None
+                self._not_empty.wait()
+            head = self._pending.popleft()
+            batch = [head]
+            if self.config.coalesce and self._pending:
+                keep: "collections.deque[ReadTicket]" = collections.deque()
+                while self._pending:
+                    r = self._pending.popleft()
+                    if r.key == head.key and len(batch) < self.config.batch_window:
+                        batch.append(r)
+                    else:
+                        keep.append(r)
+                self._pending = keep
+            self.stats.batches += 1
+            self._slot_free.notify_all()
+        return batch
+
+    def _coalesce(self, batch: list[ReadTicket]) -> list[_Cluster]:
+        """Greedy window merge: sorted-by-origin requests fold into the
+        first cluster they overlap/touch without exceeding the waste
+        bound.  Duplicated ROIs collapse into one fetch for free."""
+        clusters: list[_Cluster] = []
+        for req in sorted(batch, key=lambda r: (r.roi.lo, r.roi.hi)):
+            for c in clusters:
+                if c.try_absorb(req, self.config.max_window_waste):
+                    break
+            else:
+                clusters.append(_Cluster(req))
+        return clusters
+
+    def _serve_batch(self, batch: list[ReadTicket]) -> None:
+        if self.config.coalesce and len(batch) > 1:
+            clusters = self._coalesce(batch)
+        else:
+            clusters = [_Cluster(r) for r in batch]
+        for c in clusters:
+            with self._lock:
+                self.stats.windows += 1
+                if len(c.members) > 1:
+                    self.stats.coalesced += len(c.members)
+            if len(c.members) == 1:
+                self._serve_one(c.members[0])
+                continue
+            try:
+                window_arr = self.store.get(c.members[0].key, c.window)
+            except Exception:  # noqa: BLE001 — hole or tier error: degrade
+                with self._lock:
+                    self.stats.window_fallbacks += 1
+                for m in c.members:
+                    self._serve_one(m)
+                continue
+            served = failed = 0
+            for m in c.members:
+                if m.done():
+                    continue  # cancelled while queued
+                try:
+                    # slice per caller; copy so clients never alias the
+                    # shared window payload (or each other — duplicated
+                    # ROIs would otherwise all receive the same view)
+                    payload = window_arr[m.roi.local_slices(c.window)].copy()
+                except BaseException as e:  # noqa: BLE001 — e.g. MemoryError
+                    # on the copy: fail this member, keep serving the rest
+                    if _deliver_error(m, e):
+                        failed += 1
+                    continue
+                if _deliver(m, payload):
+                    served += 1
+            with self._lock:
+                self.stats.served += served
+                self.stats.failed += failed
+
+    def _serve_one(self, req: ReadTicket) -> None:
+        if req.done():
+            return  # cancelled while queued: don't fetch, don't re-resolve
+        try:
+            value = self.store.get(req.key, req.roi)
+        except BaseException as e:  # noqa: BLE001 — surfaced on the ticket
+            if _deliver_error(req, e):
+                with self._lock:
+                    self.stats.failed += 1
+            return
+        if _deliver(req, value):
+            with self._lock:
+                self.stats.served += 1
+
+    # -- StorageBackend protocol ----------------------------------------------------
+    def get(self, key: RegionKey, roi: BoundingBox) -> np.ndarray:
+        return self.submit(key, roi).result(self.config.request_timeout)
+
+    def put(self, key: RegionKey, bb: BoundingBox, array: np.ndarray) -> None:
+        self.store.put(key, bb, array)
+
+    def query(self, namespace: str, name: str) -> list[tuple[RegionKey, BoundingBox]]:
+        return self.store.query(namespace, name)
+
+    def delete(self, key: RegionKey) -> None:
+        self.store.delete(key)
+
+    # -- lifecycle ------------------------------------------------------------------
+    def pause(self) -> None:
+        """Stop dispatching (admission continues up to the queue bound).
+        Maintenance hook; also makes coalescing deterministic in tests."""
+        with self._lock:
+            self._paused = True
+
+    def resume(self) -> None:
+        with self._lock:
+            self._paused = False
+            self._not_empty.notify_all()
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def close(self, *, close_store: bool = True) -> None:
+        """Clean shutdown: refuse new requests, drain + answer every
+        queued/in-flight request, join the workers, then (by default)
+        close the wrapped store."""
+        with self._lock:
+            already = self._closed
+            self._closed = True
+            self._paused = False  # a paused gateway still drains on close
+            self._not_empty.notify_all()
+            self._slot_free.notify_all()
+        if not already:
+            for w in self._workers:
+                w.join(timeout=60.0)
+        if close_store:
+            store_close = getattr(self.store, "close", None)
+            if callable(store_close):
+                store_close()
+
+    def __getattr__(self, attr: str):
+        # transparency: drain/flush/tier_stats/locality/... reach the store
+        store = self.__dict__.get("store")
+        if store is None:
+            raise AttributeError(attr)
+        return getattr(store, attr)
+
+    def __repr__(self) -> str:
+        return (
+            f"RegionGateway({self.name}: {self.config.workers} workers, "
+            f"queue {self.queue_depth()}/{self.config.max_queue})"
+        )

@@ -63,8 +63,10 @@ class Transport(Protocol):
     like (direct call, TCP frame, RDMA verb) but must preserve these
     semantics:
 
-      * ``fetch``/``lookup`` raise ``KeyError`` when the server does not
-        hold the requested data;
+      * ``fetch``/``fetch_many``/``lookup`` raise ``KeyError`` when the
+        server does not hold the requested data;
+      * ``fetch_many`` is scatter-gather: N blocks move in ONE round-trip
+        (``stats.gets`` counts round-trips, not blocks);
       * arrays round-trip bit-exact with dtype and shape preserved;
       * ``stats`` accounts every byte moved.
     """
@@ -77,6 +79,10 @@ class Transport(Protocol):
     ) -> None: ...
 
     def fetch(self, server: int, key: RegionKey, block_coord: tuple) -> np.ndarray: ...
+
+    def fetch_many(
+        self, server: int, requests: list[tuple[RegionKey, tuple]]
+    ) -> list[np.ndarray]: ...
 
     def put_meta(
         self, server: int, key: RegionKey, block_coord: tuple, box: BoundingBox, home: int
@@ -186,6 +192,15 @@ class InProcTransport:
         block = self.servers[server].fetch(key, block_coord)
         self._account(server, block.nbytes, "get")
         return block
+
+    def fetch_many(self, server, requests) -> list[np.ndarray]:
+        if not requests:
+            return []
+        shard = self.servers[server]
+        blocks = [shard.fetch(key, coord) for key, coord in requests]
+        # one message: one latency charge, one round-trip in the stats
+        self._account(server, sum(b.nbytes for b in blocks), "get")
+        return blocks
 
     def put_meta(self, server, key, block_coord, box, home) -> None:
         self.servers[server].put_meta(key, block_coord, box, home)
@@ -337,11 +352,25 @@ class DistributedMemoryStorage:
         directory = self.transport.lookup(0, key)
         if not directory:
             raise KeyError(f"DMS: no data for {key}")
-        pieces = [
-            (box, self.transport.fetch(home, key, bc))
-            for bc, (box, home) in directory.items()
-            if box.intersects(roi)
-        ]
+        by_home: dict[int, list[tuple[tuple, BoundingBox]]] = {}
+        for bc, (box, home) in directory.items():
+            if box.intersects(roi):
+                by_home.setdefault(home, []).append((bc, box))
+        # scatter-gather: every server's blocks move in one fetch_many
+        # round-trip instead of one fetch per block (single-block reads
+        # keep the plain fetch; third-party transports without fetch_many
+        # also fall back to it)
+        fetch_many = getattr(self.transport, "fetch_many", None)
+        pieces = []
+        for home in sorted(by_home):
+            items = by_home[home]
+            if fetch_many is not None and len(items) > 1:
+                blocks = fetch_many(home, [(key, bc) for bc, _ in items])
+                pieces.extend((box, blk) for (_, box), blk in zip(items, blocks))
+            else:
+                pieces.extend(
+                    (box, self.transport.fetch(home, key, bc)) for bc, box in items
+                )
         out, covered = _assemble(pieces, roi)
         if out is None:
             raise KeyError(f"DMS: {key} has no blocks intersecting {roi}")

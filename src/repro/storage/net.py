@@ -13,7 +13,8 @@ Wire protocol (one request/response round-trip per message)::
     frame    := u32 header_len | u64 payload_len | header | payload
     header   := JSON (op, sid, key/coord/bb/home..., array meta)
     payload  := raw little-endian array bytes (C order), only for
-                store requests and fetch responses
+                store requests and fetch / fetch_many responses
+                (fetch_many: blocks concatenated in request order)
 
 Array payloads travel as ``header {shape, dtype} + raw buffer`` — no
 pickling, dtype and shape preserved bit-exact (including float16 /
@@ -286,6 +287,34 @@ class SocketTransport:
         self._account("get", wire)
         return decode_array(rheader["array"], rpayload)
 
+    def fetch_many(self, server, requests) -> list[np.ndarray]:
+        """Scatter-gather fetch: N blocks in ONE round-trip.
+
+        The response header carries per-block {shape, dtype} metadata and
+        the payload is the blocks' raw buffers concatenated in request
+        order, so the frame cost is one header + the bytes themselves.
+        """
+        if not requests:
+            return []
+        header = {
+            "op": "fetch_many",
+            "sid": server,
+            "reqs": [
+                [_key_to_json(self._scoped(key)), list(coord)]
+                for key, coord in requests
+            ],
+        }
+        rheader, rpayload, wire = self._request(server, header)
+        self._account("get", wire)
+        out: list[np.ndarray] = []
+        view = memoryview(rpayload)
+        off = 0
+        for meta in rheader["arrays"]:
+            n = int(np.prod(meta["shape"])) * _dtype_from_str(meta["dtype"]).itemsize
+            out.append(decode_array(meta, view[off : off + n]))
+            off += n
+        return out
+
     def put_meta(self, server, key, block_coord, box, home) -> None:
         header = {
             "op": "put_meta",
@@ -395,6 +424,13 @@ class _NetServer(socketserver.ThreadingTCPServer):
             block = shard.fetch(_key_from_json(header["key"]), tuple(header["coord"]))
             meta, buf = encode_array(block)
             return {"ok": True, "array": meta}, buf
+        if op == "fetch_many":
+            metas, bufs = [], []
+            for kj, coord in header["reqs"]:
+                meta, buf = encode_array(shard.fetch(_key_from_json(kj), tuple(coord)))
+                metas.append(meta)
+                bufs.append(buf)
+            return {"ok": True, "arrays": metas}, b"".join(bufs)
         if op == "put_meta":
             shard.put_meta(
                 _key_from_json(header["key"]),

@@ -1,8 +1,6 @@
 import os
 import sys
 
-import pytest
-
 # Tests run on the single real CPU device (the 512-device override is
 # dryrun-only, per the brief). Keep hypothesis deadlines off: CI boxes jit.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -16,35 +14,6 @@ if HAVE_HYPOTHESIS:
     settings.register_profile("ci", deadline=None, max_examples=25, derandomize=True)
     settings.load_profile("ci")
 
-# --- envdrift: pre-existing environment/API drifts (ROADMAP "Open items") ---
-# One source of truth for the unhealthy set, so plain `pytest` and CI agree.
-# These are not regressions; they are jax API drift / sandbox limitations
-# tracked for burn-down.  Run them anyway with REPRO_RUN_ENVDRIFT=1.
-ENVDRIFT_MODULES = {"test_cells.py"}
-ENVDRIFT_TESTS = {
-    ("test_compression.py", "test_compressed_psum_multi_device_subprocess"),
-    ("test_system.py", "test_train_driver_end_to_end_with_restart"),
-}
-
-
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers",
-        "envdrift: pre-existing environment/API drift (skipped unless "
-        "REPRO_RUN_ENVDRIFT=1); tracked in ROADMAP.md open items",
-    )
-
-
-def pytest_collection_modifyitems(config, items):
-    run_drift = bool(os.environ.get("REPRO_RUN_ENVDRIFT"))
-    skip = pytest.mark.skip(
-        reason="envdrift: pre-existing environment/API drift (ROADMAP open "
-        "item); set REPRO_RUN_ENVDRIFT=1 to run"
-    )
-    for item in items:
-        fname = os.path.basename(str(item.fspath))
-        base = item.name.split("[", 1)[0]
-        if fname in ENVDRIFT_MODULES or (fname, base) in ENVDRIFT_TESTS:
-            item.add_marker(pytest.mark.envdrift)
-            if not run_drift:
-                item.add_marker(skip)
+# The envdrift marker machinery that used to live here is gone: the jax
+# API drifts it tracked (jax.sharding.AxisType, jax.shard_map) are fixed
+# with version-tolerant accessors, so the whole suite runs unconditionally.

@@ -19,13 +19,17 @@ import sys
 sys.path.insert(0, "src")
 from repro.train.compression import compressed_psum
 
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:  # pre-0.6 jax only ships the experimental spelling
+    from jax.experimental.shard_map import shard_map
+
 mesh = jax.make_mesh((2, 4), ("pod", "data"))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
 
 for mode, tol in [("fp32", 1e-6), ("bf16", 2e-2), ("int8", 3e-2)]:
     f = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda v: compressed_psum(v, "pod", mode),
             mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
         )

@@ -1,0 +1,309 @@
+"""Region-serving gateway: bit-exactness under concurrency, coalescing
+(asserted via transport frame counts), TierStats admission control,
+clean shutdown, and the make_wsi_storage(serve=...) wiring."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BoundingBox, ElementType, RegionKey
+from repro.serve.gateway import (
+    GatewayClosed,
+    GatewayConfig,
+    Overloaded,
+    RegionGateway,
+)
+from repro.storage import (
+    DistributedMemoryStorage,
+    MemoryTier,
+    Tier,
+    TieredStore,
+)
+
+DOM = BoundingBox((0, 0), (128, 128))
+TILE = 32
+TILE_BYTES = TILE * TILE * 4
+
+
+def _key(name="Slide", ts=0):
+    return RegionKey("g", name, ElementType.FLOAT32, ts)
+
+
+def _dms_store() -> tuple[TieredStore, np.ndarray]:
+    """Single DMS tier (every read pays the transport) + a staged slide."""
+    dms = DistributedMemoryStorage(DOM, (TILE, TILE), 4)
+    store = TieredStore([Tier("DMS", dms)], name="GWT")
+    slide = np.random.default_rng(0).random((128, 128)).astype(np.float32)
+    for tile in DOM.tiles((TILE, TILE)):
+        store.put(_key(), tile, slide[tile.slices()])
+    return store, slide
+
+
+def test_concurrent_clients_bit_exact_vs_direct_reads():
+    store, slide = _dms_store()
+    gw = RegionGateway(store, config=GatewayConfig(workers=3))
+    rois = [
+        BoundingBox((y, x), (min(y + 48, 128), min(x + 48, 128)))
+        for y in range(0, 112, 16)
+        for x in range(0, 112, 16)
+    ]
+    errors = []
+
+    def client(sub):
+        try:
+            for roi in sub:
+                got = gw.get(_key(), roi)
+                want = store.get(_key(), roi)  # direct, bypassing the gateway
+                np.testing.assert_array_equal(got, want)
+                np.testing.assert_array_equal(got, slide[roi.slices()])
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(rois[i::6],)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors, errors
+    assert gw.stats.served == gw.stats.requests > 0
+    gw.close()
+
+
+def test_coalescing_merges_overlapping_rois_fewer_transport_frames():
+    store, slide = _dms_store()
+    transport = store.tiers[0].backend.transport
+    # an overlapping horizontal band: 7 reads, stride 16, window 32
+    rois = [BoundingBox((0, x), (32, x + 32)) for x in range(0, 97, 16)]
+
+    transport.reset()
+    naive = [store.get(_key(), roi) for roi in rois]
+    naive_frames = transport.stats.gets + transport.stats.meta_msgs
+
+    gw = RegionGateway(store, config=GatewayConfig(workers=2, batch_window=16))
+    gw.pause()  # queue the whole burst so one drain serves it
+    tickets = [gw.submit(_key(), roi) for roi in rois]
+    transport.reset()
+    gw.resume()
+    outs = [t.result(30.0) for t in tickets]
+    gw_frames = transport.stats.gets + transport.stats.meta_msgs
+
+    for roi, out, base in zip(rois, outs, naive):
+        np.testing.assert_array_equal(out, base)
+        np.testing.assert_array_equal(out, slide[roi.slices()])
+    # the band merges into one window -> one store read instead of seven
+    assert gw_frames < naive_frames, (gw_frames, naive_frames)
+    assert gw.stats.windows < len(rois)
+    assert gw.stats.coalesced >= len(rois)
+    assert gw.stats.window_fallbacks == 0
+    gw.close()
+
+
+def test_duplicate_rois_dedup_into_one_window():
+    store, slide = _dms_store()
+    gw = RegionGateway(store, config=GatewayConfig(workers=1))
+    roi = BoundingBox((16, 16), (64, 64))
+    gw.pause()
+    tickets = [gw.submit(_key(), roi) for _ in range(5)]
+    gw.resume()
+    outs = [t.result(30.0) for t in tickets]
+    for out in outs:
+        np.testing.assert_array_equal(out, slide[roi.slices()])
+    # callers never alias the shared window payload (or each other)
+    assert not any(np.shares_memory(a, b) for a in outs for b in outs if a is not b)
+    assert gw.stats.windows == 1 and gw.stats.coalesced == 5
+    gw.close()
+
+
+def test_cancelled_ticket_does_not_poison_the_batch():
+    """A client cancelling its queued ticket must not fail other
+    requests drained into the same batch."""
+    store, slide = _dms_store()
+    gw = RegionGateway(store, config=GatewayConfig(workers=1))
+    far_a = BoundingBox((0, 0), (16, 16))
+    far_b = BoundingBox((96, 96), (128, 128))  # too far to coalesce
+    gw.pause()
+    doomed = gw.submit(_key(), far_a)
+    kept = gw.submit(_key(), far_b)
+    assert doomed.cancel()
+    gw.resume()
+    np.testing.assert_array_equal(kept.result(30.0), slide[far_b.slices()])
+    assert gw.stats.served == 1
+    gw.close()
+
+
+def test_duplicate_rois_do_not_inflate_the_waste_budget():
+    """The waste bound counts distinct requested cells: duplicated ROIs
+    must not let diagonally-touching windows merge into one oversized
+    (and hole-doomed) fetch."""
+    store, slide = _dms_store()
+    a = BoundingBox((0, 0), (32, 32))
+    b = BoundingBox((32, 32), (64, 128))  # touches a only at one corner
+    gw = RegionGateway(store, config=GatewayConfig(workers=1))
+    gw.pause()
+    tickets = [gw.submit(_key(), a) for _ in range(4)] + [gw.submit(_key(), b)]
+    gw.resume()
+    for t in tickets:
+        np.testing.assert_array_equal(t.result(30.0), slide[t.roi.slices()])
+    # one window for the 4 duplicates of a, one for b — never a merged
+    # (0,0)-(64,128) window that is 2x the requested cells
+    assert gw.stats.windows == 2
+    assert gw.stats.window_fallbacks == 0
+    gw.close()
+
+
+def test_window_hole_falls_back_to_per_request_reads():
+    """Two touching ROIs merge into a window whose corners were never
+    written; the window fetch fails with KeyError and the gateway must
+    degrade to per-request reads, still bit-exact."""
+    dms = DistributedMemoryStorage(DOM, (TILE, TILE), 4)
+    store = TieredStore([Tier("DMS", dms)], name="HOLE")
+    rng = np.random.default_rng(1)
+    a_box = BoundingBox((0, 0), (32, 32))
+    b_box = BoundingBox((32, 16), (64, 48))
+    a = rng.random((32, 32)).astype(np.float32)
+    b = rng.random((32, 32)).astype(np.float32)
+    store.put(_key("holey"), a_box, a)
+    store.put(_key("holey"), b_box, b)
+
+    gw = RegionGateway(store, config=GatewayConfig(workers=1))
+    gw.pause()
+    ta = gw.submit(_key("holey"), a_box)
+    tb = gw.submit(_key("holey"), b_box)
+    gw.resume()
+    np.testing.assert_array_equal(ta.result(30.0), a)
+    np.testing.assert_array_equal(tb.result(30.0), b)
+    assert gw.stats.window_fallbacks == 1
+    assert gw.stats.served == 2
+    gw.close()
+
+
+def test_admission_rejects_under_tiny_ram_tier_pressure():
+    """A full bounded RAM tier shrinks the admission queue and turns the
+    bounded wait into immediate load shedding."""
+    dms = DistributedMemoryStorage(DOM, (TILE, TILE), 4)
+    store = TieredStore(
+        [Tier("MEM", MemoryTier(), TILE_BYTES), Tier("DMS", dms)],
+        name="TINY",
+    )
+    tile0 = BoundingBox((0, 0), (TILE, TILE))
+    payload = np.ones((TILE, TILE), np.float32)
+    store.put(_key("hot"), tile0, payload)  # MEM now exactly at capacity
+    gw = RegionGateway(
+        store,
+        config=GatewayConfig(
+            workers=1, max_queue=8, shed_queue_factor=0.25, admit_timeout=10.0
+        ),
+    )
+    assert gw.pressure() == pytest.approx(1.0)
+    gw.pause()
+    admitted = [gw.submit(_key("hot"), tile0) for _ in range(2)]  # 8 * 0.25
+    t0 = time.monotonic()
+    with pytest.raises(Overloaded, match="shedding"):
+        gw.submit(_key("hot"), tile0)
+    # shedding is immediate, not a 10s bounded wait (never deadlocks)
+    assert time.monotonic() - t0 < 2.0
+    assert gw.stats.rejected == 1
+    gw.resume()
+    for t in admitted:
+        np.testing.assert_array_equal(t.result(30.0), payload)
+    gw.close()
+
+
+def test_admission_bounded_wait_then_rejects_without_pressure():
+    store, _ = _dms_store()
+    gw = RegionGateway(
+        store, config=GatewayConfig(workers=1, max_queue=2, admit_timeout=0.2)
+    )
+    assert gw.pressure() == 0.0  # single unbounded tier: no RAM signal
+    gw.pause()
+    roi = BoundingBox((0, 0), (TILE, TILE))
+    admitted = [gw.submit(_key(), roi) for _ in range(2)]
+    t0 = time.monotonic()
+    with pytest.raises(Overloaded, match="bounded wait"):
+        gw.submit(_key(), roi)
+    waited = time.monotonic() - t0
+    assert 0.15 <= waited < 5.0  # waited for the slot, then shed
+    gw.resume()
+    for t in admitted:
+        assert t.result(30.0) is not None
+    gw.close()
+
+
+def test_clean_shutdown_completes_inflight_requests():
+    store, slide = _dms_store()
+    gw = RegionGateway(store, config=GatewayConfig(workers=2))
+    roi = BoundingBox((0, 0), (64, 64))
+    gw.pause()  # pile up in-flight work, then close while it is queued
+    tickets = [gw.submit(_key(), roi) for _ in range(6)]
+    closer = threading.Thread(target=gw.close)
+    closer.start()
+    for t in tickets:
+        np.testing.assert_array_equal(t.result(30.0), slide[roi.slices()])
+    closer.join(timeout=30)
+    assert not closer.is_alive()
+    with pytest.raises(GatewayClosed):
+        gw.submit(_key(), roi)
+    assert gw.stats.served == 6
+
+
+def test_gateway_is_a_transparent_storage_backend():
+    """StorageBackend protocol + delegation: the gateway registers under
+    the store's name and passes writes/queries/locality through."""
+    store, _ = _dms_store()
+    gw = RegionGateway(store)
+    assert gw.name == store.name
+    key = _key("w")
+    bb = BoundingBox((0, 0), (TILE, TILE))
+    arr = np.full((TILE, TILE), 7.0, np.float32)
+    gw.put(key, bb, arr)
+    assert [k for k, _ in gw.query("g", "w")] == [key]
+    np.testing.assert_array_equal(gw.get(key, bb), arr)
+    assert gw.locality(key) == "DMS"  # delegated to the TieredStore
+    assert "DMS" in gw.tier_stats()
+    gw.delete(key)
+    assert gw.query("g", "w") == []
+    gw.close()
+
+
+def test_custom_pressure_fn_overrides_tier_accounting():
+    store, _ = _dms_store()
+    level = {"p": 0.0}
+    gw = RegionGateway(
+        store,
+        config=GatewayConfig(workers=1, max_queue=4, shed_queue_factor=0.25),
+        pressure_fn=lambda: level["p"],
+    )
+    gw.pause()
+    roi = BoundingBox((0, 0), (TILE, TILE))
+    gw.submit(_key(), roi)
+    level["p"] = 1.0  # external signal: shed everything beyond 1 slot
+    with pytest.raises(Overloaded):
+        gw.submit(_key(), roi)
+    level["p"] = 0.0
+    gw.resume()
+    gw.close()
+
+
+def test_make_wsi_storage_serve_wraps_stores_in_gateways():
+    from repro.pipeline import make_wsi_storage
+
+    reg = make_wsi_storage(64, 64, mode="tiered", serve=True, tile=32)
+    gw3 = reg.get("DMS3")
+    assert isinstance(gw3, RegionGateway)
+    assert gw3.name == "DMS3"
+    key = RegionKey("t", "RGB", ElementType.FLOAT32)
+    dom3 = BoundingBox((0, 0, 0), (3, 64, 64))
+    rgb = np.random.default_rng(2).random((3, 64, 64)).astype(np.float32)
+    gw3.put(key, dom3, rgb)
+    np.testing.assert_array_equal(gw3.get(key, dom3), rgb)
+    gw3.drain()  # delegated through to the tiered store
+    assert not gw3.dirty(key)
+    # a custom config rides through serve=
+    reg2 = make_wsi_storage(
+        64, 64, mode="tiered", serve=GatewayConfig(workers=1, max_queue=3), tile=32
+    )
+    assert reg2.get("DMS2").config.max_queue == 3
+    for r in (reg, reg2):
+        for name in ("DMS3", "DMS2"):
+            r.get(name).close()  # closes gateway AND the tiered store
