@@ -1,0 +1,117 @@
+"""Replicated vs unreplicated DMS put/get cost (in-proc + socket).
+
+R-way replication buys availability (any R-1 dead servers cause zero
+failed reads) by writing every payload block to R servers along the SFC
+virtual-domain ring.  The bargain to keep honest: puts pay ~R x the
+payload bytes (write amplification), while reads must stay flat — a
+healthy fleet serves every block from its primary, so the replicas cost
+nothing on the read path.
+
+Rows report per-tile put/get wall latency at R=1 vs R=2 over both
+transports plus the measured byte amplification; the module self-asserts
+that bytes_put doubles and bytes_get does not.  Fast mode
+(``REPRO_BENCH_FAST=1``) shrinks the grid for CI smoke runs, where
+``replication_socket_*_r2`` are gated against benchmarks/baseline.json.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import BoundingBox, ElementType, RegionKey
+from repro.storage import DistributedMemoryStorage, spawn_servers
+
+FAST = bool(os.environ.get("REPRO_BENCH_FAST"))
+TILE = 128
+GRID = 2 if FAST else 4
+NUM_SERVERS = 4
+PROCESSES = 2
+REPL = 2
+
+
+def _exchange(store: DistributedMemoryStorage, dom: BoundingBox) -> dict:
+    key = RegionKey("x", "Mask", ElementType.FLOAT32)
+    arr = np.random.default_rng(0).random((TILE, TILE)).astype(np.float32)
+    tiles = list(dom.tiles((TILE, TILE)))
+    t0 = time.perf_counter()
+    for box in tiles:
+        store.put(key, box, arr)
+    t_put = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for box in tiles:
+        store.get(key, box)
+    t_get = time.perf_counter() - t0
+    n = len(tiles)
+    stats = store.transport.stats
+    return {
+        "put_us": t_put * 1e6 / n,
+        "get_us": t_get * 1e6 / n,
+        "bytes_put": stats.bytes_put,
+        "bytes_get": stats.bytes_get,
+        "payload": arr.nbytes * n,
+    }
+
+
+def _pair(make_store, dom: BoundingBox) -> tuple[dict, dict, float]:
+    """(r1, r2, put amplification): same exchange at both factors."""
+    store1 = make_store(1)
+    r1 = _exchange(store1, dom)
+    store1.close()
+    store2 = make_store(REPL)
+    r2 = _exchange(store2, dom)
+    store2.close()
+    amp = r2["bytes_put"] / max(r1["bytes_put"], 1)
+    # the replication bargain, self-asserted: puts pay ~R x the bytes
+    # (wire framing adds a little on the socket), reads stay flat
+    assert REPL <= amp < REPL + 0.5, f"write amplification {amp} != ~{REPL}"
+    get_ratio = r2["bytes_get"] / max(r1["bytes_get"], 1)
+    assert get_ratio < 1.1, f"replicated reads moved {get_ratio}x the bytes"
+    return r1, r2, amp
+
+
+def run() -> list:
+    side = GRID * TILE
+    dom = BoundingBox((0, 0), (side, side))
+    rows = []
+
+    def make_inproc(r: int) -> DistributedMemoryStorage:
+        return DistributedMemoryStorage(
+            dom, (TILE, TILE), NUM_SERVERS, name="DMS", replication=r
+        )
+
+    r1, r2, amp = _pair(make_inproc, dom)
+    rows.append(row("replication_inproc_put_r1", r1["put_us"], "baseline"))
+    rows.append(row("replication_inproc_put_r2", r2["put_us"],
+                    f"amp={amp:.2f}x"))
+    rows.append(row("replication_inproc_get_r2", r2["get_us"],
+                    f"vs_r1={r2['get_us'] / max(r1['get_us'], 1e-9):.2f}x"))
+
+    with spawn_servers(NUM_SERVERS, processes=PROCESSES) as group:
+
+        def make_socket(r: int) -> DistributedMemoryStorage:
+            # one scope per factor: both stores share the fleet untangled
+            return DistributedMemoryStorage(
+                dom, (TILE, TILE), name="DMS", replication=r,
+                transport=group.transport(scope=f"r{r}"),
+            )
+
+        r1, r2, amp = _pair(make_socket, dom)
+    rows.append(row("replication_socket_put_r1", r1["put_us"], "baseline"))
+    rows.append(row("replication_socket_put_r2", r2["put_us"],
+                    f"amp={amp:.2f}x,{PROCESSES}procs"))
+    rows.append(row("replication_socket_get_r2", r2["get_us"],
+                    f"vs_r1={r2['get_us'] / max(r1['get_us'], 1e-9):.2f}x"))
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

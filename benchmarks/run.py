@@ -29,6 +29,7 @@ from benchmarks import (
     bench_op_speedups,
     bench_overhead,
     bench_pats_error,
+    bench_replication,
     bench_roofline,
     bench_scaling,
     bench_scheduler,
@@ -52,6 +53,7 @@ MODULES = [
     ("tiered_staging", bench_tiers),
     ("transport", bench_transport),
     ("gateway", bench_gateway),
+    ("replication", bench_replication),
 ]
 
 

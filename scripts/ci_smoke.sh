@@ -18,9 +18,10 @@ python -m pytest -x -q
 echo "== benchmarks (fast) + perf gate =="
 bench_and_gate() {
   # the gateway module self-asserts that coalesced reads issue fewer
-  # transport round-trips than naive per-client reads (frame counts)
+  # transport round-trips than naive per-client reads (frame counts);
+  # replication self-asserts write amplification ~R with flat read bytes
   REPRO_BENCH_FAST=1 python -m benchmarks.run \
-    --json "$BENCH_JSON" --only tiered_staging,transport,gateway \
+    --json "$BENCH_JSON" --only tiered_staging,transport,gateway,replication \
   && python scripts/bench_gate.py --run "$BENCH_JSON" \
        --baseline benchmarks/baseline.json
 }

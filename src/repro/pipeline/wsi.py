@@ -115,6 +115,7 @@ def make_wsi_storage(
     num_servers: int = 4,
     server_processes: int = 2,
     endpoints=None,
+    replication: int = 1,
     mem_capacity_bytes: int = 64 << 20,
     write_policy: str = "write_through",
     policy: PlacementPolicy | None = None,
@@ -138,7 +139,10 @@ def make_wsi_storage(
     ``server_processes`` processes and the started
     :class:`~repro.storage.net.ServerGroup` is attached to the returned
     registry as ``registry.server_group`` — the caller owns it (close it
-    after closing the stores).
+    after closing the stores).  ``replication=R`` turns on the DMS
+    stores' R-way block replication (home + next R-1 servers along the
+    SFC ring): reads fail over between replicas, so any R-1 dead servers
+    cause zero failed reads.
 
     In tiered mode the DISK tiers live under ``root`` (subdirs per
     store).  Pass your own ``root`` if you want to clean it up; the
@@ -188,13 +192,13 @@ def make_wsi_storage(
         registry.register(
             DistributedMemoryStorage(
                 dom3, (3, blk, blk), num_servers, name="DMS3",
-                transport=_transport("DMS3"),
+                transport=_transport("DMS3"), replication=replication,
             )
         )
         registry.register(
             DistributedMemoryStorage(
                 dom2, (blk, blk), num_servers, name="DMS2",
-                transport=_transport("DMS2"),
+                transport=_transport("DMS2"), replication=replication,
             )
         )
     elif mode == "tiered":
@@ -215,6 +219,7 @@ def make_wsi_storage(
                     policy=policy,
                     promote_after=promote_after,
                     dms_transport=_transport(name),
+                    replication=replication,
                 )
             )
     else:

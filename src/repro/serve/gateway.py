@@ -28,7 +28,14 @@ under the store's own name with zero call-site changes) while
 A merged window can cover cells none of the members asked for; if the
 store cannot serve the window (a coverage hole raises ``KeyError``) the
 gateway falls back to per-request fetches, so coalescing is a pure
-optimization — results are always bit-exact with direct reads.
+optimization — results are always bit-exact with direct reads.  A
+:class:`~repro.storage.dms.TransportError` is distinguished in the
+stats (``window_failures``, an infrastructure failure operators should
+see, vs ``window_fallbacks``, a benign coverage artifact) but degrades
+the same way: per-request reads still serve members whose ROIs live in
+an upper tier, and members that genuinely need the dead servers fail
+with their own error — cheaply, because the transport's liveness cache
+fails fast.
 """
 from __future__ import annotations
 
@@ -43,6 +50,7 @@ import numpy as np
 
 from repro.core.bbox import BoundingBox
 from repro.core.regions import RegionKey, StorageBackend
+from repro.storage.dms import TransportError
 
 
 class Overloaded(RuntimeError):
@@ -84,10 +92,12 @@ class GatewayStats:
     served: int = 0       # completed with a payload
     failed: int = 0       # completed with a backend error
     rejected: int = 0     # Overloaded at admission
+    abandoned: int = 0    # tickets cancelled after a get() timeout
     batches: int = 0      # worker drain cycles
     windows: int = 0      # tier fetches issued (merged windows)
     coalesced: int = 0    # requests served from a window shared with others
     window_fallbacks: int = 0  # window had a hole -> per-request reads
+    window_failures: int = 0   # window died on the wire -> per-request degrade
     queue_peak: int = 0
 
     def as_dict(self) -> dict:
@@ -337,7 +347,23 @@ class RegionGateway:
                 continue
             try:
                 window_arr = self.store.get(c.members[0].key, c.window)
-            except Exception:  # noqa: BLE001 — hole or tier error: degrade
+            except TransportError:
+                # infrastructure failure (replica failover exhausted), not
+                # a coverage hole: counted separately so operators see it,
+                # but still degraded to per-request reads — a member whose
+                # ROI lives in an upper tier (RAM/DISK) is served even
+                # while the DMS is down, and members that genuinely need
+                # the dead servers fail with their own TransportError
+                # (cheap: the transport's liveness cache fails fast)
+                with self._lock:
+                    self.stats.window_failures += 1
+                for m in c.members:
+                    self._serve_one(m)
+                continue
+            except Exception:  # noqa: BLE001 — coverage hole (KeyError) or
+                # another per-window tier error: degrade to per-request
+                # reads, which either succeed or surface the member's own
+                # error — coalescing stays a pure optimization
                 with self._lock:
                     self.stats.window_fallbacks += 1
                 for m in c.members:
@@ -379,7 +405,17 @@ class RegionGateway:
 
     # -- StorageBackend protocol ----------------------------------------------------
     def get(self, key: RegionKey, roi: BoundingBox) -> np.ndarray:
-        return self.submit(key, roi).result(self.config.request_timeout)
+        ticket = self.submit(key, roi)
+        try:
+            return ticket.result(self.config.request_timeout)
+        except TimeoutError:
+            # cancel so a worker skips the ticket (workers already skip
+            # done() members) instead of fetching a window for a caller
+            # that gave up — and counting the orphan as served
+            if ticket.cancel():
+                with self._lock:
+                    self.stats.abandoned += 1
+            raise
 
     def put(self, key: RegionKey, bb: BoundingBox, array: np.ndarray) -> None:
         self.store.put(key, bb, array)

@@ -12,6 +12,9 @@ live.  Picking one:
   ``Transport`` message protocol: ``InProcTransport`` (in-process shards
   + virtual-time link model) or ``SocketTransport`` (framed TCP to
   ``ServerProcess`` hosts — the multi-host deployment).
+  ``replication=R`` places every block on R servers along the SFC ring
+  and fails reads over between replicas, so R-1 dead servers cause zero
+  failed reads (directories are replicated everywhere already).
 * ``DiskStorage`` (DISK) — ADIOS-style chunked staging with I/O groups
   and a crash-tolerant manifest.  Use for durable staging, checkpoints,
   and payloads too large for memory.
@@ -31,15 +34,18 @@ from repro.storage.autotune import IOConfig, TuneResult, autotune_io
 from repro.storage.disk import DiskCostModel, DiskStats, DiskStorage
 from repro.storage.dms import (
     DistributedMemoryStorage,
+    DMSStats,
     InProcTransport,
     Transport,
+    TransportError,
     TransportStats,
+    decode_homes,
+    encode_homes,
 )
 from repro.storage.net import (
     ServerGroup,
     ServerProcess,
     SocketTransport,
-    TransportError,
     spawn_servers,
 )
 from repro.storage.placement import (
@@ -65,9 +71,12 @@ __all__ = [
     "DiskStats",
     "DiskStorage",
     "DistributedMemoryStorage",
+    "DMSStats",
     "InProcTransport",
     "Transport",
     "TransportStats",
+    "decode_homes",
+    "encode_homes",
     "ServerGroup",
     "ServerProcess",
     "SocketTransport",

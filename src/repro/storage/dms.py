@@ -13,6 +13,20 @@ Faithful mechanics:
     may move data);
   * a get routes per-block requests to home servers and assembles the ROI.
 
+Availability (beyond the paper's single-home placement):
+  * ``replication=R`` writes every payload block to its home server AND
+    the next ``R-1`` servers along the SFC virtual-domain ring, skipping
+    servers co-located with an already-chosen replica (shards sharing a
+    process share its fate); the directory entry records the full
+    replica list (``homes``), with single-``home`` entries still
+    decoding (backward compatible, and the R=1 wire format is
+    byte-for-byte today's);
+  * directory lookups rotate over the servers instead of pinning server 0
+    (every directory is a replica, so any one answers);
+  * a ``TransportError`` mid-read regroups the failed server's blocks onto
+    surviving replicas — with R >= 2, one dead server causes zero failed
+    reads; ``delete`` best-effort-drops on every replica.
+
 Every server interaction goes through the message-based :class:`Transport`
 protocol (``store``/``fetch``/``put_meta``/``lookup``/``keys``/``drop``),
 so the same routing logic rides either
@@ -30,14 +44,38 @@ suite in both cases.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
-from typing import Iterable, Protocol, runtime_checkable
+from typing import Iterable, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
 from repro.core.bbox import BoundingBox
 from repro.core.hilbert import sfc_index, sfc_order_for
 from repro.core.regions import RegionKey
+
+
+class TransportError(ConnectionError):
+    """A wire-level failure (server down, connection reset, bad frame).
+
+    Lives here (not :mod:`repro.storage.net`) because the routing layer
+    catches it to fail over between replicas; ``net`` re-exports it.
+    """
+
+
+def encode_homes(homes: Iterable[int]):
+    """Directory ``homes`` field: a bare int for a single home (today's
+    wire format, byte-for-byte) or a list for R-way replica sets."""
+    homes = [int(s) for s in homes]
+    return homes[0] if len(homes) == 1 else homes
+
+
+def decode_homes(home) -> tuple[int, ...]:
+    """Backward-compatible decode: single-``home`` int entries and
+    ``homes`` replica lists both come back as a tuple of server ids."""
+    if isinstance(home, (int, np.integer)):
+        return (int(home),)
+    return tuple(int(s) for s in home)
 
 
 @dataclasses.dataclass
@@ -68,6 +106,12 @@ class Transport(Protocol):
       * ``fetch_many`` is scatter-gather: N blocks move in ONE round-trip
         (``stats.gets`` counts round-trips, not blocks);
       * arrays round-trip bit-exact with dtype and shape preserved;
+      * the ``home`` field of ``put_meta``/``lookup`` entries is either a
+        bare server id (single home, the legacy format) or a sequence of
+        replica ids — round-tripped as given, decoded via
+        :func:`decode_homes`;
+      * unreachable servers surface as :class:`TransportError` (never a
+        hang longer than the transport's op timeout);
       * ``stats`` accounts every byte moved.
     """
 
@@ -85,14 +129,23 @@ class Transport(Protocol):
     ) -> list[np.ndarray]: ...
 
     def put_meta(
-        self, server: int, key: RegionKey, block_coord: tuple, box: BoundingBox, home: int
+        self,
+        server: int,
+        key: RegionKey,
+        block_coord: tuple,
+        box: BoundingBox,
+        home: int | Sequence[int],
     ) -> None: ...
 
     def put_meta_batch(
-        self, server: int, entries: list[tuple[RegionKey, tuple, BoundingBox, int]]
+        self,
+        server: int,
+        entries: list[tuple[RegionKey, tuple, BoundingBox, int | Sequence[int]]],
     ) -> None: ...
 
-    def lookup(self, server: int, key: RegionKey) -> dict[tuple, tuple[BoundingBox, int]]: ...
+    def lookup(
+        self, server: int, key: RegionKey
+    ) -> dict[tuple, tuple[BoundingBox, "int | Sequence[int]"]]: ...
 
     def keys(self, server: int) -> list[RegionKey]: ...
 
@@ -111,22 +164,45 @@ class _Server:
     def __init__(self, sid: int) -> None:
         self.sid = sid
         self._blocks: dict[tuple, np.ndarray] = {}
-        self._meta: dict[RegionKey, dict[tuple, tuple[BoundingBox, int]]] = {}
+        self._meta: dict[RegionKey, dict[tuple, tuple[BoundingBox, object]]] = {}
         self._lock = threading.Lock()
 
-    def store(self, key: RegionKey, block_coord: tuple, box: BoundingBox, payload: np.ndarray) -> None:
+    def store(
+        self,
+        key: RegionKey,
+        block_coord: tuple,
+        box: BoundingBox,
+        payload: np.ndarray,
+        *,
+        owned: bool = False,
+    ) -> None:
+        # copy on store: the caller may mutate (or have aliased) its
+        # buffer after the put — resident blocks must never share memory
+        # with client arrays.  ``owned=True`` skips the copy when the
+        # caller hands over a private buffer (the socket server decodes
+        # each frame into one; copying it again would double the memory
+        # traffic of every replicated put).
+        if not owned:
+            payload = np.array(payload, copy=True)
+        payload.setflags(write=False)
         with self._lock:
             self._blocks[(key, block_coord)] = payload
 
     def fetch(self, key: RegionKey, block_coord: tuple) -> np.ndarray:
         with self._lock:
-            return self._blocks[(key, block_coord)]
+            block = self._blocks[(key, block_coord)]
+        # read-only view: in-process clients cannot mutate the store
+        # through the returned array (its base is non-writable, so even
+        # setflags cannot re-enable writes)
+        return block.view()
 
-    def put_meta(self, key: RegionKey, block_coord: tuple, box: BoundingBox, home: int) -> None:
+    def put_meta(
+        self, key: RegionKey, block_coord: tuple, box: BoundingBox, home: int | Sequence[int]
+    ) -> None:
         with self._lock:
             self._meta.setdefault(key, {})[block_coord] = (box, home)
 
-    def lookup(self, key: RegionKey) -> dict[tuple, tuple[BoundingBox, int]]:
+    def lookup(self, key: RegionKey) -> dict[tuple, tuple[BoundingBox, object]]:
         with self._lock:
             return dict(self._meta.get(key, {}))
 
@@ -204,7 +280,8 @@ class InProcTransport:
 
     def put_meta(self, server, key, block_coord, box, home) -> None:
         self.servers[server].put_meta(key, block_coord, box, home)
-        if server != home:  # the home server learns the entry for free
+        if server not in decode_homes(home):
+            # servers holding the payload learn the entry for free
             self._account(server, META_MSG_BYTES, "meta")
 
     def put_meta_batch(self, server, entries) -> None:
@@ -237,8 +314,38 @@ class InProcTransport:
         pass
 
 
+@dataclasses.dataclass
+class DMSStats:
+    """Availability accounting for the replicated routing layer."""
+
+    failover_fetches: int = 0   # blocks served by a non-primary replica
+    failed_servers: int = 0     # TransportErrors that rerouted a fetch group
+    empty_reroutes: int = 0     # blocks rerouted past a reachable-but-dataless replica
+    directory_retries: int = 0  # directory lookups retried past a dead/empty server
+    directory_repairs: int = 0  # coverage holes healed by a cross-directory union
+    meta_broadcast_skips: int = 0  # put_meta broadcasts dropped (dead server, R > 1)
+    delete_skips: int = 0       # best-effort drops skipped on unreachable servers
+
+    def reset(self) -> None:
+        self.failover_fetches = self.failed_servers = self.empty_reroutes = 0
+        self.directory_retries = self.directory_repairs = 0
+        self.meta_broadcast_skips = self.delete_skips = 0
+
+
 class DistributedMemoryStorage:
-    """The ``DMS`` global storage backend (StorageBackend protocol)."""
+    """The ``DMS`` global storage backend (StorageBackend protocol).
+
+    ``replication=R`` (default 1) writes every payload block to its home
+    server and the next ``R-1`` servers along the SFC virtual-domain
+    ring; reads fail over between replicas on :class:`TransportError`, so
+    any ``R-1`` simultaneous server deaths cause zero failed reads.
+    WRITES are strict at any R: a put stores to every replica of each
+    block and fails when one is unreachable (only the metadata broadcast
+    tolerates dead servers at R > 1) — degrading a write below R copies
+    would silently void the read guarantee; re-homing blocks off dead
+    servers is the ROADMAP'd write-path failover.  ``self.stats``
+    (:class:`DMSStats`) accounts the failover activity.
+    """
 
     def __init__(
         self,
@@ -248,6 +355,7 @@ class DistributedMemoryStorage:
         *,
         name: str = "DMS",
         transport: Transport | None = None,
+        replication: int = 1,
     ) -> None:
         self.name = name
         self.domain = domain
@@ -268,6 +376,15 @@ class DistributedMemoryStorage:
             raise ValueError(
                 f"num_servers={num_servers} != transport.num_servers={self.num_servers}"
             )
+        self.replication = int(replication)
+        if not 1 <= self.replication <= self.num_servers:
+            raise ValueError(
+                f"replication={replication} must be in [1, num_servers="
+                f"{self.num_servers}]"
+            )
+        self.stats = DMSStats()
+        self._stats_lock = threading.Lock()  # gateway workers call get concurrently
+        self._dir_rotor = itertools.count()  # rotating directory start
         # --- virtual-domain construction (paper Fig. 9) ---
         self._grid = tuple(
             -(-s // b) for s, b in zip(domain.shape, self.block_shape)
@@ -305,6 +422,169 @@ class DistributedMemoryStorage:
         rank = self._virtual_rank[k]
         return (rank * self.num_servers) // self._virtual_size
 
+    def replica_servers(self, block_coord: tuple[int, ...]) -> tuple[int, ...]:
+        """The block's home plus the next ``replication - 1`` servers
+        along the SFC virtual-domain ring (primary first), skipping
+        servers co-located with an already-chosen replica.
+
+        Co-location is read off the transport's endpoint table when it
+        has one (shards packed onto one process share its fate — R-way
+        replication must survive R-1 HOST deaths, not merely R-1 shard
+        ids); transports without endpoints treat every server as its own
+        failure domain.  When there are fewer distinct domains than R,
+        the remainder fills in plain ring order (better a co-located
+        replica than none).
+        """
+        home = self.home_server(block_coord)
+        if self.replication == 1:
+            return (home,)
+        endpoints = getattr(self.transport, "endpoints", None)
+
+        def domain(sid: int):
+            return sid if endpoints is None else endpoints[sid]
+
+        homes = [home]
+        used = {domain(home)}
+        for i in range(1, self.num_servers):
+            sid = (home + i) % self.num_servers
+            if domain(sid) in used:
+                continue
+            homes.append(sid)
+            used.add(domain(sid))
+            if len(homes) == self.replication:
+                return tuple(homes)
+        for i in range(1, self.num_servers):  # not enough distinct domains
+            sid = (home + i) % self.num_servers
+            if sid not in homes:
+                homes.append(sid)
+                if len(homes) == self.replication:
+                    break
+        return tuple(homes)
+
+    # -- availability helpers -------------------------------------------------------
+    def _alive(self, server: int) -> bool:
+        """Transport liveness-cache answer; optimistic without one."""
+        alive = getattr(self.transport, "alive", None)
+        return True if alive is None else bool(alive(server))
+
+    def _directory_order(self) -> list[int]:
+        """Every server id, start rotated per call (directory load
+        spreads over the everywhere-replicated directories, and no single
+        server — least of all server 0 — is a read SPOF), with
+        liveness-cached-dead servers tried last (the cache may be stale,
+        so they are never skipped outright)."""
+        start = next(self._dir_rotor) % self.num_servers
+        order = [(start + i) % self.num_servers for i in range(self.num_servers)]
+        return sorted(order, key=lambda s: not self._alive(s))  # stable
+
+    def _count(self, field: str, n: int = 1) -> None:
+        with self._stats_lock:
+            setattr(self.stats, field, getattr(self.stats, field) + n)
+
+    def _lookup_any(self, key: RegionKey) -> dict[tuple, tuple[BoundingBox, object]]:
+        """First NON-EMPTY directory answer over the rotated order.
+
+        An empty answer is only trusted once a SECOND reachable server
+        confirms it: a crashed server restarted on the same port rejoins
+        with an empty directory, and its answer must not shadow the full
+        directories the healthy servers still hold.  (Two simultaneous
+        empty rejoins exceed the single-fault model; truly-missing keys
+        pay 2 lookups instead of 1 — the miss path, not the hot path.)
+        """
+        last: TransportError | None = None
+        empties = 0
+        empty = None
+        for sid in self._directory_order():
+            try:
+                found = self.transport.lookup(sid, key)
+            except TransportError as e:
+                self._count("directory_retries")
+                last = e
+                continue
+            if found:
+                return found
+            empties += 1
+            empty = found
+            if empties >= 2:
+                return empty
+        if empty is not None:
+            return empty  # every reachable directory agrees: truly empty
+        raise TransportError(
+            f"{self.name}: no directory server reachable for {key} "
+            f"(all {self.num_servers} down)"
+        ) from last
+
+    def _union2(self, fn, merge, what: str) -> None:
+        """Merge ``fn(sid)`` answers from TWO reachable directories.
+
+        One stale (rejoined) server's partial answer can neither hide
+        entries nor shrink extents, because the second (healthy)
+        directory contributes the full set — the same single-fault model
+        the replica failover defends.  At replication=1 a single answer
+        suffices (today's cost: the store was never asked for
+        availability, and every directory is strictly consistent because
+        the meta broadcast is all-or-fail).  Raises
+        :class:`TransportError` when no directory is reachable at all.
+        """
+        want = 2 if self.replication > 1 else 1
+        last: TransportError | None = None
+        reachable = 0
+        for sid in self._directory_order():
+            try:
+                found = fn(sid)
+            except TransportError as e:
+                self._count("directory_retries")
+                last = e
+                continue
+            merge(found)
+            reachable += 1
+            if reachable >= want:
+                return
+        if not reachable:
+            raise TransportError(
+                f"{self.name}: no directory server reachable{what} "
+                f"(all {self.num_servers} down)"
+            ) from last
+
+    def _broadcast(self, fn, skip_stat: str, what: str) -> None:
+        """Run ``fn(sid)`` on EVERY server (writes: meta broadcast,
+        drops).  At replication=1 any failure propagates — today's
+        semantics; with replication a dead server is skipped (counted in
+        ``skip_stat``) as long as some server acknowledged."""
+        acked = 0
+        last: TransportError | None = None
+        for sid in range(self.num_servers):
+            try:
+                fn(sid)
+                acked += 1
+            except TransportError as e:
+                if self.replication == 1:
+                    raise
+                self._count(skip_stat)
+                last = e
+        if not acked:
+            raise TransportError(
+                f"{self.name}: {what} reached no server "
+                f"(all {self.num_servers} down)"
+            ) from last
+
+    def _keys_any(self) -> list[RegionKey]:
+        seen: dict[RegionKey, None] = {}
+
+        def merge(found: list[RegionKey]) -> None:
+            for k in found:
+                seen.setdefault(k, None)
+
+        self._union2(lambda sid: self.transport.keys(sid), merge, "")
+        return list(seen)
+
+    def _lookup_union2(self, key: RegionKey) -> dict[tuple, tuple[BoundingBox, object]]:
+        union: dict[tuple, tuple[BoundingBox, object]] = {}
+        self._union2(
+            lambda sid: self.transport.lookup(sid, key), union.update, f" for {key}"
+        )
+        return union
+
     def _blocks_overlapping(self, box: BoundingBox) -> list[tuple[tuple[int, ...], BoundingBox]]:
         box = box.intersect(self.domain)
         lo_blk = self._block_coord(tuple(box.lo))
@@ -329,49 +609,153 @@ class DistributedMemoryStorage:
         array = np.asarray(array)
         if tuple(array.shape)[: bb.rank] != bb.shape:
             raise ValueError(f"payload shape {array.shape} != bb shape {bb.shape}")
-        meta: list[tuple[RegionKey, tuple, BoundingBox, int]] = []
+        meta: list[tuple[RegionKey, tuple, BoundingBox, object]] = []
         for bc, blk_box in self._blocks_overlapping(bb):
             part = blk_box.intersect(bb)
             if part.is_empty:
                 continue
             payload = np.ascontiguousarray(array[part.local_slices(bb)])
-            home = self.home_server(bc)
-            self.transport.store(home, key, bc, part, payload)
-            meta.append((key, bc, part, home))
+            homes = self.replica_servers(bc)
+            for sid in homes:
+                self.transport.store(sid, key, bc, part, payload)
+            meta.append((key, bc, part, encode_homes(homes)))
         # metadata propagation to every server (cheap, paper S5.4) —
         # batched: one message per server per put, not per block, so a
-        # socket transport pays N round-trips instead of blocks x N
+        # socket transport pays N round-trips instead of blocks x N.
+        # With replication the broadcast tolerates dead servers (their
+        # directory copy dies with them; any surviving directory answers
+        # reads) as long as at least one server acknowledged.
         if meta:
-            for sid in range(self.num_servers):
-                self.transport.put_meta_batch(sid, meta)
+            self._broadcast(
+                lambda sid: self.transport.put_meta_batch(sid, meta),
+                "meta_broadcast_skips",
+                f"metadata broadcast for {key}",
+            )
+
+    def _fetch_blocks(
+        self, key: RegionKey, blocks: list[tuple[tuple, BoundingBox, tuple[int, ...]]]
+    ) -> list[tuple[BoundingBox, np.ndarray]]:
+        """Fetch every (coord, box, homes) block with replica failover.
+
+        Scatter-gather: every server's blocks move in one fetch_many
+        round-trip instead of one fetch per block (single-block reads
+        keep the plain fetch; third-party transports without fetch_many
+        also fall back to it).  A TransportError regroups the failed
+        server's blocks onto their surviving replicas and retries, so a
+        server dying mid-read never fails the read while any replica of
+        each block is still up.  A remote KeyError (the server is up but
+        the block is gone — a crashed host restarted empty on the same
+        port) reroutes per BLOCK, so blocks the server does hold still
+        serve from it.
+        """
+        fetch_many = getattr(self.transport, "fetch_many", None)
+        pieces: list[tuple[BoundingBox, np.ndarray]] = []
+        pending = list(blocks)
+        dead: set[int] = set()  # TransportError: host unreachable
+        missing: set[tuple[int, tuple]] = set()  # (server, coord): data gone there
+        while pending:
+            groups: dict[int, list[tuple[tuple, BoundingBox, tuple[int, ...]]]] = {}
+            for item in pending:
+                bc, _, homes = item
+                live = [
+                    s for s in homes if s not in dead and (s, bc) not in missing
+                ]
+                if not live:
+                    if any((s, bc) in missing for s in homes):
+                        # some replica answered and lacked the block:
+                        # the data is gone, not merely unreachable
+                        raise KeyError(
+                            f"{self.name}: block {bc} of {key} missing from "
+                            f"every reachable replica {list(homes)} (a crashed "
+                            f"server rejoined empty?)"
+                        )
+                    raise TransportError(
+                        f"{self.name}: block {bc} of {key} unreachable — every "
+                        f"replica {list(homes)} failed (replication="
+                        f"{self.replication}; raise it to survive more faults)"
+                    )
+                # primary first; the transport's liveness cache routes
+                # around known-dead hosts without paying a probe
+                target = next((s for s in live if self._alive(s)), live[0])
+                groups.setdefault(target, []).append(item)
+            pending = []
+            for server in sorted(groups):
+                items = groups[server]
+                try:
+                    fetched: list | None = None
+                    if fetch_many is not None and len(items) > 1:
+                        try:
+                            fetched = list(
+                                fetch_many(server, [(key, bc) for bc, _, _ in items])
+                            )
+                        except KeyError:
+                            # one absent member poisons the whole gather:
+                            # degrade to per-block fetches so only the
+                            # genuinely missing blocks fail over
+                            fetched = None
+                    if fetched is None:
+                        fetched = []
+                        for bc, _, _ in items:
+                            try:
+                                fetched.append(self.transport.fetch(server, key, bc))
+                            except KeyError:
+                                fetched.append(None)
+                                missing.add((server, bc))
+                                self._count("empty_reroutes")
+                except TransportError:
+                    dead.add(server)
+                    self._count("failed_servers")
+                    pending.extend(items)  # pieces not yet appended: no dupes
+                    continue
+                for (bc, box, homes), blk in zip(items, fetched):
+                    if blk is None:
+                        pending.append((bc, box, homes))
+                    else:
+                        if server != homes[0]:
+                            self._count("failover_fetches")
+                        pieces.append((box, blk))
+        return pieces
 
     def get(self, key: RegionKey, roi: BoundingBox) -> np.ndarray:
         from repro.storage.tiers import _assemble
 
-        # any server's directory can answer the lookup; use server 0
-        directory = self.transport.lookup(0, key)
+        # any server's directory can answer the lookup: rotate + fail
+        # over instead of pinning server 0 (the old single point of
+        # failure for every read on a real fleet)
+        directory = self._lookup_any(key)
         if not directory:
             raise KeyError(f"DMS: no data for {key}")
-        by_home: dict[int, list[tuple[tuple, BoundingBox]]] = {}
-        for bc, (box, home) in directory.items():
-            if box.intersects(roi):
-                by_home.setdefault(home, []).append((bc, box))
-        # scatter-gather: every server's blocks move in one fetch_many
-        # round-trip instead of one fetch per block (single-block reads
-        # keep the plain fetch; third-party transports without fetch_many
-        # also fall back to it)
-        fetch_many = getattr(self.transport, "fetch_many", None)
-        pieces = []
-        for home in sorted(by_home):
-            items = by_home[home]
-            if fetch_many is not None and len(items) > 1:
-                blocks = fetch_many(home, [(key, bc) for bc, _ in items])
-                pieces.extend((box, blk) for (_, box), blk in zip(items, blocks))
-            else:
-                pieces.extend(
-                    (box, self.transport.fetch(home, key, bc)) for bc, box in items
-                )
+        blocks = [
+            (bc, box, decode_homes(homes))
+            for bc, (box, homes) in directory.items()
+            if box.intersects(roi)
+        ]
+        pieces = self._fetch_blocks(key, blocks)
         out, covered = _assemble(pieces, roi)
+        if (out is None or not covered.all()) and self.replication > 1:
+            # the answering directory may have been a rejoined server's
+            # partial one (it received only post-rejoin broadcasts):
+            # before failing, corroborate with a two-directory union —
+            # under the single-fault model at most one directory is
+            # stale, so two reachable answers recover the full entry set
+            # — and fetch only what the fast lookup missed (the pieces
+            # already in hand stay: no double transfer).  Gated on
+            # replication > 1: at R=1 an under-covered read keeps
+            # today's exact cost (the gateway's window-hole fallback and
+            # TieredStore's cross-tier probes raise KeyError routinely
+            # and must not pay extra round-trips for availability the
+            # store was never asked for)
+            union = self._lookup_union2(key)
+            have = {bc for bc, _, _ in blocks}
+            extra = [
+                (bc, box, decode_homes(homes))
+                for bc, (box, homes) in union.items()
+                if bc not in have and box.intersects(roi)
+            ]
+            if extra:
+                self._count("directory_repairs")
+                pieces.extend(self._fetch_blocks(key, extra))
+                out, covered = _assemble(pieces, roi)
         if out is None:
             raise KeyError(f"DMS: {key} has no blocks intersecting {roi}")
         if not covered.all():
@@ -381,16 +765,29 @@ class DistributedMemoryStorage:
         return out
 
     def query(self, namespace: str, name: str) -> list[tuple[RegionKey, BoundingBox]]:
+        # directories are everywhere-replicated: any reachable server
+        # answers.  Both the key list and the per-key extents union two
+        # directories, so a rejoined server's partial directory can
+        # neither hide a key nor shrink its reported box (callers like
+        # TieredStore._assemble_across_tiers size their reads off it)
         seen: dict[RegionKey, BoundingBox] = {}
-        for key in self.transport.keys(0):
+        for key in self._keys_any():
             if key.namespace == namespace and key.name == name:
-                for box, _ in self.transport.lookup(0, key).values():
+                for box, _ in self._lookup_union2(key).values():
                     seen[key] = box if key not in seen else seen[key].union(box)
         return sorted(seen.items(), key=lambda kv: kv[0])
 
     def delete(self, key: RegionKey) -> None:
-        for sid in range(self.num_servers):
-            self.transport.drop(sid, key)
+        # with replication, best-effort on every server (an unreachable
+        # server's copies usually die with it, and a restarted server
+        # comes back empty) as long as SOME server acked; at R=1 a failed
+        # drop propagates — today's behavior, and silently leaving the
+        # only copy behind would resurrect the key once the server heals
+        self._broadcast(
+            lambda sid: self.transport.drop(sid, key),
+            "delete_skips",
+            f"delete of {key}",
+        )
 
     def close(self) -> None:
         """Release transport resources (sockets); in-proc is a no-op."""

@@ -53,13 +53,24 @@ import numpy as np
 from repro.core.bbox import BoundingBox
 from repro.core.regions import RegionKey
 from repro.storage.disk import _bb_from_json, _bb_to_json, _key_from_json, _key_to_json
-from repro.storage.dms import META_MSG_BYTES, TransportStats, _Server
+from repro.storage.dms import (  # noqa: F401 — TransportError re-exported
+    META_MSG_BYTES,
+    TransportError,
+    TransportStats,
+    _Server,
+    decode_homes,
+    encode_homes,
+)
 
 _PREFIX = struct.Struct("!IQ")  # header_len, payload_len
 
 
-class TransportError(ConnectionError):
-    """A wire-level failure (server down, connection reset, bad frame)."""
+def _homes_json(home):
+    """``home`` directory field for the wire: a bare int stays a bare int
+    (the legacy single-home format, byte-for-byte), a replica sequence
+    becomes a JSON list.  The server stores it as sent; lookup returns it
+    as stored.  One source of truth: the dms codec pair."""
+    return encode_homes(decode_homes(home))
 
 
 # ---------------------------------------------------------------------------
@@ -155,6 +166,16 @@ class SocketTransport:
     isolation that separate ``InProcTransport`` instances give for free.
     (``payload_bytes`` stays physical: it reports the server's total
     resident bytes across scopes.)
+
+    Liveness: a request failure marks the endpoint dead for
+    ``dead_backoff`` seconds.  The first request after a failure (and
+    after each backoff expiry) sends one short ``ping`` probe
+    (``probe_timeout``) — so a transient blip recovers on the very next
+    request — while requests between a FAILED probe and its backoff
+    expiry fail fast with :class:`TransportError` instead of re-paying a
+    connect/op timeout, which is what keeps the DMS's replica failover
+    cheap.  ``alive()`` exposes the cache so routing can prefer live
+    replicas up front.
     """
 
     def __init__(
@@ -164,6 +185,8 @@ class SocketTransport:
         connect_timeout: float = 10.0,
         op_timeout: float = 120.0,
         scope: str | None = None,
+        dead_backoff: float = 2.0,
+        probe_timeout: float = 1.0,
     ) -> None:
         self.endpoints = [_parse_endpoint(e) for e in endpoints]
         if not self.endpoints:
@@ -173,10 +196,15 @@ class SocketTransport:
         self.stats = TransportStats()
         self.connect_timeout = connect_timeout
         self.op_timeout = op_timeout
+        self.dead_backoff = dead_backoff
+        self.probe_timeout = probe_timeout
         self._conns: dict[tuple[str, int], socket.socket] = {}
         self._conn_locks: dict[tuple[str, int], threading.Lock] = {
             addr: threading.Lock() for addr in set(self.endpoints)
         }
+        self._dead: dict[tuple[str, int], float] = {}  # addr -> retry-at (monotonic)
+        self._probe_failed: set[tuple[str, int]] = set()  # probed dead this window
+        self._closed = False
         self._stats_lock = threading.Lock()
         self._elapsed = 0.0
         self._busy_until = 0.0  # interval-union bookkeeping for virtual_time
@@ -189,6 +217,8 @@ class SocketTransport:
         try:
             sock = socket.create_connection(addr, timeout=self.connect_timeout)
         except OSError as e:
+            self._dead[addr] = time.monotonic() + self.dead_backoff
+            self._probe_failed.discard(addr)
             raise TransportError(f"cannot reach DMS server at {addr[0]}:{addr[1]}: {e}") from e
         sock.settimeout(self.op_timeout)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -203,16 +233,72 @@ class SocketTransport:
             except OSError:
                 pass
 
+    # -- liveness cache -------------------------------------------------------------
+    def alive(self, server: int) -> bool:
+        """Cheap cache read (no network): False while the endpoint's last
+        failure is inside its ``dead_backoff`` window."""
+        until = self._dead.get(self.endpoints[server])
+        return until is None or time.monotonic() >= until
+
+    def _probe(self, addr: tuple[str, int]) -> bool:
+        """Short-timeout ping on a throwaway connection: cheaper than
+        paying a full op timeout to rediscover a still-dead host."""
+        try:
+            with socket.create_connection(addr, timeout=self.probe_timeout) as s:
+                s.settimeout(self.probe_timeout)
+                send_frame(s, {"op": "ping", "sid": -1})
+                recv_frame(s)
+            return True
+        except (OSError, TransportError):
+            return False
+
+    def _check_liveness(self, server: int, addr: tuple[str, int], op) -> None:
+        """One cheap ping probe per failure / backoff window, fail fast
+        in between.  Probing on the FIRST retry after a failure (not
+        only once the backoff expires) means a transient blip on a
+        block's last live replica costs one probe, not ``dead_backoff``
+        seconds of failed reads; a genuinely dead host still costs at
+        most one probe per window."""
+        until = self._dead.get(addr)
+        if until is None:
+            return
+        now = time.monotonic()
+        if now < until and addr in self._probe_failed:
+            raise TransportError(
+                f"DMS server {server} at {addr[0]}:{addr[1]} marked dead for "
+                f"another {until - now:.1f}s (liveness backoff); {op!r} not sent"
+            )
+        if not self._probe(addr):
+            self._probe_failed.add(addr)
+            self._dead[addr] = time.monotonic() + self.dead_backoff
+            raise TransportError(
+                f"DMS server {server} at {addr[0]}:{addr[1]} still unreachable "
+                f"(ping probe failed); backing off {self.dead_backoff:.1f}s"
+            )
+        self._dead.pop(addr, None)
+        self._probe_failed.discard(addr)
+
     def _request(self, server: int, header: dict, payload=b"") -> tuple[dict, bytearray, int]:
         addr = self.endpoints[server]
         t0 = time.perf_counter()
         with self._conn_locks[addr]:
+            if self._closed:
+                raise TransportError(
+                    f"transport is closed; {header.get('op')!r} to server "
+                    f"{server} refused"
+                )
+            self._check_liveness(server, addr, header.get("op"))
             sock = self._connection(addr)
             try:
                 wire = send_frame(sock, header, payload)
                 rheader, rpayload, rwire = recv_frame(sock)
             except (OSError, TransportError) as e:
                 self._drop_connection(addr)
+                # fresh failure: dead-marked, but the next request earns
+                # one probe (see _check_liveness) — a blip must not cost
+                # the whole backoff window
+                self._dead[addr] = time.monotonic() + self.dead_backoff
+                self._probe_failed.discard(addr)
                 raise TransportError(
                     f"DMS server {server} at {addr[0]}:{addr[1]} failed during "
                     f"{header.get('op')!r}: {e}"
@@ -322,7 +408,7 @@ class SocketTransport:
             "key": _key_to_json(self._scoped(key)),
             "coord": list(block_coord),
             "bb": _bb_to_json(box),
-            "home": home,
+            "home": _homes_json(home),
         }
         self._request(server, header)
         self._account("meta", META_MSG_BYTES)
@@ -334,7 +420,12 @@ class SocketTransport:
             "op": "put_meta_batch",
             "sid": server,
             "entries": [
-                [_key_to_json(self._scoped(key)), list(coord), _bb_to_json(box), home]
+                [
+                    _key_to_json(self._scoped(key)),
+                    list(coord),
+                    _bb_to_json(box),
+                    _homes_json(home),
+                ]
                 for key, coord, box, home in entries
             ],
         }
@@ -389,8 +480,21 @@ class SocketTransport:
             self._busy_until = 0.0
 
     def close(self) -> None:
-        for addr in list(self._conns):
-            self._drop_connection(addr)
+        # refuse new requests, then close each connection under its lock
+        # so an in-flight _request finishes its frame first.  The wait is
+        # bounded: a request stuck in recv on a hung host must not stall
+        # shutdown for its full op_timeout — after the grace period the
+        # socket is closed anyway, and the stuck recv's OSError is still
+        # wrapped into TransportError by _request (never a raw mid-frame
+        # error reaching the caller)
+        self._closed = True
+        for addr, lock in self._conn_locks.items():
+            acquired = lock.acquire(timeout=1.0)
+            try:
+                self._drop_connection(addr)
+            finally:
+                if acquired:
+                    lock.release()
 
 
 # ---------------------------------------------------------------------------
@@ -418,6 +522,7 @@ class _NetServer(socketserver.ThreadingTCPServer):
                 tuple(header["coord"]),
                 _bb_from_json(header["bb"]),
                 decode_array(header["array"], payload),
+                owned=True,  # the frame buffer is private: no second copy
             )
             return {"ok": True}, b""
         if op == "fetch":
@@ -436,13 +541,16 @@ class _NetServer(socketserver.ThreadingTCPServer):
                 _key_from_json(header["key"]),
                 tuple(header["coord"]),
                 _bb_from_json(header["bb"]),
-                int(header["home"]),
+                _homes_json(header["home"]),
             )
             return {"ok": True}, b""
         if op == "put_meta_batch":
             for kj, coord, bbj, home in header["entries"]:
                 shard.put_meta(
-                    _key_from_json(kj), tuple(coord), _bb_from_json(bbj), int(home)
+                    _key_from_json(kj),
+                    tuple(coord),
+                    _bb_from_json(bbj),
+                    _homes_json(home),
                 )
             return {"ok": True}, b""
         if op == "lookup":
@@ -576,8 +684,10 @@ class ServerProcess:
                     + "".join(banner[-20:])
                 ) from None
             if line is None:
+                code = self.proc.poll()
+                self.proc = None  # failed boot: the handle must stay retryable
                 raise TransportError(
-                    f"DMS server failed to start (exit={self.proc.poll()}): "
+                    f"DMS server failed to start (exit={code}): "
                     + "".join(banner[-20:])
                 )
             if line.startswith("REPRO_NET LISTENING"):
@@ -609,12 +719,17 @@ class ServerProcess:
             except subprocess.TimeoutExpired:
                 self.proc.kill()
                 self.proc.wait()
+        # reset the handle so start() works again — a stopped/crashed
+        # server must be restartable on its (now known) port, which is
+        # the crash-simulation primitive the failover tests build on
+        self.proc = None
 
     def kill(self) -> None:
-        """Hard-kill (crash simulation for restart tests)."""
+        """Hard-kill (crash simulation for failover/restart tests)."""
         if self.proc is not None and self.proc.poll() is None:
             self.proc.kill()
             self.proc.wait()
+        self.proc = None
 
     def __enter__(self) -> "ServerProcess":
         return self.start() if self.proc is None else self

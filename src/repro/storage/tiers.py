@@ -805,6 +805,7 @@ class TieredStore:
         promote_after: int = 2,
         disk_kwargs: dict | None = None,
         dms_transport=None,
+        replication: int = 1,
     ) -> "TieredStore":
         """The paper-shaped stack: bounded RAM -> DISK (ADIOS-style) -> DMS.
 
@@ -814,6 +815,11 @@ class TieredStore:
         makes the bottom tier span hosts — demotion, write-back flush and
         ``locality()`` are unchanged, only the bytes ride TCP.  The store
         owns the transport: ``close()`` closes it.
+
+        ``replication`` is the DMS tier's R-way block replication: each
+        demoted/flushed block lands on R servers along the SFC ring, so
+        the bottom tier survives R-1 server deaths with zero failed
+        reads.
         """
         from repro.storage.disk import DiskStorage
         from repro.storage.dms import DistributedMemoryStorage
@@ -824,6 +830,7 @@ class TieredStore:
             domain, block_shape,
             num_servers if dms_transport is None else None,
             name=f"{name}-DMS", transport=dms_transport,
+            replication=replication,
         )
         return TieredStore(
             [

@@ -102,6 +102,45 @@ def test_trailing_channel_dims():
     assert np.array_equal(dms.get(key, roi), arr[10:30, 20:60])
 
 
+def test_replication_places_blocks_on_ring_neighbors():
+    """replication=2: every block lands on its home AND the next server
+    along the SFC virtual-domain ring, doubling resident bytes but
+    leaving reads bit-exact."""
+    from repro.storage import decode_homes
+
+    dms = DistributedMemoryStorage(DOM, (16, 16), 4, replication=2)
+    arr = np.random.default_rng(3).random((64, 64), dtype=np.float32)
+    dms.put(_key(), DOM, arr)
+    assert np.array_equal(dms.get(_key(), DOM), arr)
+    assert sum(dms.server_load()) == 2 * arr.nbytes  # write amplification = R
+    directory = dms.transport.lookup(1, _key())
+    assert len(directory) == 16
+    for bc, (_, h) in directory.items():
+        homes = decode_homes(h)
+        assert homes == dms.replica_servers(bc)
+        assert homes[0] == dms.home_server(bc)
+        assert homes[1] == (homes[0] + 1) % 4
+        # the payload really is resident on both replicas
+        for sid in homes:
+            assert dms._servers[sid].fetch(_key(), bc) is not None
+    assert dms.stats.failover_fetches == 0  # healthy fleet: primaries serve
+
+
+def test_replication_validation():
+    import pytest
+
+    with pytest.raises(ValueError, match="replication"):
+        DistributedMemoryStorage(DOM, (16, 16), 4, replication=0)
+    with pytest.raises(ValueError, match="replication"):
+        DistributedMemoryStorage(DOM, (16, 16), 4, replication=5)
+    # full replication (R == num_servers) is legal: every server holds all
+    dms = DistributedMemoryStorage(DOM, (16, 16), 4, replication=4)
+    arr = np.ones((64, 64), np.float32)
+    dms.put(_key(), DOM, arr)
+    assert all(load == arr.nbytes for load in dms.server_load())
+    assert np.array_equal(dms.get(_key(), DOM), arr)
+
+
 def test_throughput_accounting():
     dms = DistributedMemoryStorage(DOM, (16, 16), 4)
     arr = np.ones((64, 64), np.float32)

@@ -19,6 +19,7 @@ from repro.storage import (
     MemoryTier,
     Tier,
     TieredStore,
+    TransportError,
 )
 
 DOM = BoundingBox((0, 0), (128, 128))
@@ -176,6 +177,79 @@ def test_window_hole_falls_back_to_per_request_reads():
     assert gw.stats.window_fallbacks == 1
     assert gw.stats.served == 2
     gw.close()
+
+
+def test_timed_out_get_abandons_ticket():
+    """A get() that times out must cancel its ticket — the worker then
+    skips it instead of fetching a window for a caller that gave up and
+    counting the orphan as served."""
+    store, _ = _dms_store()
+    gw = RegionGateway(
+        store, config=GatewayConfig(workers=1, request_timeout=0.15)
+    )
+    gw.pause()  # the ticket stays queued past the request timeout
+    with pytest.raises(TimeoutError):
+        gw.get(_key(), BoundingBox((0, 0), (TILE, TILE)))
+    assert gw.stats.abandoned == 1
+    gw.resume()
+    deadline = time.monotonic() + 10.0
+    while gw.queue_depth() > 0 and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert gw.queue_depth() == 0
+    assert gw.stats.served == 0  # the abandoned ticket was never "served"
+    gw.close()
+
+
+class _PartialOutageStore:
+    """StorageBackend where only one ROI survives a transport outage —
+    the shape of a TieredStore whose RAM tier still holds some members
+    while the DMS tier is down (gateway TransportError-path fixture)."""
+
+    name = "OUTAGESTORE"
+
+    def __init__(self, alive_roi, payload) -> None:
+        self.alive_roi = alive_roi
+        self.payload = payload
+        self.gets = 0
+
+    def get(self, key, roi):
+        self.gets += 1
+        if roi == self.alive_roi:
+            return self.payload.copy()  # e.g. served from the RAM tier
+        raise TransportError("every replica down")
+
+    def put(self, key, bb, array) -> None:
+        pass
+
+    def query(self, namespace, name):
+        return []
+
+    def delete(self, key) -> None:
+        pass
+
+
+def test_window_transport_error_degrades_per_request():
+    """A TransportError on the merged window is an infrastructure
+    failure (counted under window_failures, not window_fallbacks) but
+    still degrades to per-request reads: a member whose ROI an upper
+    tier can serve succeeds, the others fail with the real error."""
+    a = BoundingBox((0, 0), (32, 32))
+    b = BoundingBox((0, 16), (32, 48))  # overlaps a -> one merged window
+    alive = np.full((32, 32), 3.0, np.float32)
+    store = _PartialOutageStore(a, alive)
+    gw = RegionGateway(store, config=GatewayConfig(workers=1))
+    gw.pause()
+    ta = gw.submit(_key(), a)
+    tb = gw.submit(_key(), b)
+    gw.resume()
+    np.testing.assert_array_equal(ta.result(30.0), alive)  # survived outage
+    with pytest.raises(TransportError, match="every replica down"):
+        tb.result(30.0)
+    assert store.gets == 3  # 1 failed window + 2 per-request reads
+    assert gw.stats.window_failures == 1
+    assert gw.stats.window_fallbacks == 0
+    assert gw.stats.served == 1 and gw.stats.failed == 1
+    gw.close(close_store=False)
 
 
 def test_admission_rejects_under_tiny_ram_tier_pressure():

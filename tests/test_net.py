@@ -1,5 +1,6 @@
 """Multi-host DMS transport: wire codec, Transport conformance, live
-ServerProcess round-trips, tiered staging over sockets, WSI on sockets."""
+ServerProcess round-trips, R-way replication + failover chaos, tiered
+staging over sockets, WSI on sockets."""
 import threading
 import time
 
@@ -16,6 +17,7 @@ from repro.storage import (
     TieredStore,
     Transport,
     TransportError,
+    decode_homes,
     spawn_servers,
 )
 from repro.storage.net import ServerProcess, decode_array, encode_array
@@ -172,6 +174,99 @@ def test_fetch_many_conformance(transport):
         transport.drop(sid, key)
 
 
+def test_transport_mutation_safety(transport):
+    """Resident blocks never alias client buffers: mutating the array a
+    caller put (or the one it fetched back) must not corrupt the store —
+    on BOTH transports (the socket copies bytes on the wire; the in-proc
+    shards copy on store and hand out read-only views)."""
+    key = _key("mut")
+    box = BoundingBox((0, 0), (4, 4))
+    original = np.arange(16, dtype=np.float32).reshape(4, 4)
+    buf = original.copy()
+    transport.store(0, key, (0, 0), box, buf)
+    buf[:] = -1.0  # caller scribbles on its buffer after the put
+    got = transport.fetch(0, key, (0, 0))
+    np.testing.assert_array_equal(got, original)
+    # scribbling on the fetched array either raises (read-only view) or
+    # lands in a private copy — never in the store
+    try:
+        got[0, 0] = 99.0
+    except ValueError:
+        pass
+    np.testing.assert_array_equal(transport.fetch(0, key, (0, 0)), original)
+    # same guarantee through the scatter-gather path
+    transport.store(0, key, (1, 0), box, original.copy())
+    many = transport.fetch_many(0, [(key, (0, 0)), (key, (1, 0))])
+    for blk in many:
+        try:
+            blk[0, 0] = 77.0
+        except ValueError:
+            pass
+    for blk in transport.fetch_many(0, [(key, (0, 0)), (key, (1, 0))]):
+        np.testing.assert_array_equal(blk, original)
+    transport.drop(0, key)
+
+
+def test_homes_metadata_roundtrip(transport):
+    """Directory entries carry a single home (legacy int, preserved
+    as-is) or a replica list; both transports round-trip both forms and
+    ``decode_homes`` normalizes them."""
+    key = _key("homes")
+    box = BoundingBox((0, 0), (8, 8))
+    box2 = BoundingBox((8, 8), (16, 16))
+    transport.put_meta(0, key, (1, 2), box, 3)          # legacy single home
+    transport.put_meta(0, key, (3, 4), box, [1, 3])     # replica set
+    transport.put_meta_batch(
+        0, [(key, (5, 6), box, 2), (key, (7, 8), box2, [0, 2])]
+    )
+    looked = transport.lookup(0, key)
+    bb, h = looked[(1, 2)]
+    assert bb == box and isinstance(h, int) and decode_homes(h) == (3,)
+    assert decode_homes(looked[(3, 4)][1]) == (1, 3)
+    assert decode_homes(looked[(5, 6)][1]) == (2,)
+    assert looked[(7, 8)][0] == box2
+    assert decode_homes(looked[(7, 8)][1]) == (0, 2)
+    transport.drop(0, key)
+
+
+def test_replication_wire_format_preserved_at_r1(group):
+    """replication=1 must keep today's directory format byte-for-byte
+    (bare-int homes); replication=2 records the full replica ring — over
+    both transports."""
+    arr = np.random.default_rng(11).random((64, 64)).astype(np.float32)
+    for make_tr in (lambda: InProcTransport(4), group.transport):
+        dms1 = DistributedMemoryStorage(DOM, (16, 16), transport=make_tr())
+        dms1.put(_key("r1"), DOM, arr)
+        for _, (_, h) in dms1.transport.lookup(1, _key("r1")).items():
+            assert isinstance(h, int)  # legacy format, not a 1-list
+        assert sum(dms1.server_load()) == arr.nbytes
+        dms1.delete(_key("r1"))
+        dms1.close()
+
+        dms2 = DistributedMemoryStorage(
+            DOM, (16, 16), transport=make_tr(), replication=2
+        )
+        dms2.put(_key("r2"), DOM, arr)
+        eps = getattr(dms2.transport, "endpoints", None)
+        for bc, (_, h) in dms2.transport.lookup(3, _key("r2")).items():
+            homes = decode_homes(h)
+            assert homes == dms2.replica_servers(bc)
+            assert len(homes) == 2
+            assert homes[0] == dms2.home_server(bc)
+            if eps is None:
+                assert homes[1] == (homes[0] + 1) % 4  # SFC-ring neighbor
+            else:
+                # the fleet packs 2 shards per process: the ring walk
+                # must skip the co-located neighbor — replicas live in
+                # distinct failure domains (processes)
+                assert eps[homes[0]] != eps[homes[1]]
+        # write amplification: every block resident on both replicas
+        assert sum(dms2.server_load()) == 2 * arr.nbytes
+        np.testing.assert_array_equal(dms2.get(_key("r2"), DOM), arr)
+        dms2.delete(_key("r2"))
+        dms2.close()
+
+
 def test_dms_get_uses_scatter_gather_round_trips(group):
     """A multi-block DMS read costs one fetch_many per touched server,
     not one fetch per block — over both transports."""
@@ -325,6 +420,333 @@ def test_server_restart_error_surfacing():
         tr2.close()
     finally:
         fresh.stop()
+
+
+def test_server_process_kill_restart_reconnect():
+    """stop()/kill() reset the handle, so the SAME ServerProcess restarts
+    on its known port and the SAME transport reconnects once the liveness
+    backoff expires — the crash-simulation primitive behind the failover
+    tests."""
+    proc = ServerProcess([0]).start()
+    tr = SocketTransport(
+        [proc.address], connect_timeout=5.0, op_timeout=10.0, dead_backoff=0.2
+    )
+    box = BoundingBox((0, 0), (4, 4))
+    payload = np.ones((4, 4), np.float32)
+    try:
+        tr.store(0, _key("cycle"), (0, 0), box, payload)
+        proc.kill()
+        with pytest.raises(TransportError):
+            tr.fetch(0, _key("cycle"), (0, 0))
+        assert not tr.alive(0)  # liveness cache armed by the failure
+
+        proc.start()  # restart on the same port: stop/kill reset the handle
+        assert proc.alive()
+        deadline = time.monotonic() + 15.0
+        while True:  # backoff expiry + ping probe re-admit the host
+            try:
+                tr.store(0, _key("cycle"), (0, 0), box, payload)
+                break
+            except TransportError:
+                assert time.monotonic() < deadline, "never reconnected"
+                time.sleep(0.1)
+        assert tr.alive(0)
+        np.testing.assert_array_equal(tr.fetch(0, _key("cycle"), (0, 0)), payload)
+    finally:
+        tr.close()
+        proc.stop()
+    # a second start() after stop() must not raise "already started"
+    proc.start()
+    proc.stop()
+
+
+def test_server_process_failed_start_is_retryable():
+    """A child that dies before the LISTENING banner (e.g. port already
+    bound) must leave the handle restartable, same as stop()/kill()."""
+    import socket as pysock
+
+    blocker = pysock.socket()
+    blocker.bind(("127.0.0.1", 0))
+    blocker.listen(1)
+    port = blocker.getsockname()[1]
+    proc = ServerProcess([0], port=port)
+    with pytest.raises(TransportError, match="failed to start"):
+        proc.start()
+    assert not proc.alive()
+    blocker.close()
+    proc.start()  # retry on the same handle, port now free
+    try:
+        tr = SocketTransport([proc.address])
+        assert tr.ping(0) == [0]
+        tr.close()
+    finally:
+        proc.stop()
+
+
+def test_liveness_probe_recovers_within_backoff_window():
+    """A transient failure must cost one probe, not dead_backoff seconds:
+    the first request after a failure pings the host and proceeds if it
+    answers — otherwise a blip on a block's LAST live replica would fail
+    reads for the whole window."""
+    proc = ServerProcess([0]).start()
+    tr = SocketTransport(
+        [proc.address], connect_timeout=5.0, op_timeout=10.0,
+        dead_backoff=60.0, probe_timeout=2.0,
+    )
+    box = BoundingBox((0, 0), (4, 4))
+    payload = np.ones((4, 4), np.float32)
+    try:
+        tr.store(0, _key("blip"), (0, 0), box, payload)
+        proc.kill()
+        with pytest.raises(TransportError):
+            tr.fetch(0, _key("blip"), (0, 0))
+        assert not tr.alive(0)
+        proc.start()  # back on the same port well inside the 60s backoff
+        # the very next request probes and succeeds — no 60s outage
+        tr.store(0, _key("blip"), (0, 0), box, payload)
+        np.testing.assert_array_equal(tr.fetch(0, _key("blip"), (0, 0)), payload)
+        assert tr.alive(0)
+        # a host that fails its probe DOES fail fast until the window ends
+        proc.kill()
+        with pytest.raises(TransportError):
+            tr.fetch(0, _key("blip"), (0, 0))
+        t0 = time.perf_counter()
+        with pytest.raises(TransportError):  # probe fails: re-armed
+            tr.fetch(0, _key("blip"), (0, 0))
+        with pytest.raises(TransportError, match="backoff"):  # fail-fast now
+            tr.fetch(0, _key("blip"), (0, 0))
+        assert time.perf_counter() - t0 < 5.0  # never a full op_timeout
+    finally:
+        tr.close()
+        proc.stop()
+
+
+def test_socket_close_refuses_new_requests(group):
+    tr = group.transport()
+    tr.ping(0)
+    tr.close()
+    with pytest.raises(TransportError, match="closed"):
+        tr.fetch(0, _key("closed"), (0, 0))
+    with pytest.raises(TransportError, match="closed"):
+        tr.store(
+            0, _key("closed"), (0, 0), BoundingBox((0, 0), (2, 2)),
+            np.zeros((2, 2), np.float32),
+        )
+    tr.close()  # idempotent
+
+
+def test_socket_close_while_requests_in_flight(group):
+    """close() takes the per-connection locks: concurrent requests either
+    complete normally or surface as TransportError — never an arbitrary
+    mid-frame OSError."""
+    tr = group.transport()
+    key = _key("inflight")
+    box = BoundingBox((0, 0), (64, 64))
+    payload = np.random.default_rng(12).random((64, 64)).astype(np.float32)
+    tr.store(1, key, (0, 0), box, payload)
+    stop = threading.Event()
+    bad: list[BaseException] = []
+
+    def reader():
+        while not stop.is_set():
+            try:
+                tr.fetch(1, key, (0, 0))
+            except TransportError:
+                return  # expected once closed
+            except BaseException as e:  # noqa: BLE001
+                bad.append(e)
+                return
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.2)
+    tr.close()
+    stop.set()
+    for t in threads:
+        t.join(timeout=30)
+    assert not bad, bad
+    cleanup = group.transport()
+    cleanup.drop(1, key)
+    cleanup.close()
+
+
+# ---------------------------------------------------------------------------
+# chaos: R-way replication + failover reads on a real fleet
+# ---------------------------------------------------------------------------
+def test_chaos_replicated_reads_survive_server_kills():
+    """The headline availability demo: a 4-process fleet (one shard per
+    process so kills are independent) with replication=2 serves every
+    read bit-exact after killing a non-zero host AND the host serving
+    shard 0 (the old hardcoded directory pin), with the failovers visible
+    in DMSStats."""
+    fleet = spawn_servers(4)
+    assert len(fleet.procs) == 4
+    try:
+        tr = fleet.transport(connect_timeout=5.0, op_timeout=20.0, dead_backoff=60.0)
+        dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr, replication=2)
+        keys = [_key("chaos", ts=t) for t in range(2)]
+        rng = np.random.default_rng(13)
+        arrays = [rng.random((64, 64)).astype(np.float32) for _ in keys]
+        for k, a in zip(keys, arrays):
+            dms.put(k, DOM, a)
+        dms.put(_key("doomed"), DOM, arrays[0])  # read after the 3rd kill below
+        rois = [DOM, BoundingBox((3, 7), (41, 64)), BoundingBox((17, 0), (18, 53))]
+        for k, a in zip(keys, arrays):
+            for roi in rois:
+                np.testing.assert_array_equal(dms.get(k, roi), a[roi.slices()])
+
+        # kill a non-zero host: its blocks regroup onto ring neighbors
+        fleet.procs[2].kill()
+        for k, a in zip(keys, arrays):
+            for roi in rois:
+                np.testing.assert_array_equal(dms.get(k, roi), a[roi.slices()])
+        assert dms.stats.failover_fetches > 0
+        # the dead host was discovered either by a fetch error or by a
+        # directory lookup that failed over (both arm the liveness cache)
+        assert dms.stats.failed_servers + dms.stats.directory_retries >= 1
+
+        # a put whose replica pair avoids the dead host still works end
+        # to end: the metadata broadcast skips the unreachable directory
+        # instead of failing the put
+        bc = next(
+            tuple(c) for c in np.ndindex(4, 4)
+            if 2 not in dms.replica_servers(tuple(c))
+        )
+        patch = BoundingBox(
+            tuple(16 * x for x in bc), tuple(16 * x + 16 for x in bc)
+        )
+        extra = rng.random((16, 16)).astype(np.float32)
+        dms.put(_key("late"), patch, extra)
+        np.testing.assert_array_equal(dms.get(_key("late"), patch), extra)
+        assert dms.stats.meta_broadcast_skips > 0
+        dms.delete(_key("late"))
+
+        # kill the host serving shard 0 as well (0 and 2 are not ring
+        # neighbors, so every block still has one live replica) — the
+        # directory rotation must also route around it
+        fleet.procs[0].kill()
+        for k, a in zip(keys, arrays):
+            for roi in rois:
+                np.testing.assert_array_equal(dms.get(k, roi), a[roi.slices()])
+        found = dms.query("t", "chaos")  # tolerates the dead servers
+        assert [k.timestamp for k, _ in found] == [0, 1]
+
+        for k in keys:  # best-effort delete skips the dead hosts
+            dms.delete(k)
+        assert dms.stats.delete_skips > 0
+        assert dms.query("t", "chaos") == []
+
+        # a third kill leaves some blocks with no live replica at all:
+        # the failure is explicit and names the replicas, not a hang
+        fleet.procs[1].kill()
+        with pytest.raises(TransportError, match="replica"):
+            dms.get(_key("doomed"), DOM)
+        dms.close()
+    finally:
+        fleet.close()
+
+
+def test_chaos_reads_survive_process_kill_with_colocated_shards():
+    """The default deployment packs several shards per process
+    (spawn_servers(4, processes=2)); replica placement must put the two
+    copies in DIFFERENT processes, or one process crash silently takes
+    both.  Killing either process must leave every block readable."""
+    fleet = spawn_servers(4, processes=2)
+    assert len(fleet.procs) == 2  # shards {0,1} and {2,3} share a process
+    try:
+        tr = fleet.transport(connect_timeout=5.0, op_timeout=20.0, dead_backoff=60.0)
+        dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr, replication=2)
+        arr = np.random.default_rng(16).random((64, 64)).astype(np.float32)
+        dms.put(_key("coloc"), DOM, arr)
+        for bc, (_, h) in tr.lookup(0, _key("coloc")).items():
+            a, b = decode_homes(h)
+            assert tr.endpoints[a] != tr.endpoints[b], (bc, a, b)
+        fleet.procs[0].kill()  # shards 0 AND 1 die together
+        np.testing.assert_array_equal(dms.get(_key("coloc"), DOM), arr)
+        assert dms.stats.failover_fetches > 0
+        dms.close()
+    finally:
+        fleet.close()
+
+
+def test_chaos_reads_survive_server_rejoining_empty():
+    """A crashed server restarted on the same port rejoins REACHABLE but
+    empty: its remote KeyErrors and empty directory answers must fail
+    over to the healthy replicas, not leak to the caller."""
+    fleet = spawn_servers(4)
+    try:
+        tr = fleet.transport(connect_timeout=5.0, op_timeout=20.0, dead_backoff=0.2)
+        dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr, replication=2)
+        arr = np.random.default_rng(14).random((64, 64)).astype(np.float32)
+        dms.put(_key("rejoin"), DOM, arr)
+
+        fleet.procs[2].kill()
+        np.testing.assert_array_equal(dms.get(_key("rejoin"), DOM), arr)
+        fleet.procs[2].start()  # same port, empty shard
+        deadline = time.monotonic() + 15.0
+        while not tr.alive(2) and time.monotonic() < deadline:
+            try:
+                tr.ping(2)
+            except TransportError:
+                time.sleep(0.1)
+        # enough reads to cycle the directory rotor over every server
+        # (including the empty one) and to route fetches at its shard
+        for _ in range(8):
+            np.testing.assert_array_equal(dms.get(_key("rejoin"), DOM), arr)
+        assert dms.stats.empty_reroutes > 0  # the rejoined shard was rerouted past
+        found = dms.query("t", "rejoin")  # empty directory answer not trusted
+        assert len(found) == 1
+
+        # a LATER sub-ROI re-put of the same key gives the rejoined
+        # server a non-empty but PARTIAL directory (only the patch
+        # block); it must not shadow the healthy servers' full ones —
+        # the cross-directory union repairs the coverage hole — and the
+        # blocks the rejoined server received post-rejoin must still
+        # serve from it
+        patch = BoundingBox((0, 0), (16, 16))
+        arr[:16, :16] = 7.0
+        dms.put(_key("rejoin"), patch, arr[:16, :16])
+        other = np.random.default_rng(15).random((64, 64)).astype(np.float32)
+        dms.put(_key("rejoin", ts=1), DOM, other)
+        # consecutive same-key reads so the lookup rotation start sweeps
+        # every server (interleaving two keys would advance the rotor by
+        # 2 per key and could skip the stale directory forever)
+        for _ in range(8):
+            np.testing.assert_array_equal(dms.get(_key("rejoin"), DOM), arr)
+        for _ in range(8):
+            np.testing.assert_array_equal(dms.get(_key("rejoin", ts=1), DOM), other)
+        assert dms.stats.directory_repairs > 0
+        # the stale server can neither hide a timestamp (keys union) nor
+        # shrink the reported extents (per-key lookup union) — callers
+        # like TieredStore size cross-tier reads off these boxes
+        for _ in range(4):  # sweep the rotor across the stale directory
+            found = dms.query("t", "rejoin")
+            assert [k.timestamp for k, _ in found] == [0, 1]
+            assert all(bb == DOM for _, bb in found)
+        dms.delete(_key("rejoin"))
+        dms.delete(_key("rejoin", ts=1))
+        dms.close()
+    finally:
+        fleet.close()
+
+
+def test_replication_one_dead_server_still_fails():
+    """replication=1 preserves today's behavior: a dead home server means
+    the read fails (that is exactly what R buys you)."""
+    proc = ServerProcess([0]).start()
+    tr = SocketTransport(
+        [proc.address], connect_timeout=5.0, op_timeout=10.0, dead_backoff=0.1
+    )
+    dms = DistributedMemoryStorage(
+        BoundingBox((0, 0), (16, 16)), (16, 16), transport=tr
+    )
+    arr = np.ones((16, 16), np.float32)
+    dms.put(_key("r1dead"), BoundingBox((0, 0), (16, 16)), arr)
+    proc.kill()
+    with pytest.raises(TransportError):
+        dms.get(_key("r1dead"), BoundingBox((0, 0), (16, 16)))
+    dms.close()
 
 
 # ---------------------------------------------------------------------------
