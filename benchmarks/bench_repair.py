@@ -1,0 +1,164 @@
+"""Anti-entropy repair throughput + read-replica load balancing.
+
+Two claims of the self-healing replication layer, kept honest:
+
+  * **repair()** — a server that rejoined empty is re-filled at
+    near-transport speed: the sweep pays ONE fetch + ONE store per
+    under-replicated block (self-asserted via ``TransportStats`` byte
+    counters — repair bandwidth tracks the link, not directory chatter),
+    and a second sweep is a no-op.
+  * **read balancing** — a hot key's fetches spread over its replicas:
+    with R=2 neither replica serves more than 70% of the gets
+    (self-asserted via ``DMSStats.balanced_fetches``), so replication
+    buys read bandwidth on a healthy fleet, not only availability.
+
+Rows report the per-block repair latency (in-proc and over a real
+killed-and-restarted socket server) and the per-get hot-key latency with
+the measured primary share.  Fast mode (``REPRO_BENCH_FAST=1``) shrinks
+the grid for CI smoke runs, where ``repair_socket_block`` is gated
+against benchmarks/baseline.json.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import BoundingBox, ElementType, RegionKey
+from repro.storage import DistributedMemoryStorage, TransportError, spawn_servers
+
+FAST = bool(os.environ.get("REPRO_BENCH_FAST"))
+TILE = 128
+GRID = 2 if FAST else 4
+NUM_SERVERS = 4
+REPL = 2
+
+
+def _key() -> RegionKey:
+    return RegionKey("x", "Mask", ElementType.FLOAT32)
+
+
+def _fill(store: DistributedMemoryStorage, dom: BoundingBox) -> int:
+    arr = np.random.default_rng(0).random((TILE, TILE)).astype(np.float32)
+    tiles = list(dom.tiles((TILE, TILE)))
+    for box in tiles:
+        store.put(_key(), box, arr)
+    return arr.nbytes * len(tiles)
+
+
+def _timed_repair(dms: DistributedMemoryStorage) -> tuple[float, dict]:
+    t0 = time.perf_counter()
+    report = dms.repair()
+    return time.perf_counter() - t0, report
+
+
+def _assert_repair(dms: DistributedMemoryStorage, report: dict, block_bytes: int):
+    repaired = report["repaired"]
+    assert repaired > 0, f"nothing repaired: {report}"
+    assert report["lost"] == 0, f"repair lost blocks: {report}"
+    stats = dms.transport.stats
+    moved = repaired * block_bytes
+    # one fetch + one store per repaired block: payload dominates, wire
+    # framing and the directory sweep add only a sliver on top
+    assert moved <= stats.bytes_get <= 1.5 * moved + 65536, (
+        f"repair read {stats.bytes_get} bytes for {moved} repaired"
+    )
+    assert moved <= stats.bytes_put <= 1.5 * moved + 65536, (
+        f"repair wrote {stats.bytes_put} bytes for {moved} repaired"
+    )
+    # convergence: a second sweep finds nothing to do
+    again = dms.repair()
+    assert again["repaired"] == 0 and again["lost"] == 0, again
+    return repaired
+
+
+def run() -> list:
+    side = GRID * TILE
+    dom = BoundingBox((0, 0), (side, side))
+    block_bytes = TILE * TILE * 4
+    rows = []
+
+    # -- in-proc: wipe one shard, sweep ------------------------------------------
+    dms = DistributedMemoryStorage(dom, (TILE, TILE), NUM_SERVERS, replication=REPL)
+    _fill(dms, dom)
+    shard = dms.transport.servers[1]
+    shard._blocks.clear()
+    shard._meta.clear()
+    dms.transport.reset()
+    elapsed, report = _timed_repair(dms)
+    repaired = _assert_repair(dms, report, block_bytes)
+    rows.append(
+        row(
+            "repair_inproc_block",
+            elapsed * 1e6 / repaired,
+            f"repaired={repaired},meta_fixes={report['meta_fixes']}",
+        )
+    )
+    dms.close()
+
+    # -- read balancing: hot single-block key at R=2 ------------------------------
+    dms = DistributedMemoryStorage(dom, (TILE, TILE), NUM_SERVERS, replication=REPL)
+    _fill(dms, dom)
+    hot = BoundingBox((0, 0), (TILE, TILE))
+    gets = 64
+    dms.stats.reset()
+    t0 = time.perf_counter()
+    for _ in range(gets):
+        dms.get(_key(), hot)
+    t_get = time.perf_counter() - t0
+    spread = dms.stats.balanced_fetches
+    share = 1.0 - spread / gets  # fraction served by the primary
+    assert dms.stats.failover_fetches == 0, "healthy fleet counted failovers"
+    assert 0.3 <= share <= 0.7, (
+        f"hot-key spread broken: primary served {share:.0%} of {gets} gets"
+    )
+    rows.append(
+        row(
+            "repair_read_spread",
+            t_get * 1e6 / gets,
+            f"primary_share={share:.2f},balanced={spread}",
+        )
+    )
+    dms.close()
+
+    # -- socket: kill a real server, restart empty, sweep --------------------------
+    fleet = spawn_servers(NUM_SERVERS)
+    try:
+        tr = fleet.transport(connect_timeout=5.0, op_timeout=30.0, dead_backoff=0.5)
+        dms = DistributedMemoryStorage(dom, (TILE, TILE), transport=tr, replication=REPL)
+        _fill(dms, dom)
+        fleet.procs[1].kill()
+        fleet.procs[1].start()  # same port, empty shard
+        deadline = time.monotonic() + 15.0
+        while time.monotonic() < deadline:
+            try:
+                tr.ping(1)
+                break
+            except TransportError:
+                time.sleep(0.05)
+        tr.reset()
+        elapsed, report = _timed_repair(dms)
+        repaired = _assert_repair(dms, report, block_bytes)
+        rows.append(
+            row(
+                "repair_socket_block",
+                elapsed * 1e6 / repaired,
+                f"repaired={repaired},meta_fixes={report['meta_fixes']}",
+            )
+        )
+        dms.close()
+    finally:
+        fleet.close()
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

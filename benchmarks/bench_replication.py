@@ -55,13 +55,20 @@ def _exchange(store: DistributedMemoryStorage, dom: BoundingBox) -> dict:
     }
 
 
-def _pair(make_store, dom: BoundingBox) -> tuple[dict, dict, float]:
+def _pair(make_store, dom: BoundingBox, *, check_balance=False) -> tuple[dict, dict, float]:
     """(r1, r2, put amplification): same exchange at both factors."""
     store1 = make_store(1)
     r1 = _exchange(store1, dom)
     store1.close()
     store2 = make_store(REPL)
     r2 = _exchange(store2, dom)
+    if check_balance:
+        # the SFC balance check at R>1 must use the replica-aware view:
+        # physical bytes double-count replica copies, the primary split
+        # reflects the range partition (in-proc only: socket fleets are
+        # shared across scopes, so physical bytes mix both factors)
+        prim = store2.server_load(by_role=True)["primary"]
+        assert max(prim) <= 2 * max(1, min(prim)), f"primary imbalance: {prim}"
     store2.close()
     amp = r2["bytes_put"] / max(r1["bytes_put"], 1)
     # the replication bargain, self-asserted: puts pay ~R x the bytes
@@ -82,7 +89,7 @@ def run() -> list:
             dom, (TILE, TILE), NUM_SERVERS, name="DMS", replication=r
         )
 
-    r1, r2, amp = _pair(make_inproc, dom)
+    r1, r2, amp = _pair(make_inproc, dom, check_balance=True)
     rows.append(row("replication_inproc_put_r1", r1["put_us"], "baseline"))
     rows.append(row("replication_inproc_put_r2", r2["put_us"],
                     f"amp={amp:.2f}x"))

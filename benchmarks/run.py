@@ -29,6 +29,7 @@ from benchmarks import (
     bench_op_speedups,
     bench_overhead,
     bench_pats_error,
+    bench_repair,
     bench_replication,
     bench_roofline,
     bench_scaling,
@@ -54,6 +55,7 @@ MODULES = [
     ("transport", bench_transport),
     ("gateway", bench_gateway),
     ("replication", bench_replication),
+    ("repair", bench_repair),
 ]
 
 

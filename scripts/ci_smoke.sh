@@ -20,8 +20,11 @@ bench_and_gate() {
   # the gateway module self-asserts that coalesced reads issue fewer
   # transport round-trips than naive per-client reads (frame counts);
   # replication self-asserts write amplification ~R with flat read bytes
+  # and primary-view SFC balance; repair self-asserts one fetch + one
+  # store per re-replicated block and the hot-key read spread (<=70%
+  # of gets on any one replica)
   REPRO_BENCH_FAST=1 python -m benchmarks.run \
-    --json "$BENCH_JSON" --only tiered_staging,transport,gateway,replication \
+    --json "$BENCH_JSON" --only tiered_staging,transport,gateway,replication,repair \
   && python scripts/bench_gate.py --run "$BENCH_JSON" \
        --baseline benchmarks/baseline.json
 }

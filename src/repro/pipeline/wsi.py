@@ -116,6 +116,7 @@ def make_wsi_storage(
     server_processes: int = 2,
     endpoints=None,
     replication: int = 1,
+    repair=None,
     mem_capacity_bytes: int = 64 << 20,
     write_policy: str = "write_through",
     policy: PlacementPolicy | None = None,
@@ -141,8 +142,13 @@ def make_wsi_storage(
     registry as ``registry.server_group`` — the caller owns it (close it
     after closing the stores).  ``replication=R`` turns on the DMS
     stores' R-way block replication (home + next R-1 servers along the
-    SFC ring): reads fail over between replicas, so any R-1 dead servers
-    cause zero failed reads.
+    SFC ring): reads fail over between replicas and puts re-home blocks
+    past dead replicas, so any R-1 dead servers cause zero failed reads
+    AND zero failed puts.  ``repair=`` opts into the DMS stores'
+    background anti-entropy sweep (``True`` for the 30 s default or a
+    float interval in seconds): a crashed server that rejoins empty is
+    re-filled until every block has R live copies again; closing the
+    stores stops the sweeps.
 
     In tiered mode the DISK tiers live under ``root`` (subdirs per
     store).  Pass your own ``root`` if you want to clean it up; the
@@ -164,6 +170,9 @@ def make_wsi_storage(
     dom3 = BoundingBox((0, 0, 0), (3, h, w))
     dom2 = BoundingBox((0, 0), (h, w))
     blk = tile or max(h, w)
+    if repair is True:
+        repair = 30.0
+    repair_interval = None if not repair else float(repair)
     if transport not in ("inproc", "socket"):
         raise ValueError(f"unknown transport {transport!r} (want 'inproc' | 'socket')")
     if endpoints is not None:
@@ -189,18 +198,17 @@ def make_wsi_storage(
         return group.transport(scope=scope)
 
     if mode == "dms":
-        registry.register(
-            DistributedMemoryStorage(
-                dom3, (3, blk, blk), num_servers, name="DMS3",
-                transport=_transport("DMS3"), replication=replication,
+        for sname, dom, bshape in (
+            ("DMS3", dom3, (3, blk, blk)),
+            ("DMS2", dom2, (blk, blk)),
+        ):
+            dms = DistributedMemoryStorage(
+                dom, bshape, num_servers, name=sname,
+                transport=_transport(sname), replication=replication,
             )
-        )
-        registry.register(
-            DistributedMemoryStorage(
-                dom2, (blk, blk), num_servers, name="DMS2",
-                transport=_transport("DMS2"), replication=replication,
-            )
-        )
+            if repair_interval is not None:
+                dms.start_auto_repair(repair_interval)
+            registry.register(dms)
     elif mode == "tiered":
         root = root or tempfile.mkdtemp(prefix="wsi_tiers_")
         for name, dom, bshape in (
@@ -220,6 +228,7 @@ def make_wsi_storage(
                     promote_after=promote_after,
                     dms_transport=_transport(name),
                     replication=replication,
+                    repair_interval=repair_interval,
                 )
             )
     else:

@@ -50,7 +50,7 @@ import numpy as np
 
 from repro.core.bbox import BoundingBox
 from repro.core.regions import RegionKey, StorageBackend
-from repro.storage.dms import TransportError
+from repro.storage.dms import DMSStats, TransportError
 
 
 class Overloaded(RuntimeError):
@@ -441,6 +441,34 @@ class RegionGateway:
     def queue_depth(self) -> int:
         with self._lock:
             return len(self._pending)
+
+    def storage_stats(self) -> dict:
+        """One operator view of the whole serving path: the gateway's own
+        request counters plus whatever the wrapped store exposes — tier
+        hit/miss accounting (:class:`~repro.storage.tiers.TierStats`),
+        the DMS availability counters (:class:`~repro.storage.dms.
+        DMSStats`: failover/balanced fetches, put failovers/rollbacks,
+        repair activity), and the transport byte counters.  A dashboard
+        polling the gateway sees replica failover and anti-entropy repair
+        happening below it without reaching around the facade.
+        """
+        out: dict = {"gateway": self.stats.as_dict()}
+        tier_stats = getattr(self.store, "tier_stats", None)
+        if callable(tier_stats):
+            out["tiers"] = {n: s.as_dict() for n, s in tier_stats().items()}
+        backends = [self.store]
+        backends += [t.backend for t in getattr(self.store, "tiers", ())]
+        for backend in backends:
+            stats = getattr(backend, "stats", None)
+            if not isinstance(stats, DMSStats):
+                continue
+            entry = {"dms": stats.as_dict()}
+            transport = getattr(backend, "transport", None)
+            tstats = getattr(transport, "stats", None)
+            if tstats is not None:
+                entry["transport"] = dataclasses.asdict(tstats)
+            out.setdefault("dms", {})[getattr(backend, "name", "DMS")] = entry
+        return out
 
     def close(self, *, close_store: bool = True) -> None:
         """Clean shutdown: refuse new requests, drain + answer every

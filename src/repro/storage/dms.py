@@ -25,10 +25,19 @@ Availability (beyond the paper's single-home placement):
     (every directory is a replica, so any one answers);
   * a ``TransportError`` mid-read regroups the failed server's blocks onto
     surviving replicas — with R >= 2, one dead server causes zero failed
-    reads; ``delete`` best-effort-drops on every replica.
+    reads; ``delete`` best-effort-drops on every replica;
+  * a ``TransportError`` mid-WRITE re-homes the block onto the next live
+    server along the ring (and a failed put rolls its partial blocks
+    back), so one dead server causes zero failed puts too;
+  * healthy reads rotate over live replicas (``read_balance``) so a hot
+    key's fetch load spreads instead of pinning its primary;
+  * ``repair()`` — the anti-entropy sweep — re-replicates under-covered
+    blocks and re-fills the directory of a server that rejoined empty,
+    so a crash + restart converges back to R live copies of everything.
 
 Every server interaction goes through the message-based :class:`Transport`
-protocol (``store``/``fetch``/``put_meta``/``lookup``/``keys``/``drop``),
+protocol (``store``/``fetch``/``put_meta``/``lookup``/``keys``/``drop``/
+``drop_block``),
 so the same routing logic rides either
 
   * :class:`InProcTransport` — thread-safe in-process shards plus a
@@ -141,7 +150,12 @@ class Transport(Protocol):
         self,
         server: int,
         entries: list[tuple[RegionKey, tuple, BoundingBox, int | Sequence[int]]],
-    ) -> None: ...
+    ) -> "list[tuple] | None":
+        """Returns the block coords that ALREADY had a directory entry
+        on this server before the batch (the pre-image a failed put's
+        rollback needs to avoid destroying an earlier incarnation), or
+        None when the implementation cannot tell."""
+        ...
 
     def lookup(
         self, server: int, key: RegionKey
@@ -150,6 +164,8 @@ class Transport(Protocol):
     def keys(self, server: int) -> list[RegionKey]: ...
 
     def drop(self, server: int, key: RegionKey) -> None: ...
+
+    def drop_block(self, server: int, key: RegionKey, block_coord: tuple) -> None: ...
 
     def payload_bytes(self, server: int) -> int: ...
 
@@ -215,6 +231,17 @@ class _Server:
             self._meta.pop(key, None)
             for bk in [bk for bk in self._blocks if bk[0] == key]:
                 self._blocks.pop(bk, None)
+
+    def drop_block(self, key: RegionKey, block_coord: tuple) -> None:
+        """Remove ONE block's payload and directory entry (put rollback:
+        a failed put must not leave orphaned bytes or phantom entries)."""
+        with self._lock:
+            self._blocks.pop((key, block_coord), None)
+            meta = self._meta.get(key)
+            if meta is not None:
+                meta.pop(block_coord, None)
+                if not meta:
+                    self._meta.pop(key, None)
 
     @property
     def payload_bytes(self) -> int:
@@ -284,9 +311,17 @@ class InProcTransport:
             # servers holding the payload learn the entry for free
             self._account(server, META_MSG_BYTES, "meta")
 
-    def put_meta_batch(self, server, entries) -> None:
+    def put_meta_batch(self, server, entries) -> list[tuple]:
+        shard = self.servers[server]
+        existing: dict[RegionKey, dict] = {}
+        had: list[tuple] = []
         for key, block_coord, box, home in entries:
+            if key not in existing:
+                existing[key] = shard.lookup(key)
+            if tuple(block_coord) in existing[key]:
+                had.append(tuple(block_coord))
             self.put_meta(server, key, block_coord, box, home)
+        return had
 
     def lookup(self, server, key) -> dict[tuple, tuple[BoundingBox, int]]:
         return self.servers[server].lookup(key)
@@ -296,6 +331,10 @@ class InProcTransport:
 
     def drop(self, server, key) -> None:
         self.servers[server].drop(key)
+
+    def drop_block(self, server, key, block_coord) -> None:
+        self.servers[server].drop_block(key, block_coord)
+        self._account(server, META_MSG_BYTES, "meta")
 
     def payload_bytes(self, server) -> int:
         return self.servers[server].payload_bytes
@@ -318,18 +357,30 @@ class InProcTransport:
 class DMSStats:
     """Availability accounting for the replicated routing layer."""
 
-    failover_fetches: int = 0   # blocks served by a non-primary replica
-    failed_servers: int = 0     # TransportErrors that rerouted a fetch group
+    failover_fetches: int = 0   # blocks served by a non-primary replica (fault-driven)
+    balanced_fetches: int = 0   # blocks served by a non-primary replica (load rotation)
+    failed_servers: int = 0     # TransportErrors that rerouted a fetch group / put replica
     empty_reroutes: int = 0     # blocks rerouted past a reachable-but-dataless replica
     directory_retries: int = 0  # directory lookups retried past a dead/empty server
     directory_repairs: int = 0  # coverage holes healed by a cross-directory union
     meta_broadcast_skips: int = 0  # put_meta broadcasts dropped (dead server, R > 1)
     delete_skips: int = 0       # best-effort drops skipped on unreachable servers
+    put_failovers: int = 0      # blocks re-homed off their ideal replica ring on put
+    put_rollbacks: int = 0      # blocks dropped by a failed put's best-effort rollback
+    repaired_blocks: int = 0    # payload copies re-replicated by repair() sweeps
+    repair_meta_fixes: int = 0  # directories re-filled by repair() sweeps
+    lost_blocks: int = 0        # repair() found blocks with no surviving replica
 
     def reset(self) -> None:
-        self.failover_fetches = self.failed_servers = self.empty_reroutes = 0
+        self.failover_fetches = self.balanced_fetches = self.failed_servers = 0
+        self.empty_reroutes = 0
         self.directory_retries = self.directory_repairs = 0
         self.meta_broadcast_skips = self.delete_skips = 0
+        self.put_failovers = self.put_rollbacks = 0
+        self.repaired_blocks = self.repair_meta_fixes = self.lost_blocks = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 class DistributedMemoryStorage:
@@ -339,12 +390,20 @@ class DistributedMemoryStorage:
     server and the next ``R-1`` servers along the SFC virtual-domain
     ring; reads fail over between replicas on :class:`TransportError`, so
     any ``R-1`` simultaneous server deaths cause zero failed reads.
-    WRITES are strict at any R: a put stores to every replica of each
-    block and fails when one is unreachable (only the metadata broadcast
-    tolerates dead servers at R > 1) — degrading a write below R copies
-    would silently void the read guarantee; re-homing blocks off dead
-    servers is the ROADMAP'd write-path failover.  ``self.stats``
-    (:class:`DMSStats`) accounts the failover activity.
+    Writes fail over too: a put skips unreachable replicas (the
+    transport's liveness cache fails fast) and re-homes each block onto
+    the next live servers along the ring, so every block still lands on
+    R *distinct live* processes while any server is up — a put only
+    raises when NO replica of some block can be written, and a failed
+    put best-effort drops the blocks it already stored (no orphaned
+    payload bytes, no phantom directory entries).  A degraded write
+    (fewer than R live failure domains) is healed by :meth:`repair`, the
+    anti-entropy sweep that re-replicates under-covered blocks and
+    re-fills the directory of a server that rejoined empty —
+    :meth:`start_auto_repair` runs it on a background interval.  Healthy
+    reads rotate over live replicas (``read_balance``, on by default) so
+    a hot key's fetch load spreads instead of pinning its primary.
+    ``self.stats`` (:class:`DMSStats`) accounts all of it.
     """
 
     def __init__(
@@ -356,6 +415,7 @@ class DistributedMemoryStorage:
         name: str = "DMS",
         transport: Transport | None = None,
         replication: int = 1,
+        read_balance: bool = True,
     ) -> None:
         self.name = name
         self.domain = domain
@@ -382,9 +442,13 @@ class DistributedMemoryStorage:
                 f"replication={replication} must be in [1, num_servers="
                 f"{self.num_servers}]"
             )
+        self.read_balance = bool(read_balance)
         self.stats = DMSStats()
         self._stats_lock = threading.Lock()  # gateway workers call get concurrently
         self._dir_rotor = itertools.count()  # rotating directory start
+        self._read_rotor = itertools.count()  # per-block replica rotation
+        self._repair_thread: threading.Thread | None = None
+        self._repair_stop = threading.Event()
         # --- virtual-domain construction (paper Fig. 9) ---
         self._grid = tuple(
             -(-s // b) for s, b in zip(domain.shape, self.block_shape)
@@ -438,28 +502,40 @@ class DistributedMemoryStorage:
         home = self.home_server(block_coord)
         if self.replication == 1:
             return (home,)
+        return tuple(self._fill_ring(block_coord, [], lambda sid: True))
+
+    def _fill_ring(self, block_coord: tuple, chosen: list[int], take) -> list[int]:
+        """THE replica placement walk, shared by ideal placement
+        (:meth:`replica_servers`), write failover and repair: extend
+        ``chosen`` along the SFC ring from the block's home until
+        ``replication`` members — servers in distinct failure domains
+        first, co-located fill-ins second (better a co-located replica
+        than none).  ``take(sid)`` attempts to claim a candidate (e.g.
+        actually storing the payload there) and returns success."""
+        used = {self._failure_domain(s) for s in chosen}
+        for colocate_ok in (False, True):
+            for sid in self._ring_order(block_coord):
+                if len(chosen) >= self.replication:
+                    return chosen
+                if sid in chosen:
+                    continue
+                if not colocate_ok and self._failure_domain(sid) in used:
+                    continue
+                if take(sid):
+                    chosen.append(sid)
+                    used.add(self._failure_domain(sid))
+        return chosen
+
+    def _failure_domain(self, sid: int):
+        """Servers sharing an endpoint (one process hosting several
+        shards) share its fate; transports without an endpoint table
+        treat every server as its own failure domain."""
         endpoints = getattr(self.transport, "endpoints", None)
+        return sid if endpoints is None else endpoints[sid]
 
-        def domain(sid: int):
-            return sid if endpoints is None else endpoints[sid]
-
-        homes = [home]
-        used = {domain(home)}
-        for i in range(1, self.num_servers):
-            sid = (home + i) % self.num_servers
-            if domain(sid) in used:
-                continue
-            homes.append(sid)
-            used.add(domain(sid))
-            if len(homes) == self.replication:
-                return tuple(homes)
-        for i in range(1, self.num_servers):  # not enough distinct domains
-            sid = (home + i) % self.num_servers
-            if sid not in homes:
-                homes.append(sid)
-                if len(homes) == self.replication:
-                    break
-        return tuple(homes)
+    def _ring_order(self, block_coord: tuple[int, ...]) -> list[int]:
+        home = self.home_server(block_coord)
+        return [(home + i) % self.num_servers for i in range(self.num_servers)]
 
     # -- availability helpers -------------------------------------------------------
     def _alive(self, server: int) -> bool:
@@ -490,7 +566,12 @@ class DistributedMemoryStorage:
         directories the healthy servers still hold.  (Two simultaneous
         empty rejoins exceed the single-fault model; truly-missing keys
         pay 2 lookups instead of 1 — the miss path, not the hot path.)
+        At replication=1 a single empty answer suffices: the meta
+        broadcast is all-or-fail there, so every directory is strictly
+        consistent and the store was never asked for availability —
+        misses keep their exact single-lookup cost.
         """
+        want_empty = 2 if self.replication > 1 else 1
         last: TransportError | None = None
         empties = 0
         empty = None
@@ -505,7 +586,7 @@ class DistributedMemoryStorage:
                 return found
             empties += 1
             empty = found
-            if empties >= 2:
+            if empties >= want_empty:
                 return empty
         if empty is not None:
             return empty  # every reachable directory agrees: truly empty
@@ -606,31 +687,200 @@ class DistributedMemoryStorage:
 
     # -- StorageBackend protocol -----------------------------------------------------
     def put(self, key: RegionKey, bb: BoundingBox, array: np.ndarray) -> None:
+        """Store the payload with write-path failover.
+
+        Each block is stored on its ideal replica ring when every member
+        is live; unreachable replicas (liveness-cache fast path, or a
+        :class:`TransportError` on the store itself) are skipped and the
+        block is re-homed onto the next live servers along the SFC ring,
+        so it still lands on ``R`` *distinct live* failure domains while
+        the fleet has that many.  The directory ``homes`` entry records
+        the ACTUAL placement.  The put raises only when some block can
+        be written to no replica at all (or, at replication=1, when the
+        strictly-consistent metadata broadcast fails) — and then it
+        best-effort drops the blocks and directory entries it INTRODUCED
+        (never an existing key's previous incarnation), so a failed put
+        never leaks orphaned payload bytes.
+        """
         array = np.asarray(array)
         if tuple(array.shape)[: bb.rank] != bb.shape:
             raise ValueError(f"payload shape {array.shape} != bb shape {bb.shape}")
         meta: list[tuple[RegionKey, tuple, BoundingBox, object]] = []
-        for bc, blk_box in self._blocks_overlapping(bb):
-            part = blk_box.intersect(bb)
-            if part.is_empty:
-                continue
-            payload = np.ascontiguousarray(array[part.local_slices(bb)])
-            homes = self.replica_servers(bc)
-            for sid in homes:
-                self.transport.store(sid, key, bc, part, payload)
-            meta.append((key, bc, part, encode_homes(homes)))
-        # metadata propagation to every server (cheap, paper S5.4) —
-        # batched: one message per server per put, not per block, so a
-        # socket transport pays N round-trips instead of blocks x N.
-        # With replication the broadcast tolerates dead servers (their
-        # directory copy dies with them; any surviving directory answers
-        # reads) as long as at least one server acknowledged.
-        if meta:
-            self._broadcast(
-                lambda sid: self.transport.put_meta_batch(sid, meta),
-                "meta_broadcast_skips",
-                f"metadata broadcast for {key}",
+        placed: list[tuple[int, tuple]] = []  # (server, coord) payload stored
+        meta_acked: list[int] = []            # servers whose directory has the batch
+        pre_image: list = []                  # coords that pre-existed (1st ack's answer)
+        dead: set[int] = set()                # discovered unreachable this put
+        try:
+            for bc, blk_box in self._blocks_overlapping(bb):
+                part = blk_box.intersect(bb)
+                if part.is_empty:
+                    continue
+                payload = np.ascontiguousarray(array[part.local_slices(bb)])
+                homes = self._store_replicated(key, bc, part, payload, dead, placed)
+                meta.append((key, bc, part, encode_homes(homes)))
+            # metadata propagation to every server (cheap, paper S5.4) —
+            # batched: one message per server per put, not per block, so a
+            # socket transport pays N round-trips instead of blocks x N.
+            # With replication the broadcast tolerates dead servers (their
+            # directory copy dies with them; any surviving directory
+            # answers reads) as long as at least one server acknowledged.
+            if meta:
+                self._broadcast_meta(key, meta, meta_acked, pre_image)
+        except TransportError:
+            self._rollback_put(key, placed, meta_acked, [m[1] for m in meta], pre_image)
+            raise
+
+    def _try_store(
+        self,
+        sid: int,
+        key: RegionKey,
+        bc: tuple,
+        part: BoundingBox,
+        payload: np.ndarray,
+        dead: set[int],
+        placed: list[tuple[int, tuple]],
+    ) -> bool:
+        try:
+            self.transport.store(sid, key, bc, part, payload)
+        except TransportError:
+            dead.add(sid)
+            self._count("failed_servers")
+            return False
+        placed.append((sid, bc))
+        return True
+
+    def _store_replicated(
+        self,
+        key: RegionKey,
+        bc: tuple,
+        part: BoundingBox,
+        payload: np.ndarray,
+        dead: set[int],
+        placed: list[tuple[int, tuple]],
+    ) -> tuple[int, ...]:
+        """Store one block on ``replication`` live servers, re-homing
+        along the SFC ring past unreachable replicas.  Returns the actual
+        homes (ring order, primary first when the primary is live)."""
+        ideal = self.replica_servers(bc)
+        stored: list[int] = []
+        cache_dead: set[int] = set()
+
+        def take(sid: int) -> bool:
+            if sid in dead:
+                return False
+            if not self._alive(sid):
+                # liveness-cache fast path: a recently-failed server is
+                # skipped without paying a probe or timeout
+                cache_dead.add(sid)
+                return False
+            return self._try_store(sid, key, bc, part, payload, dead, placed)
+
+        self._fill_ring(bc, stored, take)
+        if not stored and cache_dead:
+            # the cache may be stale for EVERY replica (one blip touched
+            # all endpoints): before failing the put, try the cache-dead
+            # servers for real — the mirror of the read path's `or live`
+            self._fill_ring(
+                bc,
+                stored,
+                lambda sid: sid in cache_dead
+                and sid not in dead
+                and self._try_store(sid, key, bc, part, payload, dead, placed),
             )
+        if not stored:
+            raise TransportError(
+                f"{self.name}: block {bc} of {key} could not be written to "
+                f"ANY server (all {self.num_servers} unreachable)"
+            )
+        ring_pos = {s: i for i, s in enumerate(self._ring_order(bc))}
+        stored.sort(key=ring_pos.__getitem__)  # same order repair() emits
+        if tuple(stored) != ideal:
+            self._count("put_failovers")
+        return tuple(stored)
+
+    def _broadcast_meta(
+        self,
+        key: RegionKey,
+        meta: list[tuple[RegionKey, tuple, BoundingBox, object]],
+        acked: list[int],
+        pre_image: list,
+    ) -> None:
+        """put_meta_batch to every server, recording who acked (the
+        rollback set) and the FIRST ack's pre-image (which coords already
+        had entries — every directory agrees pre-put, so one answer
+        stands for all).  Same tolerance as :meth:`_broadcast`:
+        all-or-fail at replication=1, best-effort past dead servers
+        otherwise."""
+        last: TransportError | None = None
+        for sid in range(self.num_servers):
+            try:
+                had = self.transport.put_meta_batch(sid, meta)
+            except TransportError as e:
+                if self.replication == 1:
+                    raise
+                self._count("meta_broadcast_skips")
+                last = e
+                continue
+            if not acked:
+                pre_image.append(
+                    None if had is None else {tuple(c) for c in had}
+                )
+            acked.append(sid)
+        if not acked:
+            raise TransportError(
+                f"{self.name}: metadata broadcast for {key} reached no server "
+                f"(all {self.num_servers} down)"
+            ) from last
+
+    def _rollback_put(
+        self,
+        key: RegionKey,
+        placed: list[tuple[int, tuple]],
+        meta_acked: list[int],
+        coords: list[tuple],
+        pre_image: list,
+    ) -> None:
+        """Best-effort undo of a failed put — but ONLY of what this put
+        introduced.  Coords the key already had before the put are left
+        alone: their old payload may already be overwritten and their
+        directory entries replaced on acked servers, so dropping them
+        would destroy the previous incarnation — a torn-but-readable key
+        beats a destroyed one.  Fresh coords (the common case, and every
+        coord of a brand-new key) are dropped wherever this put wrote
+        payload or directory entries, so the servers return to their
+        pre-put byte counts: no orphaned payloads invisible to the
+        directory, no phantom entries pointing at dropped blocks.  When
+        the pre-put state is unknowable (transport without a
+        ``put_meta_batch`` pre-image and directories already modified),
+        nothing is dropped: leak, never destroy."""
+        drop_block = getattr(self.transport, "drop_block", None)
+        if drop_block is None:
+            return  # third-party transport without per-block drop
+        if meta_acked:
+            # directories were modified: only the broadcast's own
+            # pre-image can tell fresh coords from pre-existing ones
+            pre = pre_image[0] if pre_image else None
+            if pre is None:
+                return
+        else:
+            try:
+                pre = set(self._lookup_any(key))  # directories untouched
+            except TransportError:
+                return
+        targets = {(sid, bc) for sid, bc in placed if bc not in pre}
+        for sid in meta_acked:
+            for bc in coords:
+                if bc not in pre:
+                    targets.add((sid, bc))
+        dropped = 0
+        for sid, bc in sorted(targets):
+            try:
+                drop_block(sid, key, bc)
+                dropped += 1
+            except (TransportError, KeyError):
+                pass  # best-effort: an unreachable server's copy dies with it
+        if dropped:
+            self._count("put_rollbacks", dropped)
 
     def _fetch_blocks(
         self, key: RegionKey, blocks: list[tuple[tuple, BoundingBox, tuple[int, ...]]]
@@ -647,6 +897,13 @@ class DistributedMemoryStorage:
         the block is gone — a crashed host restarted empty on the same
         port) reroutes per BLOCK, so blocks the server does hold still
         serve from it.
+
+        With ``read_balance`` (the default) the target rotates over the
+        LIVE replicas per block instead of pinning ``homes[0]``, so a hot
+        key's read load spreads across its replica set; non-primary
+        serves on a healthy replica count as ``balanced_fetches``,
+        fault-driven ones as ``failover_fetches``.  ``read_balance=False``
+        restores strict primary preference.
         """
         fetch_many = getattr(self.transport, "fetch_many", None)
         pieces: list[tuple[BoundingBox, np.ndarray]] = []
@@ -674,9 +931,15 @@ class DistributedMemoryStorage:
                         f"replica {list(homes)} failed (replication="
                         f"{self.replication}; raise it to survive more faults)"
                     )
-                # primary first; the transport's liveness cache routes
-                # around known-dead hosts without paying a probe
-                target = next((s for s in live if self._alive(s)), live[0])
+                # the transport's liveness cache routes around known-dead
+                # hosts without paying a probe; among the cache-live
+                # replicas the per-block rotor spreads hot-key load (or
+                # sticks to the primary with read_balance=False)
+                healthy = [s for s in live if self._alive(s)] or live
+                if self.read_balance and len(healthy) > 1:
+                    target = healthy[next(self._read_rotor) % len(healthy)]
+                else:
+                    target = healthy[0]
                 groups.setdefault(target, []).append(item)
             pending = []
             for server in sorted(groups):
@@ -712,7 +975,17 @@ class DistributedMemoryStorage:
                         pending.append((bc, box, homes))
                     else:
                         if server != homes[0]:
-                            self._count("failover_fetches")
+                            # non-primary serve: fault failover when the
+                            # primary is dead/dataless, balance rotation
+                            # when it was healthy and we spread anyway
+                            if (
+                                homes[0] in dead
+                                or (homes[0], bc) in missing
+                                or not self._alive(homes[0])
+                            ):
+                                self._count("failover_fetches")
+                            else:
+                                self._count("balanced_fetches")
                         pieces.append((box, blk))
         return pieces
 
@@ -789,14 +1062,221 @@ class DistributedMemoryStorage:
             f"delete of {key}",
         )
 
+    # -- anti-entropy repair ---------------------------------------------------------
+    def repair(self) -> dict:
+        """One anti-entropy sweep: converge every block back to ``R``
+        live copies and every reachable directory back to the full entry
+        set.
+
+        Walks the union directory over every reachable server.  A
+        recorded replica "holds" a block iff its OWN directory still has
+        the entry (payload and directory die together on a crash, and a
+        server that rejoined empty on the same port has neither) — so an
+        under-replicated block is fetched once from a surviving holder
+        and re-stored onto the next live servers along the SFC ring
+        (distinct failure domains first) until ``R`` copies exist again.
+        Directories that lost entries (the rejoined server's) are
+        re-filled with one ``put_meta_batch`` per key per server.  All
+        best-effort: a concurrent put wins any race at the directory (at
+        worst the next sweep re-converges), and a block with NO surviving
+        holder is counted ``lost_blocks`` — replication is availability,
+        not durability.
+
+        Returns a report dict: ``scanned`` (block entries examined),
+        ``repaired`` (payload copies added), ``meta_fixes`` (per-server
+        directory entries re-sent), ``lost`` (blocks beyond healing),
+        ``unreachable`` (servers skipped).
+        """
+        reachable: list[int] = []
+        dirs: dict[int, dict[RegionKey, dict]] = {}
+        keys: set[RegionKey] = set()
+        for sid in range(self.num_servers):
+            try:
+                ks = self.transport.keys(sid)
+            except TransportError:
+                continue
+            reachable.append(sid)
+            dirs[sid] = {}
+            keys.update(ks)
+        report = {
+            "scanned": 0,
+            "repaired": 0,
+            "meta_fixes": 0,
+            "lost": 0,
+            "unreachable": self.num_servers - len(reachable),
+        }
+        dead: set[int] = set()
+        for key in sorted(keys):
+            # union directory for this key over every reachable server
+            entries: dict[tuple, tuple[BoundingBox, set[int]]] = {}
+            for sid in reachable:
+                try:
+                    found = self.transport.lookup(sid, key)
+                except TransportError:
+                    dead.add(sid)
+                    continue
+                dirs[sid][key] = found
+                for bc, (box, h) in found.items():
+                    prev = entries.get(bc)
+                    homes = prev[1] if prev else set()
+                    homes.update(decode_homes(h))
+                    entries[bc] = (box, homes)
+            final: dict[tuple, tuple[BoundingBox, tuple[int, ...]]] = {}
+            for bc, (box, candidates) in sorted(entries.items()):
+                report["scanned"] += 1
+                ring_pos = {s: i for i, s in enumerate(self._ring_order(bc))}
+                holders = sorted(
+                    (
+                        s
+                        for s in candidates
+                        if s in dirs and s not in dead and bc in dirs[s].get(key, {})
+                    ),
+                    key=ring_pos.__getitem__,
+                )
+                homes = list(holders)
+                if len(holders) < self.replication and holders:
+                    payload = None
+                    for src in list(holders):
+                        try:
+                            payload = self.transport.fetch(src, key, bc)
+                            break
+                        except (TransportError, KeyError):
+                            homes.remove(src)
+                    if payload is not None:
+                        homes = self._restore_copies(
+                            key, bc, box, payload, homes, dead, report
+                        )
+                if not homes:
+                    report["lost"] += 1
+                    self._count("lost_blocks")
+                    continue
+                final[bc] = (box, tuple(sorted(homes, key=ring_pos.__getitem__)))
+            # directory convergence: re-send the full entry set to every
+            # reachable server that is missing entries or has stale homes
+            for sid in reachable:
+                if sid in dead:
+                    continue
+                have = dirs[sid].get(key, {})
+                batch = [
+                    (key, bc, box, encode_homes(homes))
+                    for bc, (box, homes) in sorted(final.items())
+                    if bc not in have or decode_homes(have[bc][1]) != homes
+                ]
+                if not batch:
+                    continue
+                try:
+                    self.transport.put_meta_batch(sid, batch)
+                except TransportError:
+                    dead.add(sid)
+                    continue
+                report["meta_fixes"] += len(batch)
+        if report["repaired"]:
+            self._count("repaired_blocks", report["repaired"])
+        if report["meta_fixes"]:
+            self._count("repair_meta_fixes", report["meta_fixes"])
+        return report
+
+    def _restore_copies(
+        self,
+        key: RegionKey,
+        bc: tuple,
+        box: BoundingBox,
+        payload: np.ndarray,
+        homes: list[int],
+        dead: set[int],
+        report: dict,
+    ) -> list[int]:
+        """Store the fetched payload on live non-holders along the ring
+        until ``replication`` copies exist (distinct domains first).  A
+        liveness-cache-dead candidate is simply skipped — unlike the put
+        path there is no try-anyway fallback, because the sweep is
+        periodic: a stale cache costs one interval, not a failed op."""
+
+        def take(sid: int) -> bool:
+            if sid in dead or not self._alive(sid):
+                return False
+            try:
+                self.transport.store(sid, key, bc, box, payload)
+            except TransportError:
+                dead.add(sid)
+                return False
+            report["repaired"] += 1
+            return True
+
+        return self._fill_ring(bc, homes, take)
+
+    def start_auto_repair(self, interval: float) -> None:
+        """Run :meth:`repair` every ``interval`` seconds on a daemon
+        thread until :meth:`stop_auto_repair` / :meth:`close`.  A sweep
+        that finds the whole fleet unreachable just waits for the next
+        tick."""
+        if interval <= 0:
+            raise ValueError(f"repair interval must be positive, got {interval}")
+        if self._repair_thread is not None:
+            raise RuntimeError(f"{self.name}: auto-repair already running")
+        self._repair_stop = threading.Event()
+
+        def loop() -> None:
+            while not self._repair_stop.wait(interval):
+                try:
+                    self.repair()
+                except TransportError:
+                    pass  # fleet-wide outage: retry on the next tick
+
+        self._repair_thread = threading.Thread(
+            target=loop, daemon=True, name=f"{self.name}-repair"
+        )
+        self._repair_thread.start()
+
+    def stop_auto_repair(self) -> None:
+        thread = self._repair_thread
+        if thread is None:
+            return
+        self._repair_stop.set()
+        thread.join(timeout=10.0)
+        self._repair_thread = None
+
     def close(self) -> None:
-        """Release transport resources (sockets); in-proc is a no-op."""
+        """Stop the repair thread and release transport resources
+        (sockets); in-proc transports are a no-op."""
+        self.stop_auto_repair()
         self.transport.close()
 
     # -- stats -----------------------------------------------------------------
-    def server_load(self) -> list[int]:
-        """Payload bytes per server — balance check for the SFC partition."""
-        return [self.transport.payload_bytes(s) for s in range(self.num_servers)]
+    def server_load(self, *, by_role: bool = False) -> "list[int] | dict":
+        """Payload bytes per server.
+
+        The plain list is PHYSICAL bytes — at ``replication=R`` it
+        includes every replica copy, so it measures capacity use (and the
+        ~R× write amplification), not SFC partition balance.  With
+        ``by_role=True`` the physical bytes are split by directory role:
+        ``{"total", "primary", "replica"}`` lists, attributing each
+        server's bytes proportionally to the block VOLUMES the union
+        directory records it as primary (``homes[0]``) vs replica for —
+        exact whenever a server's blocks share one element size (the
+        usual case).  Balance checks for the SFC range partition must use
+        the ``primary`` view at R > 1.
+        """
+        total = [self.transport.payload_bytes(s) for s in range(self.num_servers)]
+        if not by_role:
+            return total
+        prim_vol = [0] * self.num_servers
+        repl_vol = [0] * self.num_servers
+        for key in self._keys_any():
+            for bc, (box, h) in self._lookup_union2(key).items():
+                homes = decode_homes(h)
+                prim_vol[homes[0]] += box.volume
+                for sid in homes[1:]:
+                    repl_vol[sid] += box.volume
+        primary = []
+        for sid in range(self.num_servers):
+            vol = prim_vol[sid] + repl_vol[sid]
+            primary.append(total[sid] * prim_vol[sid] // vol if vol else 0)
+        return {
+            "total": total,
+            "primary": primary,
+            "replica": [t - p for t, p in zip(total, primary)],
+        }
 
     def aggregate_throughput(self) -> float:
         """bytes moved / transport time (paper Fig. 14 reports GB/s).

@@ -413,9 +413,11 @@ class SocketTransport:
         self._request(server, header)
         self._account("meta", META_MSG_BYTES)
 
-    def put_meta_batch(self, server, entries) -> None:
+    def put_meta_batch(self, server, entries) -> "list[tuple] | None":
         """One frame carrying every directory record of a put — N
-        round-trips per put instead of blocks x N."""
+        round-trips per put instead of blocks x N.  The response's
+        ``had`` field lists the coords that already had an entry (the
+        rollback pre-image); None when the server predates it."""
         header = {
             "op": "put_meta_batch",
             "sid": server,
@@ -429,11 +431,13 @@ class SocketTransport:
                 for key, coord, box, home in entries
             ],
         }
-        _, _, wire = self._request(server, header)
+        rheader, _, wire = self._request(server, header)
         with self._stats_lock:
             # one wire frame, len(entries) logical directory records
             self.stats.meta_msgs += len(entries)
             self.stats.bytes_meta += wire
+        had = rheader.get("had")
+        return None if had is None else [tuple(c) for c in had]
 
     def lookup(self, server, key) -> dict[tuple, tuple[BoundingBox, int]]:
         header = {"op": "lookup", "sid": server, "key": _key_to_json(self._scoped(key))}
@@ -453,6 +457,20 @@ class SocketTransport:
     def drop(self, server, key) -> None:
         self._request(
             server, {"op": "drop", "sid": server, "key": _key_to_json(self._scoped(key))}
+        )
+        self._account("meta", META_MSG_BYTES)
+
+    def drop_block(self, server, key, block_coord) -> None:
+        """Per-block drop (payload + directory entry): the put-rollback
+        primitive — a whole-key ``drop`` would destroy sibling blocks."""
+        self._request(
+            server,
+            {
+                "op": "drop_block",
+                "sid": server,
+                "key": _key_to_json(self._scoped(key)),
+                "coord": list(block_coord),
+            },
         )
         self._account("meta", META_MSG_BYTES)
 
@@ -545,14 +563,16 @@ class _NetServer(socketserver.ThreadingTCPServer):
             )
             return {"ok": True}, b""
         if op == "put_meta_batch":
+            existing: dict = {}
+            had = []
             for kj, coord, bbj, home in header["entries"]:
-                shard.put_meta(
-                    _key_from_json(kj),
-                    tuple(coord),
-                    _bb_from_json(bbj),
-                    _homes_json(home),
-                )
-            return {"ok": True}, b""
+                key = _key_from_json(kj)
+                if key not in existing:
+                    existing[key] = shard.lookup(key)
+                if tuple(coord) in existing[key]:
+                    had.append(list(coord))
+                shard.put_meta(key, tuple(coord), _bb_from_json(bbj), _homes_json(home))
+            return {"ok": True, "had": had}, b""
         if op == "lookup":
             blocks = shard.lookup(_key_from_json(header["key"]))
             return {
@@ -566,6 +586,9 @@ class _NetServer(socketserver.ThreadingTCPServer):
             return {"ok": True, "keys": [_key_to_json(k) for k in shard.keys()]}, b""
         if op == "drop":
             shard.drop(_key_from_json(header["key"]))
+            return {"ok": True}, b""
+        if op == "drop_block":
+            shard.drop_block(_key_from_json(header["key"]), tuple(header["coord"]))
             return {"ok": True}, b""
         if op == "payload_bytes":
             return {"ok": True, "nbytes": shard.payload_bytes}, b""

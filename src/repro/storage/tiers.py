@@ -806,6 +806,7 @@ class TieredStore:
         disk_kwargs: dict | None = None,
         dms_transport=None,
         replication: int = 1,
+        repair_interval: float | None = None,
     ) -> "TieredStore":
         """The paper-shaped stack: bounded RAM -> DISK (ADIOS-style) -> DMS.
 
@@ -819,7 +820,11 @@ class TieredStore:
         ``replication`` is the DMS tier's R-way block replication: each
         demoted/flushed block lands on R servers along the SFC ring, so
         the bottom tier survives R-1 server deaths with zero failed
-        reads.
+        reads — and zero failed writes (puts re-home blocks past dead
+        replicas).  ``repair_interval`` (seconds) opts into the DMS
+        tier's background anti-entropy sweep: a crashed server that
+        rejoins empty is re-filled until every block has R live copies
+        again; ``close()`` stops the sweep.
         """
         from repro.storage.disk import DiskStorage
         from repro.storage.dms import DistributedMemoryStorage
@@ -832,6 +837,8 @@ class TieredStore:
             name=f"{name}-DMS", transport=dms_transport,
             replication=replication,
         )
+        if repair_interval is not None:
+            dms.start_auto_repair(repair_interval)
         return TieredStore(
             [
                 Tier("MEM", mem, mem_capacity_bytes),

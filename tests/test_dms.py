@@ -1,15 +1,73 @@
 """Distributed memory storage (DataSpaces analogue) tests."""
 import numpy as np
+import pytest
 from tests._prop import given, st
 
 from repro.core import BoundingBox, ElementType, RegionKey
-from repro.storage import DistributedMemoryStorage
+from repro.storage import (
+    DistributedMemoryStorage,
+    InProcTransport,
+    TransportError,
+    decode_homes,
+)
 
 DOM = BoundingBox((0, 0), (64, 64))
 
 
 def _key(name="R", ts=0, v=0):
     return RegionKey("t", name, ElementType.FLOAT32, ts, v)
+
+
+class FaultyTransport(InProcTransport):
+    """In-proc transport with switchable dead servers + call counters —
+    deterministic fault injection for the write-failover/rollback tests
+    (the socket chaos suite covers the same paths on real processes)."""
+
+    def __init__(self, num_servers: int):
+        super().__init__(num_servers)
+        self.down: set[int] = set()
+        self.lookup_calls = 0
+
+    def _check(self, server: int) -> None:
+        if server in self.down:
+            raise TransportError(f"server {server} is down (injected)")
+
+    def store(self, server, *a):
+        self._check(server)
+        return super().store(server, *a)
+
+    def fetch(self, server, *a):
+        self._check(server)
+        return super().fetch(server, *a)
+
+    def fetch_many(self, server, *a):
+        self._check(server)
+        return super().fetch_many(server, *a)
+
+    def put_meta(self, server, *a):
+        self._check(server)
+        return super().put_meta(server, *a)
+
+    def put_meta_batch(self, server, *a):
+        self._check(server)
+        return super().put_meta_batch(server, *a)
+
+    def lookup(self, server, *a):
+        self.lookup_calls += 1
+        self._check(server)
+        return super().lookup(server, *a)
+
+    def keys(self, server):
+        self._check(server)
+        return super().keys(server)
+
+    def drop(self, server, *a):
+        self._check(server)
+        return super().drop(server, *a)
+
+    def drop_block(self, server, *a):
+        self._check(server)
+        return super().drop_block(server, *a)
 
 
 def test_put_get_identity():
@@ -68,6 +126,17 @@ def test_sfc_balances_servers():
     load = dms.server_load()
     assert len(load) == 4
     assert max(load) <= 2 * min(load)  # SFC range partition is balanced
+    # at R > 1 the PHYSICAL load includes replica copies, which are not
+    # an SFC imbalance — the balance check must use the primary view
+    dms2 = DistributedMemoryStorage(DOM, (8, 8), 4, replication=2)
+    dms2.put(_key(), DOM, arr)
+    by_role = dms2.server_load(by_role=True)
+    assert sum(by_role["total"]) == 2 * arr.nbytes
+    assert sum(by_role["primary"]) == arr.nbytes
+    assert sum(by_role["replica"]) == arr.nbytes
+    # the primary (SFC-partition) view matches the unreplicated balance
+    assert by_role["primary"] == load
+    assert max(by_role["primary"]) <= 2 * min(by_role["primary"])
 
 
 def test_metadata_propagated_payload_single_home():
@@ -139,6 +208,254 @@ def test_replication_validation():
     dms.put(_key(), DOM, arr)
     assert all(load == arr.nbytes for load in dms.server_load())
     assert np.array_equal(dms.get(_key(), DOM), arr)
+
+
+def test_put_failover_rehomes_blocks_onto_live_servers():
+    """A dead replica must not fail a put at R=2: blocks whose replica
+    set touches the dead server re-home onto the next live server along
+    the ring, every block still lands on R distinct live servers, and
+    reads stay bit-exact."""
+    tr = FaultyTransport(4)
+    dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr, replication=2)
+    arr = np.random.default_rng(20).random((64, 64)).astype(np.float32)
+    tr.down.add(2)
+    dms.put(_key(), DOM, arr)  # must not raise
+    assert dms.stats.put_failovers > 0
+    load = dms.server_load()
+    assert load[2] == 0  # nothing landed on the dead server
+    assert sum(load) == 2 * arr.nbytes  # still R copies of every block
+    for bc, (_, h) in tr.lookup(0, _key()).items():
+        homes = decode_homes(h)
+        assert len(homes) == 2 and 2 not in homes  # actual placement recorded
+    np.testing.assert_array_equal(dms.get(_key(), DOM), arr)
+    # even with the other replica of the re-homed blocks gone, reads
+    # fail over to the re-homed copies: the write failover preserved R
+    tr.down.add(1)
+    np.testing.assert_array_equal(dms.get(_key(), DOM), arr)
+
+
+def test_put_degrades_below_r_but_raises_only_at_zero_live():
+    """With fewer live servers than R the put degrades (fewer copies,
+    recorded faithfully); only zero writable replicas raises."""
+    tr = FaultyTransport(2)
+    dms = DistributedMemoryStorage(DOM, (32, 32), transport=tr, replication=2)
+    arr = np.ones((64, 64), np.float32)
+    tr.down.add(1)
+    dms.put(_key(), DOM, arr)  # degraded: single copy per block
+    for _, (_, h) in tr.lookup(0, _key()).items():
+        assert decode_homes(h) == (0,)
+    tr.down.add(0)
+    with pytest.raises(TransportError, match="ANY server"):
+        dms.put(_key("gone"), DOM, arr)
+
+
+def test_failed_put_rolls_back_partial_blocks():
+    """Satellite regression: a put that fails mid-way must not leak the
+    blocks it already stored — server_load() returns to pre-put bytes
+    and no directory mentions the key."""
+    tr = FaultyTransport(4)
+    dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr)  # R=1: strict
+    arr = np.random.default_rng(21).random((64, 64)).astype(np.float32)
+    dms.put(_key("keep"), DOM, arr)
+    pre = dms.server_load()
+    assert sum(pre) == arr.nbytes
+    tr.down.add(3)
+    # R=1 with a dead server: blocks re-home, but the strictly-consistent
+    # metadata broadcast fails -> the whole put fails and rolls back
+    with pytest.raises(TransportError):
+        dms.put(_key("fail"), DOM, arr)
+    assert dms.stats.put_rollbacks > 0
+    assert dms.server_load() == pre  # no orphaned payload bytes
+    tr.down.clear()
+    for sid in range(4):
+        assert _key("fail") not in tr.keys(sid)  # no phantom directory entries
+    np.testing.assert_array_equal(dms.get(_key("keep"), DOM), arr)  # untouched
+
+
+def test_failed_reput_never_destroys_previous_data():
+    """Rolling back a failed RE-put must not drop the key's previous
+    incarnation: whatever mix of old/new blocks the failure left, every
+    block stays readable (torn beats destroyed)."""
+    old = np.ones((64, 64), np.float32)
+    new = np.full((64, 64), 2.0, np.float32)
+    # broadcast fails AFTER some directories acked (dead server mid-list)
+    # and BEFORE any ack (dead server first): both paths must preserve
+    for dead_sid in (3, 0):
+        tr = FaultyTransport(4)
+        dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr)  # R=1 strict
+        dms.put(_key(), DOM, old)
+        tr.down.add(dead_sid)
+        with pytest.raises(TransportError):
+            dms.put(_key(), DOM, new)
+        tr.down.clear()
+        got = dms.get(_key(), DOM)  # must not raise: no entry may dangle
+        assert np.isin(got, (1.0, 2.0)).all()
+    # a fresh key alongside it still rolls back fully
+    tr = FaultyTransport(4)
+    dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr)
+    dms.put(_key(), DOM, old)
+    pre = dms.server_load()
+    tr.down.add(3)
+    with pytest.raises(TransportError):
+        dms.put(_key("fresh"), DOM, new)
+    assert dms.server_load() == pre
+
+
+def test_put_survives_stale_all_dead_liveness_cache():
+    """A liveness cache that (stale-)marks EVERY server dead must not
+    fail the put without trying: the fallback stores for real, the
+    mirror of the read path's cache-dead fallback."""
+
+    class AllDeadCache(FaultyTransport):
+        def alive(self, server):
+            return False  # every endpoint inside its backoff window
+
+    tr = AllDeadCache(4)
+    dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr, replication=2)
+    arr = np.random.default_rng(25).random((64, 64)).astype(np.float32)
+    dms.put(_key(), DOM, arr)  # servers are actually fine: must succeed
+    assert sum(dms.server_load()) == 2 * arr.nbytes
+    np.testing.assert_array_equal(dms.get(_key(), DOM), arr)
+
+
+def test_lookup_cost_r1_single_miss_lookup():
+    """Satellite regression: at replication=1 every directory is strictly
+    consistent, so a miss must cost exactly ONE lookup (the PR-3 cost);
+    at R>1 the empty answer needs a second directory to confirm."""
+    tr = FaultyTransport(4)
+    dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr)
+    with pytest.raises(KeyError):
+        dms.get(_key("absent"), DOM)
+    assert tr.lookup_calls == 1
+
+    tr2 = FaultyTransport(4)
+    dms2 = DistributedMemoryStorage(DOM, (16, 16), transport=tr2, replication=2)
+    with pytest.raises(KeyError):
+        dms2.get(_key("absent"), DOM)
+    assert tr2.lookup_calls == 2
+    # hits pay one lookup at either factor
+    arr = np.ones((64, 64), np.float32)
+    for d, t in ((dms, tr), (dms2, tr2)):
+        d.put(_key(), DOM, arr)
+        t.lookup_calls = 0
+        d.get(_key(), DOM)
+        assert t.lookup_calls == 1
+
+
+def test_read_balance_spreads_hot_key_over_replicas():
+    """Healthy-fleet reads rotate over live replicas (balanced_fetches),
+    never counting as fault failover; read_balance=False restores strict
+    primary preference."""
+    dms = DistributedMemoryStorage(DOM, (16, 16), 4, replication=2)
+    arr = np.random.default_rng(22).random((64, 64)).astype(np.float32)
+    dms.put(_key(), DOM, arr)
+    hot = BoundingBox((0, 0), (16, 16))  # single block: one replica pair
+    for _ in range(20):
+        np.testing.assert_array_equal(dms.get(_key(), hot), arr[:16, :16])
+    assert dms.stats.failover_fetches == 0
+    assert 6 <= dms.stats.balanced_fetches <= 14  # ~half served by the replica
+
+    pinned = DistributedMemoryStorage(
+        DOM, (16, 16), 4, replication=2, read_balance=False
+    )
+    pinned.put(_key(), DOM, arr)
+    for _ in range(20):
+        pinned.get(_key(), hot)
+    assert pinned.stats.balanced_fetches == 0
+    assert pinned.stats.failover_fetches == 0
+
+
+def test_repair_refills_server_that_rejoined_empty():
+    """Anti-entropy: wipe one server (crash + rejoin-empty analogue) and
+    repair() restores every block to R confirmed copies and re-fills the
+    wiped directory; a second sweep is a no-op."""
+    tr = FaultyTransport(4)
+    dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr, replication=2)
+    arr = np.random.default_rng(23).random((64, 64)).astype(np.float32)
+    dms.put(_key(), DOM, arr)
+    victim = tr.servers[2]
+    was_on_2 = sum(
+        1
+        for _, (_, h) in tr.lookup(0, _key()).items()
+        if 2 in decode_homes(h)
+    )
+    assert was_on_2 > 0
+    victim._blocks.clear()
+    victim._meta.clear()
+    report = dms.repair()
+    assert report["repaired"] == was_on_2
+    assert report["lost"] == 0
+    assert dms.stats.repaired_blocks == was_on_2
+    assert len(tr.lookup(2, _key())) == 16  # directory re-filled too
+    assert sum(dms.server_load()) == 2 * arr.nbytes
+    np.testing.assert_array_equal(dms.get(_key(), DOM), arr)
+    again = dms.repair()
+    assert again["repaired"] == 0 and again["meta_fixes"] == 0  # converged
+    # a holder that fed the repair can now die: the blocks it shared
+    # with the wiped server serve from the re-stored copies — without
+    # the sweep they would have had a single live replica left
+    tr.down.add(1)
+    np.testing.assert_array_equal(dms.get(_key(), DOM), arr)
+
+
+def test_repair_rehomes_around_dead_servers_and_reports_lost():
+    """repair() places new copies only on live servers; a block whose
+    every holder is gone is counted lost, not silently dropped."""
+    tr = FaultyTransport(4)
+    dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr, replication=2)
+    arr = np.ones((64, 64), np.float32)
+    dms.put(_key(), DOM, arr)
+    # wipe server 1's payload+meta AND kill server 2: repair must re-home
+    # server 1's blocks onto live servers other than 2
+    tr.servers[1]._blocks.clear()
+    tr.servers[1]._meta.clear()
+    tr.down.add(2)
+    report = dms.repair()
+    assert report["unreachable"] == 1
+    assert report["repaired"] > 0
+    for _, (_, h) in tr.lookup(0, _key()).items():
+        homes = decode_homes(h)
+        live_copies = [s for s in homes if s not in tr.down]
+        assert len(live_copies) >= 2 or 2 in homes
+    # lost blocks: wipe both replicas of everything, repair reports them
+    tr2 = FaultyTransport(4)
+    dms2 = DistributedMemoryStorage(DOM, (64, 64), transport=tr2, replication=2)
+    dms2.put(_key(), DOM, arr)  # single block on 2 servers
+    for s in tr2.servers:
+        s._blocks.clear()
+    homes = decode_homes(next(iter(tr2.lookup(0, _key()).values()))[1])
+    for sid in homes:
+        tr2.servers[sid]._meta.clear()
+    report = dms2.repair()
+    assert report["lost"] == 1
+    assert dms2.stats.lost_blocks == 1
+
+
+def test_auto_repair_background_thread():
+    """start_auto_repair heals a wiped server without an explicit call;
+    close() stops the thread."""
+    import time
+
+    tr = FaultyTransport(4)
+    dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr, replication=2)
+    dms.start_auto_repair(0.05)
+    with pytest.raises(RuntimeError, match="already running"):
+        dms.start_auto_repair(0.05)
+    arr = np.random.default_rng(24).random((64, 64)).astype(np.float32)
+    dms.put(_key(), DOM, arr)
+    tr.servers[1]._blocks.clear()
+    tr.servers[1]._meta.clear()
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline:
+        if dms.stats.repaired_blocks > 0 and len(tr.lookup(1, _key())) == 16:
+            break
+        time.sleep(0.02)
+    assert dms.stats.repaired_blocks > 0
+    assert sum(dms.server_load()) == 2 * arr.nbytes
+    dms.close()
+    assert dms._repair_thread is None
+    with pytest.raises(ValueError, match="interval"):
+        dms.start_auto_repair(0.0)
 
 
 def test_throughput_accounting():

@@ -340,6 +340,31 @@ def test_gateway_is_a_transparent_storage_backend():
     gw.close()
 
 
+def test_storage_stats_surfaces_dms_availability_counters():
+    """Operators polling the gateway see the replica failover / repair
+    activity of the DMS tier below it in one structured view."""
+    store, slide = _dms_store()
+    gw = RegionGateway(store)
+    roi = BoundingBox((0, 0), (TILE, TILE))
+    np.testing.assert_array_equal(gw.get(_key(), roi), slide[roi.slices()])
+    stats = gw.storage_stats()
+    assert stats["gateway"]["served"] >= 1
+    assert "DMS" in stats["tiers"]
+    dms_entry = stats["dms"]["DMS"]
+    assert set(dms_entry["dms"]) >= {
+        "failover_fetches",
+        "balanced_fetches",
+        "put_failovers",
+        "put_rollbacks",
+        "repaired_blocks",
+    }
+    assert dms_entry["transport"]["bytes_get"] > 0
+    # the sweep itself is reachable through the facade too
+    report = gw.store.tiers[0].backend.repair()
+    assert report["lost"] == 0
+    gw.close()
+
+
 def test_custom_pressure_fn_overrides_tier_accounting():
     store, _ = _dms_store()
     level = {"p": 0.0}

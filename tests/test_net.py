@@ -120,9 +120,15 @@ def test_transport_protocol_conformance(transport):
     # batched metadata (what DMS.put sends): same directory semantics
     box2 = BoundingBox((8, 8), (16, 16))
     for sid in range(transport.num_servers):
-        transport.put_meta_batch(sid, [(key, (3, 4), box, 1), (key, (5, 6), box2, 2)])
+        had = transport.put_meta_batch(
+            sid, [(key, (3, 4), box, 1), (key, (5, 6), box2, 2)]
+        )
+        assert had == []  # fresh coords: empty pre-image
     looked = transport.lookup(0, key)
     assert looked[(3, 4)] == (box, 1) and looked[(5, 6)] == (box2, 2)
+    # re-sending reports the coords that already existed (the pre-image
+    # a failed put's rollback consults before dropping anything)
+    assert transport.put_meta_batch(0, [(key, (3, 4), box, 1)]) == [(3, 4)]
 
     # byte accounting is real on both transports
     assert transport.stats.puts == 4
@@ -205,6 +211,28 @@ def test_transport_mutation_safety(transport):
     for blk in transport.fetch_many(0, [(key, (0, 0)), (key, (1, 0))]):
         np.testing.assert_array_equal(blk, original)
     transport.drop(0, key)
+
+
+def test_drop_block_conformance(transport):
+    """drop_block removes ONE block's payload + directory entry and
+    leaves siblings intact — the put-rollback primitive (a whole-key
+    drop would destroy sibling blocks), same over both transports."""
+    key = _key("db")
+    box = BoundingBox((0, 0), (8, 8))
+    a = np.ones((8, 8), np.float32)
+    transport.store(0, key, (0, 0), box, a)
+    transport.store(0, key, (1, 0), box, a)
+    transport.put_meta_batch(0, [(key, (0, 0), box, 0), (key, (1, 0), box, 0)])
+    transport.drop_block(0, key, (0, 0))
+    with pytest.raises(KeyError):
+        transport.fetch(0, key, (0, 0))
+    np.testing.assert_array_equal(transport.fetch(0, key, (1, 0)), a)
+    looked = transport.lookup(0, key)
+    assert (0, 0) not in looked and (1, 0) in looked
+    transport.drop_block(0, key, (9, 9))  # idempotent on absent blocks
+    transport.drop_block(0, _key("nope"), (0, 0))  # and on absent keys
+    transport.drop(0, key)
+    assert key not in transport.keys(0)
 
 
 def test_homes_metadata_roundtrip(transport):
@@ -726,6 +754,71 @@ def test_chaos_reads_survive_server_rejoining_empty():
             assert all(bb == DOM for _, bb in found)
         dms.delete(_key("rejoin"))
         dms.delete(_key("rejoin", ts=1))
+        dms.close()
+    finally:
+        fleet.close()
+
+
+def test_chaos_writes_survive_server_kill_and_repair_heals_rejoin():
+    """The write-path acceptance demo: a 4-process fleet with R=2 runs a
+    mixed put/get workload while a server is killed mid-workload — ZERO
+    failed puts, ZERO failed gets, bit-exact reads (puts re-home blocks
+    past the dead server along the ring) — then the server restarts
+    EMPTY on the same port and repair() converges the fleet back to two
+    live, directory-confirmed copies of every block."""
+    fleet = spawn_servers(4)
+    assert len(fleet.procs) == 4
+    try:
+        tr = fleet.transport(connect_timeout=5.0, op_timeout=20.0, dead_backoff=0.5)
+        dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr, replication=2)
+        rng = np.random.default_rng(30)
+        arrays: dict = {}
+
+        def step(i: int) -> None:
+            k = _key("wchaos", ts=i)
+            a = rng.random((64, 64)).astype(np.float32)
+            dms.put(k, DOM, a)  # a failed put would raise here
+            arrays[k] = a
+            for k2, a2 in arrays.items():  # and a failed get here
+                np.testing.assert_array_equal(dms.get(k2, DOM), a2)
+
+        for i in range(3):
+            step(i)
+        fleet.procs[1].kill()  # mid-workload: half the replica pairs touch it
+        for i in range(3, 8):
+            step(i)
+        assert dms.stats.put_failovers > 0  # writes re-homed, none failed
+        # every post-kill placement avoids the dead server
+        directory = tr.lookup(0, _key("wchaos", ts=5))
+        assert len(directory) == 16
+        for _, (_, h) in directory.items():
+            assert 1 not in decode_homes(h)
+
+        # restart empty on the same port, wait for the liveness cache
+        fleet.procs[1].start()
+        deadline = time.monotonic() + 15.0
+        while time.monotonic() < deadline:
+            try:
+                tr.ping(1)
+                break
+            except TransportError:
+                time.sleep(0.1)
+        report = dms.repair()
+        assert report["lost"] == 0
+        assert report["repaired"] > 0  # pre-kill blocks homed on 1 re-filled
+        # convergence proof: every directory entry of every key names two
+        # replicas whose own shards serve the block
+        for k in arrays:
+            assert len(tr.lookup(1, k)) == 16  # rejoined directory complete
+            for bc, (_, h) in tr.lookup(2, k).items():
+                homes = decode_homes(h)
+                assert len(homes) == 2
+                for sid in homes:
+                    assert tr.fetch(sid, k, bc) is not None
+        assert dms.repair()["repaired"] == 0  # second sweep: nothing left
+        # the workload (including reads of pre-kill data) continues green
+        for i in range(8, 10):
+            step(i)
         dms.close()
     finally:
         fleet.close()

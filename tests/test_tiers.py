@@ -345,6 +345,33 @@ def test_delete_then_reput_does_not_lose_new_data():
     ts.close()
 
 
+def test_standard_stack_opt_in_auto_repair(tmp_path):
+    """TieredStore.standard(repair_interval=...) runs the DMS tier's
+    anti-entropy sweep in the background; close() stops it."""
+    store = TieredStore.standard(
+        BoundingBox((0, 0), (64, 64)),
+        (16, 16),
+        root=str(tmp_path),
+        num_servers=4,
+        replication=2,
+        repair_interval=0.05,
+    )
+    dms = store.tiers[2].backend
+    assert dms._repair_thread is not None and dms._repair_thread.is_alive()
+    key = RegionKey("t", "heal", ElementType.FLOAT32)
+    arr = np.random.default_rng(9).random((64, 64)).astype(np.float32)
+    dms.put(key, BoundingBox((0, 0), (64, 64)), arr)
+    shard = dms.transport.servers[1]
+    shard._blocks.clear()
+    shard._meta.clear()
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline and dms.stats.repaired_blocks == 0:
+        time.sleep(0.02)
+    assert dms.stats.repaired_blocks > 0  # healed without an explicit call
+    store.close()
+    assert dms._repair_thread is None
+
+
 def test_wsi_pipeline_runs_unmodified_on_tiered_storage(tmp_path):
     """Acceptance: the RT two-stage pipeline runs against TieredStore
     registered under the same names, with zero call-site changes."""
