@@ -1,0 +1,120 @@
+"""Near-data compute: server-side kernel chains vs shipping raw regions.
+
+The paper's case studies push computation to the data (hierarchical
+stages, §3; the astronomy service's server-side quantitative queries);
+this module measures that trade for the serving path: a
+``deconv|threshold`` chain over a large RGB ROI executed via
+``RegionGateway.compute()`` — the client receives a uint8 segmentation
+mask instead of the float32 RGB window.
+
+The module FAILS (failing the harness and the CI gate) unless
+  * the gateway result is bit-exact with a local fetch + chain run,
+  * the derived reply is >= 10x smaller than the raw ROI it replaces,
+  * a repeated (derived-cache hit) query is >= 5x faster than the cold
+    compute.
+
+Fast mode (``REPRO_BENCH_FAST=1``) shrinks the ROI from 4096x4096 to
+1024x1024 for CI smoke runs; the assertions are identical.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core import BoundingBox, ElementType, RegionKey
+from repro.kernels.chains import resolve_chain
+from repro.serve.gateway import GatewayConfig, RegionGateway
+from repro.storage import DistributedMemoryStorage, Tier, TieredStore
+
+FAST = bool(os.environ.get("REPRO_BENCH_FAST"))
+SIDE = 1024 if FAST else 4096
+TILE = 256
+CHAIN = "deconv|threshold"
+
+
+def _staged_store(dom: BoundingBox, key: RegionKey) -> tuple[TieredStore, np.ndarray]:
+    dms = DistributedMemoryStorage(dom, (3, TILE, TILE), 4, name="DMS")
+    store = TieredStore([Tier("DMS", dms)], name="NDC-BENCH")
+    rgb = np.random.default_rng(0).random((3, SIDE, SIDE)).astype(np.float32)
+    for tile in dom.tiles((3, TILE, TILE)):
+        store.put(key, tile, rgb[tile.slices()])
+    return store, rgb
+
+
+def run() -> list:
+    dom = BoundingBox((0, 0, 0), (3, SIDE, SIDE))
+    key = RegionKey("bench", "HE", ElementType.FLOAT32)
+    store, rgb = _staged_store(dom, key)
+    roi = dom
+    chain = resolve_chain(CHAIN)
+
+    raw_s = time_call(store.get, key, roi)
+    raw_bytes = rgb.nbytes
+
+    # cold path: cache disabled so repeats measure the compute, not the hit
+    gw = RegionGateway(
+        store, config=GatewayConfig(workers=2, compute_cache_bytes=0)
+    )
+    mask = gw.compute(key, roi, CHAIN)  # warmup (jit compile)
+    want = chain(store.get(key, roi), impl=gw.config.compute_impl)
+    if not (np.array_equal(mask, want) and mask.dtype == want.dtype):
+        raise RuntimeError("gateway compute() is not bit-exact with local fetch+chain")
+    if raw_bytes < 10 * mask.nbytes:
+        raise RuntimeError(
+            f"egress regression: raw ROI {raw_bytes} B is not >=10x the "
+            f"derived mask {mask.nbytes} B"
+        )
+    cold_s = time_call(gw.compute, key, roi, CHAIN)
+    gw.close(close_store=False)
+
+    # cached path: same query twice through a caching gateway
+    gwc = RegionGateway(store, config=GatewayConfig(workers=2))
+    t0 = time.perf_counter()
+    first = gwc.compute(key, roi, CHAIN)
+    first_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    again = gwc.compute(key, roi, CHAIN)
+    warm_s = time.perf_counter() - t0
+    if not np.array_equal(first, again):
+        raise RuntimeError("cached repeat diverged from the cold result")
+    if gwc.stats.compute_cache_hits != 1:
+        raise RuntimeError("repeated query did not hit the derived cache")
+    if warm_s * 5 > first_s:
+        raise RuntimeError(
+            f"derived-cache speedup regression: cached {warm_s*1e3:.1f}ms "
+            f"not >=5x faster than cold {first_s*1e3:.1f}ms"
+        )
+    gwc.close(close_store=False)
+    store.close()
+
+    return [
+        row(
+            "compute_raw_read",
+            raw_s * 1e6,
+            f"bytes={raw_bytes}",
+        ),
+        row(
+            "compute_deconv_roi",
+            cold_s * 1e6,
+            f"roi={SIDE}x{SIDE},mask_bytes={mask.nbytes},"
+            f"egress={raw_bytes / mask.nbytes:.0f}x_less",
+        ),
+        row(
+            "compute_deconv_cached",
+            warm_s * 1e6,
+            f"speedup={first_s / warm_s:.0f}x",
+        ),
+    ]
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ import time
 import traceback
 
 from benchmarks import (
+    bench_compute,
     bench_disk_groups,
     bench_dms_vs_disk,
     bench_gateway,
@@ -54,6 +55,7 @@ MODULES = [
     ("tiered_staging", bench_tiers),
     ("transport", bench_transport),
     ("gateway", bench_gateway),
+    ("compute", bench_compute),
     ("replication", bench_replication),
     ("repair", bench_repair),
 ]

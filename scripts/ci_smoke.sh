@@ -24,7 +24,7 @@ bench_and_gate() {
   # store per re-replicated block and the hot-key read spread (<=70%
   # of gets on any one replica)
   REPRO_BENCH_FAST=1 python -m benchmarks.run \
-    --json "$BENCH_JSON" --only tiered_staging,transport,gateway,replication,repair \
+    --json "$BENCH_JSON" --only tiered_staging,transport,gateway,compute,replication,repair \
   && python scripts/bench_gate.py --run "$BENCH_JSON" \
        --baseline benchmarks/baseline.json
 }

@@ -3,6 +3,6 @@
 Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), validated against
 ``ref.py`` oracles; ``ops.py`` holds the jit'd dispatching wrappers.
 """
-from repro.kernels import ops, ref
+from repro.kernels import chains, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["chains", "ops", "ref"]

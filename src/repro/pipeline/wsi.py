@@ -122,6 +122,7 @@ def make_wsi_storage(
     policy: PlacementPolicy | None = None,
     promote_after: int = 2,
     serve=False,
+    compute=False,
 ) -> StorageRegistry:
     """Build the storage backing the WSI stages under the canonical names
     ("DMS3" for the (3, H, W) RGB volume, "DMS2" for the 2-D mask/hema
@@ -163,6 +164,17 @@ def make_wsi_storage(
     control.  The gateways register under the same names ("DMS3"/
     "DMS2"), so stage bindings never change; closing a gateway closes
     its store.
+
+    ``compute=True`` turns the gateways into the paper's near-data
+    analysis service: clients call ``registry.get("DMS3").compute(key,
+    roi, "deconv|threshold|ccl")`` and the kernel chain runs server-side
+    (Pallas on TPU, jnp references elsewhere), returning only the
+    derived mask/labels/features — an order-of-magnitude egress cut for
+    derived-product queries, with a put-generation-invalidated derived
+    cache for repeated hot analyses.  ``compute=True`` implies
+    ``serve=True``; pass a :class:`~repro.serve.gateway.GatewayConfig`
+    via ``serve=`` to size the derived cache (``compute_cache_bytes``)
+    or pin the kernel impl (``compute_impl``).
     """
     from repro.storage import SocketTransport, spawn_servers
 
@@ -233,6 +245,8 @@ def make_wsi_storage(
             )
     else:
         raise ValueError(f"unknown storage mode {mode!r} (want 'dms' | 'tiered')")
+    if compute and not serve:
+        serve = True  # near-data compute runs inside the serving gateway
     if serve:
         from repro.serve.gateway import GatewayConfig, RegionGateway
 

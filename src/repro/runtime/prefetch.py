@@ -86,10 +86,16 @@ class DevicePipeline:
         *,
         window: int = 2,
         sharding: jax.sharding.Sharding | None = None,
+        host_fn: Callable[[Any], Any] | None = None,
     ) -> None:
         self.fn = fn
         self.window = max(1, window)
         self.sharding = sharding
+        # optional terminal host stage applied to each downloaded result
+        # (e.g. a kernel chain's host-side reduction): it runs while the
+        # next items' device work is still in flight, so host post-
+        # processing overlaps compute just like the downloads do
+        self.host_fn = host_fn
         self.stats = {"uploaded": 0, "computed": 0, "downloaded": 0}
 
     def map(self, batches: Iterable[Any]) -> Iterator[Any]:
@@ -113,4 +119,4 @@ class DevicePipeline:
     def _download(self, out: Any) -> Any:
         host = jax.tree.map(np.asarray, out)
         self.stats["downloaded"] += 1
-        return host
+        return self.host_fn(host) if self.host_fn is not None else host

@@ -1,5 +1,12 @@
-"""Serving substrate: caches, prefill/decode steps, generation, and the
-region-serving gateway (batching front for the tiered region store)."""
+"""Serving substrate: caches, prefill/decode steps, generation, the
+region-serving gateway (batching front for the tiered region store), and
+the near-data compute engine (server-side kernel chains)."""
+from repro.serve.compute import (
+    ComputeEngine,
+    ComputeRequest,
+    ComputeTicket,
+    DerivedCache,
+)
 from repro.serve.gateway import (
     GatewayClosed,
     GatewayConfig,
@@ -19,6 +26,10 @@ from repro.serve.step import (
 )
 
 __all__ = [
+    "ComputeEngine",
+    "ComputeRequest",
+    "ComputeTicket",
+    "DerivedCache",
     "GatewayClosed",
     "GatewayConfig",
     "GatewayStats",

@@ -23,7 +23,15 @@ under the store's own name with zero call-site changes) while
   shared payload.  Under a DMS-backed tier each window fetch rides the
   transport's scatter-gather ``fetch_many`` frame, so N clients hitting
   M servers cost one round-trip per server instead of one per block per
-  client.
+  client;
+* **near-data compute** — :meth:`RegionGateway.compute` /
+  :meth:`RegionGateway.submit_compute` run a named kernel chain
+  (:mod:`repro.kernels.chains`, e.g. ``"deconv|threshold|ccl"``)
+  server-side over the requested ROI and return only the derived array
+  or feature vector; fetches are coalesced exactly like reads, windows
+  flow through :class:`~repro.runtime.prefetch.DevicePipeline`, and
+  repeated hot queries hit a generation-invalidated derived-product
+  cache (see :mod:`repro.serve.compute`).
 
 A merged window can cover cells none of the members asked for; if the
 store cannot serve the window (a coverage hole raises ``KeyError``) the
@@ -74,6 +82,12 @@ class GatewayConfig:
     shed_queue_factor: float = 0.25  # queue share admitted under pressure
     max_window_waste: float = 1.5  # window vol <= waste * sum(member vols)
     coalesce: bool = True
+    # near-data compute (serve/compute.py): derived-product cache bound,
+    # DevicePipeline in-flight window, and kernel impl dispatch
+    # ("auto" = Pallas on TPU, jnp references elsewhere)
+    compute_cache_bytes: int = 64 << 20
+    compute_pipeline_window: int = 2
+    compute_impl: str = "auto"
 
     def __post_init__(self) -> None:
         if self.workers < 1:
@@ -82,30 +96,77 @@ class GatewayConfig:
             raise ValueError("max_queue must be >= 1")
         if self.batch_window < 1:
             raise ValueError("batch_window must be >= 1")
+        if self.compute_cache_bytes < 0:
+            raise ValueError("compute_cache_bytes must be >= 0")
 
 
-@dataclasses.dataclass
 class GatewayStats:
-    """Request accounting (all counters monotonic, read under the lock)."""
+    """Request accounting: monotonic counters behind ONE internal lock.
 
-    requests: int = 0     # submitted (admitted + rejected)
-    served: int = 0       # completed with a payload
-    failed: int = 0       # completed with a backend error
-    rejected: int = 0     # Overloaded at admission
-    abandoned: int = 0    # tickets cancelled after a get() timeout
-    batches: int = 0      # worker drain cycles
-    windows: int = 0      # tier fetches issued (merged windows)
-    coalesced: int = 0    # requests served from a window shared with others
-    window_fallbacks: int = 0  # window had a hole -> per-request reads
-    window_failures: int = 0   # window died on the wire -> per-request degrade
-    queue_peak: int = 0
+    Writers use :meth:`add` (an atomic multi-counter bump: related
+    counters like ``served``+``failed`` from one batch move together) or
+    :meth:`peak`; readers use :meth:`as_dict`, which snapshots every
+    counter under the same lock — a concurrent-worker snapshot can never
+    observe a half-applied update (torn read).  Plain attribute reads of
+    a single counter remain lock-free (individual ints are consistent;
+    only cross-counter invariants need the snapshot).
+    """
+
+    _FIELDS = (
+        "requests",      # submitted reads (admitted + rejected)
+        "served",        # reads completed with a payload
+        "failed",        # reads completed with a backend error
+        "rejected",      # Overloaded at admission (reads + computes)
+        "abandoned",     # tickets cancelled after a get() timeout
+        "batches",       # worker drain cycles
+        "windows",       # tier fetches issued (merged read windows)
+        "coalesced",     # reads served from a window shared with others
+        "window_fallbacks",  # read window had a hole -> per-request reads
+        "window_failures",   # read window died on the wire -> degrade
+        "queue_peak",
+        # near-data compute path (disjoint from the read counters)
+        "compute_requests",
+        "compute_served",
+        "compute_failed",
+        "compute_cache_hits",
+        "compute_windows",           # fetch windows issued for computes
+        "compute_coalesced",         # computes sharing a fetched window
+        "compute_window_fallbacks",  # compute window hole -> per-member
+        "compute_window_failures",   # compute window wire death -> degrade
+        "raw_fetch_bytes",       # bytes pulled from the store for computes
+        "derived_reply_bytes",   # bytes actually returned to compute clients
+    )
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        for f in self._FIELDS:
+            setattr(self, f, 0)
+
+    def add(self, **deltas: int) -> None:
+        """Atomically bump several counters (one lock acquisition)."""
+        with self._lock:
+            for name, delta in deltas.items():
+                if name not in self._FIELDS:
+                    raise AttributeError(f"unknown gateway counter {name!r}")
+                setattr(self, name, getattr(self, name) + delta)
+
+    def peak(self, name: str, value: int) -> None:
+        with self._lock:
+            setattr(self, name, max(getattr(self, name), value))
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        """Consistent snapshot of every counter (taken under the lock)."""
+        with self._lock:
+            return {f: getattr(self, f) for f in self._FIELDS}
 
 
 class ReadTicket(concurrent.futures.Future):
     """Handle on one submitted ROI read (a Future carrying key + roi)."""
+
+    # worker batching groups same-key same-group tickets; plain reads all
+    # share the None group, compute tickets override with their chain
+    # digest so reads and unrelated chains never mix in one batch
+    group = None
 
     def __init__(self, key: RegionKey, roi: BoundingBox) -> None:
         super().__init__()
@@ -195,6 +256,8 @@ class RegionGateway:
         self.stats = GatewayStats()
         self._pressure_fn = pressure_fn
         self._pending: "collections.deque[ReadTicket]" = collections.deque()
+        self._engine = None  # near-data ComputeEngine, created on first use
+        self._engine_lock = threading.Lock()
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
         self._slot_free = threading.Condition(self._lock)
@@ -243,9 +306,13 @@ class RegionGateway:
         is the right response to memory pressure).
         """
         ticket = ReadTicket(key, roi)
+        self.stats.add(requests=1)
+        self._admit(ticket)
+        return ticket
+
+    def _admit(self, ticket: ReadTicket) -> None:
+        """Shared bounded-admission path for read and compute tickets."""
         deadline = time.monotonic() + self.config.admit_timeout
-        with self._lock:
-            self.stats.requests += 1
         while True:
             # sample pressure OUTSIDE the gateway lock: the store takes
             # its own lock, and a custom pressure_fn may legitimately
@@ -258,23 +325,92 @@ class RegionGateway:
                 depth = len(self._pending)
                 if depth < limit:
                     self._pending.append(ticket)
-                    self.stats.queue_peak = max(self.stats.queue_peak, depth + 1)
+                    self.stats.peak("queue_peak", depth + 1)
                     self._not_empty.notify()
-                    return ticket
+                    return
                 if p >= self.config.mem_highwater:
-                    self.stats.rejected += 1
+                    self.stats.add(rejected=1)
                     raise Overloaded(
                         f"{self.name}: queue {depth} >= {limit} with RAM tier at "
                         f"{p:.0%} of capacity; shedding load (retry with backoff)"
                     )
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
-                    self.stats.rejected += 1
+                    self.stats.add(rejected=1)
                     raise Overloaded(
                         f"{self.name}: queue full ({depth}/{limit}) for "
                         f"{self.config.admit_timeout:.1f}s; rejecting (bounded wait)"
                     )
                 self._slot_free.wait(remaining)
+
+    # -- near-data compute ---------------------------------------------------------
+    @property
+    def engine(self):
+        """The lazily-built :class:`~repro.serve.compute.ComputeEngine`."""
+        if self._engine is None:
+            with self._engine_lock:
+                if self._engine is None:
+                    from repro.serve.compute import ComputeEngine
+
+                    self._engine = ComputeEngine(self.store, self.config)
+        return self._engine
+
+    def submit_compute(
+        self,
+        key: RegionKey | "object",
+        roi: BoundingBox | None = None,
+        chain: str | None = None,
+        params=None,
+    ) -> "ReadTicket":
+        """Enqueue one server-side kernel-chain execution.
+
+        Accepts either a :class:`~repro.serve.compute.ComputeRequest` or
+        the unpacked ``(key, roi, chain, params)``.  Chain resolution and
+        parameter validation happen HERE, synchronously — unknown chains
+        raise :class:`~repro.kernels.chains.UnknownChainError` and bad
+        params/ranks raise :class:`~repro.kernels.chains.ChainParamError`
+        before anything is queued.  A derived-cache hit resolves the
+        ticket immediately (no queue, no fetch, no kernel).
+        """
+        from repro.serve.compute import ComputeRequest, make_ticket
+
+        if isinstance(key, ComputeRequest):
+            request = key
+        else:
+            if roi is None or chain is None:
+                raise TypeError("submit_compute needs (key, roi, chain) or a ComputeRequest")
+            request = ComputeRequest(key, roi, chain, params)
+        ticket = make_ticket(request)  # typed errors fail fast, pre-queue
+        self.stats.add(compute_requests=1)
+        self.engine.chain_stats.add(ticket.chain_obj.name, requests=1)
+        cached = self.engine.cached(ticket)
+        if cached is not None:
+            self.stats.add(
+                compute_cache_hits=1,
+                compute_served=1,
+                derived_reply_bytes=cached.nbytes,
+            )
+            ticket.set_result(cached)
+            return ticket
+        self._admit(ticket)
+        return ticket
+
+    def compute(
+        self,
+        key: RegionKey | "object",
+        roi: BoundingBox | None = None,
+        chain: str | None = None,
+        params=None,
+    ) -> np.ndarray:
+        """Blocking server-side chain execution; returns the derived
+        array/feature vector (bit-exact with a local fetch + chain run)."""
+        ticket = self.submit_compute(key, roi, chain, params)
+        try:
+            return ticket.result(self.config.request_timeout)
+        except TimeoutError:
+            if ticket.cancel():
+                self.stats.add(abandoned=1)
+            raise
 
     # -- worker pool --------------------------------------------------------------
     def _worker_loop(self) -> None:
@@ -288,15 +424,20 @@ class RegionGateway:
                 # survive anything (even MemoryError mid-batch): answer
                 # every unresolved ticket and keep draining, or queued
                 # clients would hang for their full request_timeout
-                failed = sum(
-                    1 for m in batch if not m.done() and _deliver_error(m, e)
-                )
-                with self._lock:
-                    self.stats.failed += failed
+                reads = computes = 0
+                for m in batch:
+                    if not m.done() and _deliver_error(m, e):
+                        if m.group is None:
+                            reads += 1
+                        else:
+                            computes += 1
+                self.stats.add(failed=reads, compute_failed=computes)
 
     def _next_batch(self) -> list[ReadTicket] | None:
-        """Pop the head request plus every queued same-key request (up to
-        ``batch_window``) — the coalescing unit.  None = closed + drained."""
+        """Pop the head request plus every queued same-key same-group
+        request (up to ``batch_window``) — the coalescing unit; reads
+        (group None) and each distinct kernel chain batch separately.
+        None = closed + drained."""
         with self._lock:
             while True:
                 if self._pending and (not self._paused or self._closed):
@@ -310,12 +451,16 @@ class RegionGateway:
                 keep: "collections.deque[ReadTicket]" = collections.deque()
                 while self._pending:
                     r = self._pending.popleft()
-                    if r.key == head.key and len(batch) < self.config.batch_window:
+                    if (
+                        r.key == head.key
+                        and r.group == head.group
+                        and len(batch) < self.config.batch_window
+                    ):
                         batch.append(r)
                     else:
                         keep.append(r)
                 self._pending = keep
-            self.stats.batches += 1
+            self.stats.add(batches=1)
             self._slot_free.notify_all()
         return batch
 
@@ -333,15 +478,20 @@ class RegionGateway:
         return clusters
 
     def _serve_batch(self, batch: list[ReadTicket]) -> None:
+        if batch[0].group is not None:
+            # compute batch (same key, same chain digest): the engine
+            # coalesces the FETCHES like reads, then runs the chain on
+            # each member's own ROI slice through the device pipeline
+            self.engine.serve_batch(batch, self)
+            return
         if self.config.coalesce and len(batch) > 1:
             clusters = self._coalesce(batch)
         else:
             clusters = [_Cluster(r) for r in batch]
         for c in clusters:
-            with self._lock:
-                self.stats.windows += 1
-                if len(c.members) > 1:
-                    self.stats.coalesced += len(c.members)
+            self.stats.add(
+                windows=1, coalesced=len(c.members) if len(c.members) > 1 else 0
+            )
             if len(c.members) == 1:
                 self._serve_one(c.members[0])
                 continue
@@ -355,8 +505,7 @@ class RegionGateway:
                 # while the DMS is down, and members that genuinely need
                 # the dead servers fail with their own TransportError
                 # (cheap: the transport's liveness cache fails fast)
-                with self._lock:
-                    self.stats.window_failures += 1
+                self.stats.add(window_failures=1)
                 for m in c.members:
                     self._serve_one(m)
                 continue
@@ -364,8 +513,7 @@ class RegionGateway:
                 # another per-window tier error: degrade to per-request
                 # reads, which either succeed or surface the member's own
                 # error — coalescing stays a pure optimization
-                with self._lock:
-                    self.stats.window_fallbacks += 1
+                self.stats.add(window_fallbacks=1)
                 for m in c.members:
                     self._serve_one(m)
                 continue
@@ -385,9 +533,7 @@ class RegionGateway:
                     continue
                 if _deliver(m, payload):
                     served += 1
-            with self._lock:
-                self.stats.served += served
-                self.stats.failed += failed
+            self.stats.add(served=served, failed=failed)
 
     def _serve_one(self, req: ReadTicket) -> None:
         if req.done():
@@ -396,12 +542,10 @@ class RegionGateway:
             value = self.store.get(req.key, req.roi)
         except BaseException as e:  # noqa: BLE001 — surfaced on the ticket
             if _deliver_error(req, e):
-                with self._lock:
-                    self.stats.failed += 1
+                self.stats.add(failed=1)
             return
         if _deliver(req, value):
-            with self._lock:
-                self.stats.served += 1
+            self.stats.add(served=1)
 
     # -- StorageBackend protocol ----------------------------------------------------
     def get(self, key: RegionKey, roi: BoundingBox) -> np.ndarray:
@@ -413,18 +557,23 @@ class RegionGateway:
             # done() members) instead of fetching a window for a caller
             # that gave up — and counting the orphan as served
             if ticket.cancel():
-                with self._lock:
-                    self.stats.abandoned += 1
+                self.stats.add(abandoned=1)
             raise
 
     def put(self, key: RegionKey, bb: BoundingBox, array: np.ndarray) -> None:
         self.store.put(key, bb, array)
+        if self._engine is not None:
+            # a write through the facade invalidates the key's derived
+            # products (stores with generation() also catch direct puts)
+            self._engine.note_write(key)
 
     def query(self, namespace: str, name: str) -> list[tuple[RegionKey, BoundingBox]]:
         return self.store.query(namespace, name)
 
     def delete(self, key: RegionKey) -> None:
         self.store.delete(key)
+        if self._engine is not None:
+            self._engine.note_write(key)
 
     # -- lifecycle ------------------------------------------------------------------
     def pause(self) -> None:
@@ -453,6 +602,9 @@ class RegionGateway:
         happening below it without reaching around the facade.
         """
         out: dict = {"gateway": self.stats.as_dict()}
+        if self._engine is not None:
+            # per-chain latency + egress savings and derived-cache health
+            out["compute"] = self._engine.as_dict()
         tier_stats = getattr(self.store, "tier_stats", None)
         if callable(tier_stats):
             out["tiers"] = {n: s.as_dict() for n, s in tier_stats().items()}

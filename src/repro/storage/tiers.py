@@ -443,9 +443,11 @@ class TieredStore:
             self._hits.pop(key, None)
             self._placement.pop(key, None)
             self._bb.pop(key, None)
-            # _gen is intentionally kept: generations must stay monotonic
-            # across delete/re-put so late flushes of the old incarnation
-            # can be recognized as stale
+            # _gen is intentionally kept (and bumped: a delete is a write
+            # for anyone caching derived products of this key): it must
+            # stay monotonic across delete/re-put so late flushes of the
+            # old incarnation can be recognized as stale
+            self._gen[key] += 1
         for tier in self.tiers:
             tier.backend.delete(key)
 
@@ -773,6 +775,18 @@ class TieredStore:
                 return True
             tiers = self._resident.get(key)
             return bool(tiers) and self._bottom not in tiers
+
+    def generation(self, key: RegionKey) -> int:
+        """Monotonic per-key write generation (puts AND deletes bump it).
+
+        Consumed by derived-product caches (the gateway's near-data
+        compute tier): a cached result is valid iff the generation it was
+        computed under still matches, so writes that bypass the cache
+        owner — direct ``store.put`` while a gateway fronts the store —
+        still invalidate.
+        """
+        with self._lock:
+            return self._gen[key]
 
     def tier_stats(self) -> dict[str, TierStats]:
         return {t.name: t.stats for t in self.tiers}

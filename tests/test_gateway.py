@@ -406,3 +406,42 @@ def test_make_wsi_storage_serve_wraps_stores_in_gateways():
     for r in (reg, reg2):
         for name in ("DMS3", "DMS2"):
             r.get(name).close()  # closes gateway AND the tiered store
+
+
+def test_stats_snapshot_is_atomic_under_hammer():
+    """as_dict() must snapshot all counters under the stats lock: with
+    writers always bumping (requests, served) together via add(), every
+    snapshot a reader takes must show the two counters equal — a torn
+    read (pre-lock as_dict built the dict field by field) shows skew."""
+    from repro.serve.gateway import GatewayStats
+
+    stats = GatewayStats()
+    rounds, writers = 2000, 4
+    stop = threading.Event()
+    skews = []
+
+    def writer():
+        for _ in range(rounds):
+            stats.add(requests=1, served=1)
+            stats.peak("queue_peak", stats.as_dict()["requests"] % 97)
+
+    def reader():
+        while not stop.is_set():
+            snap = stats.as_dict()
+            if snap["requests"] != snap["served"]:
+                skews.append(snap)
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    threads = [threading.Thread(target=writer) for _ in range(writers)]
+    for t in readers + threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    stop.set()
+    for t in readers:
+        t.join(timeout=10)
+    assert not skews, skews[:3]
+    final = stats.as_dict()
+    assert final["requests"] == final["served"] == rounds * writers
+    with pytest.raises(AttributeError):
+        stats.add(not_a_counter=1)  # typo'd counter names must not pass silently
