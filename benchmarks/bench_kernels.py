@@ -11,11 +11,9 @@ import numpy as np
 
 from benchmarks.common import row, time_call
 from repro.kernels import ref
-from repro.kernels.ccl import ccl_pallas
 from repro.kernels.color_deconv import color_deconv_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.glcm import glcm_pallas
-from repro.kernels.morph_recon import morph_recon_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 RNG = np.random.default_rng(0)

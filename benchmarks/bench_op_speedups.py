@@ -7,7 +7,6 @@ GPU speedup for that operation — the inputs PATS runs on.
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row, time_call
 from repro.configs.wsi import PAPER_OP_SPEEDUPS, WSIConfig

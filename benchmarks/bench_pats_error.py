@@ -8,7 +8,6 @@ FCFS comparison, and the share of low-speedup tasks landing on the GPU.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import row
 from repro.configs.wsi import PAPER_OP_COSTS, PAPER_OP_SPEEDUPS

@@ -7,7 +7,6 @@ tasks) under FCFS vs PATS, then +DL and +Pref.  Node model: 12 CPU cores +
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import row
 from repro.configs.wsi import PAPER_OP_COSTS, PAPER_OP_SPEEDUPS

@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core import BoundingBox, ElementType, RegionKey
 from repro.serve.gateway import GatewayConfig, Overloaded, RegionGateway
-from repro.storage import DistributedMemoryStorage, MemoryTier, Tier, TieredStore
+from repro.storage import DistributedMemoryStorage, Tier, TieredStore
 
 SIDE = 1024
 TILE = 128

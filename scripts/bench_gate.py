@@ -18,6 +18,11 @@ timings cannot fail on CI scheduler noise — real regressions on these
 paths have historically been 10-75x, far above both bars.  Missing
 metrics and failed benchmark modules also fail the gate.
 
+Besides the pass/fail verdict the gate renders a baseline-vs-run
+markdown delta table — to stdout always, and appended to
+``$GITHUB_STEP_SUMMARY`` when that variable is set (GitHub Actions), so
+perf movement is visible on every PR instead of only on failure.
+
 To re-baseline after an intentional perf change:
     REPRO_BENCH_FAST=1 python -m benchmarks.run --json bench.json --only tiered_staging,transport
     python scripts/bench_gate.py --run bench.json --rebaseline
@@ -26,12 +31,52 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
 def load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
+
+
+def render_summary(table: list[dict], failures: list[str], tolerance: float) -> str:
+    """Baseline-vs-run delta table as GitHub-flavored markdown."""
+    lines = [
+        "### Benchmark gate",
+        "",
+        f"Tolerance {tolerance:.0%}; a metric fails above "
+        "`max(baseline * (1 + tolerance), floor_us)`.",
+        "",
+        "| metric | run (us) | baseline (us) | delta | allowed (us) | verdict |",
+        "|---|---:|---:|---:|---:|:---:|",
+    ]
+    for t in table:
+        if t["got"] is None:
+            lines.append(
+                f"| `{t['name']}` | — | {t['base']:.1f} | — | {t['allowed']:.1f} "
+                f"| :x: missing |"
+            )
+            continue
+        delta = (t["got"] - t["base"]) / t["base"] if t["base"] else 0.0
+        mark = ":white_check_mark:" if t["ok"] else ":x:"
+        lines.append(
+            f"| `{t['name']}` | {t['got']:.1f} | {t['base']:.1f} | {delta:+.0%} "
+            f"| {t['allowed']:.1f} | {mark} |"
+        )
+    for f in failures:
+        if "missing from run" not in f and ">" not in f:
+            lines.append(f"\n- :x: {f}")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def emit_summary(markdown: str) -> None:
+    print(markdown)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(markdown + "\n")
 
 
 def main(argv=None) -> int:
@@ -81,6 +126,7 @@ def main(argv=None) -> int:
         return 0
 
     failures: list[str] = []
+    table: list[dict] = []
     for tag in run.get("failed_modules", []):
         failures.append(f"benchmark module {tag!r} failed")
     for name, spec in baseline["metrics"].items():
@@ -90,6 +136,9 @@ def main(argv=None) -> int:
         row = rows.get(name)
         if row is None:
             failures.append(f"{name}: missing from run (baseline {base:.1f}us)")
+            table.append(
+                {"name": name, "got": None, "base": base, "allowed": allowed, "ok": False}
+            )
             continue
         got = float(row["us_per_call"])
         verdict = "OK" if got <= allowed else "REGRESSION"
@@ -97,11 +146,16 @@ def main(argv=None) -> int:
             f"bench_gate: {name:28s} {got:10.1f}us  baseline {base:10.1f}us  "
             f"allowed {allowed:10.1f}us  {verdict}"
         )
+        table.append(
+            {"name": name, "got": got, "base": base, "allowed": allowed,
+             "ok": verdict == "OK"}
+        )
         if verdict != "OK":
             failures.append(
                 f"{name}: {got:.1f}us > allowed {allowed:.1f}us "
                 f"(baseline {base:.1f}us, tolerance {tolerance:.0%}, floor {floor:.0f}us)"
             )
+    emit_summary(render_summary(table, failures, tolerance))
     if failures:
         print("bench_gate: FAILED", file=sys.stderr)
         for f in failures:

@@ -18,7 +18,6 @@ Notes on fidelity to the paper's operators (S5.1):
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

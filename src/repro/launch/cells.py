@@ -23,7 +23,6 @@ from repro.models.spec import (
     DEFAULT_RULES,
     ParamSpec,
     named_shardings,
-    partition_specs,
 )
 from repro.serve import abstract_cache, cache_shardings, make_decode_step, make_prefill_step
 from repro.train import AdamW, AdamWConfig, abstract_state, make_train_step, state_shardings

@@ -23,10 +23,9 @@ import json
 import time
 import traceback
 
-import jax
 
 from repro.analysis import hlo as hlo_analysis
-from repro.analysis.roofline import V5E, compute_terms, model_flops
+from repro.analysis.roofline import compute_terms, model_flops
 from repro.configs import SHAPES, all_cells, cell_supported, get_config
 from repro.launch.cells import build_cell, lower_cell
 from repro.launch.mesh import make_production_mesh

@@ -16,7 +16,6 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models.config import ModelConfig
-from repro.models.spec import ParamSpec
 from repro.models.transformer import _maybe_remat, _stack
 
 

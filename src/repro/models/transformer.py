@@ -23,7 +23,6 @@ for the hybrid/ssm archs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

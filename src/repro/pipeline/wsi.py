@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.wsi import PAPER_OP_COSTS, PAPER_OP_SPEEDUPS, WSIConfig
-from repro.core import BoundingBox, Intent, RegionKind, StorageRegistry
+from repro.core import BoundingBox, RegionKind, StorageRegistry
 from repro.kernels import ops, ref
 from repro.runtime.dag import Stage, Task, TaskCost
 from repro.storage import DistributedMemoryStorage, PlacementPolicy, TieredStore
@@ -117,6 +117,7 @@ def make_wsi_storage(
     endpoints=None,
     replication: int = 1,
     repair=None,
+    wire_codec: str | None = None,
     mem_capacity_bytes: int = 64 << 20,
     write_policy: str = "write_through",
     policy: PlacementPolicy | None = None,
@@ -135,7 +136,14 @@ def make_wsi_storage(
 
     ``transport`` picks the DMS server link: ``"inproc"`` keeps the
     in-process shards, ``"socket"`` puts the DMS tier on real TCP
-    servers.  With ``endpoints`` (a list of ``(host, port)`` / "host:port"
+    servers, and ``"shm"`` is ``"socket"`` plus the negotiated
+    shared-memory data plane — co-located fetches arrive by arena
+    reference instead of a TCP stream copy, degrading automatically to
+    socket payloads for remote or pre-arena servers.  ``wire_codec``
+    (one of ``repro.storage.codec.WIRE_CODECS``, e.g. ``"zlib"``)
+    compresses socket payloads per connection; raw-vs-wire savings show
+    up in ``storage_stats()``.  With ``endpoints`` (a list of
+    ``(host, port)`` / "host:port"
     addresses, one per server id) the stores attach to an already-running
     fleet; otherwise ``num_servers`` shards are spawned locally across
     ``server_processes`` processes and the started
@@ -185,29 +193,38 @@ def make_wsi_storage(
     if repair is True:
         repair = 30.0
     repair_interval = None if not repair else float(repair)
-    if transport not in ("inproc", "socket"):
-        raise ValueError(f"unknown transport {transport!r} (want 'inproc' | 'socket')")
+    if transport not in ("inproc", "socket", "shm"):
+        raise ValueError(
+            f"unknown transport {transport!r} (want 'inproc' | 'socket' | 'shm')"
+        )
+    if transport == "inproc" and wire_codec is not None:
+        raise ValueError(
+            "wire_codec= needs transport='socket' or 'shm' (in-process shards "
+            "move no wire bytes); refusing to silently ignore it"
+        )
     if endpoints is not None:
-        if transport != "socket":
+        if transport == "inproc":
             raise ValueError(
-                f"endpoints= only makes sense with transport='socket' (got "
-                f"transport={transport!r}); refusing to silently build "
+                f"endpoints= only makes sense with transport='socket'/'shm' "
+                f"(got transport={transport!r}); refusing to silently build "
                 f"in-process shards"
             )
         num_servers = len(endpoints)  # one server id per endpoint entry
+    shm_mode = "auto" if transport == "shm" else "off"
 
     def _transport(scope: str):
         """One transport per store: shards are shared across stores, so
         each store scopes its keyspace (and owns its connections)."""
         if transport == "inproc":
             return None
+        kw = dict(scope=scope, wire_codec=wire_codec, shm=shm_mode)
         if endpoints is not None:
-            return SocketTransport(endpoints, scope=scope)
+            return SocketTransport(endpoints, **kw)
         group = getattr(registry, "server_group", None)
         if group is None:
             group = spawn_servers(num_servers, processes=server_processes)
             registry.server_group = group
-        return group.transport(scope=scope)
+        return group.transport(**kw)
 
     if mode == "dms":
         for sname, dom, bshape in (

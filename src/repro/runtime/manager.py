@@ -30,7 +30,6 @@ from typing import Any
 
 from repro.core.regions import STORAGE, DataRegion, RegionTemplate, StorageRegistry
 from repro.runtime.dag import (
-    DeviceKind,
     Stage,
     StageContext,
     StageState,

@@ -270,16 +270,20 @@ class ComputeEngine:
                 try:
                     arr = gateway.store.get(m.key, m.roi)
                 except BaseException as e:  # noqa: BLE001
-                    if _deliver_error(m, e):
-                        stats.add(compute_failed=1)
-                        self.chain_stats.add(chain.name, failed=1)
+                    stats.add(compute_failed=1)
+                    self.chain_stats.add(chain.name, failed=1)
+                    if not _deliver_error(m, e):
+                        stats.add(compute_failed=-1)
+                        self.chain_stats.add(chain.name, failed=-1)
                     continue
                 raw_bytes += arr.nbytes
                 items.append((m, arr, gen))
+        # raw-fetch accounting lands BEFORE any ticket is fulfilled so a
+        # client waking on .result() already sees its window's bytes
+        if raw_bytes:
+            self.chain_stats.add(chain.name, raw_bytes=raw_bytes)
+            stats.add(raw_fetch_bytes=raw_bytes)
         if not items:
-            if raw_bytes:
-                self.chain_stats.add(chain.name, raw_bytes=raw_bytes)
-                stats.add(raw_fetch_bytes=raw_bytes)
             return
         # compute phase: batched windows through the 3-phase device
         # pipeline (upload | kernel chain | download overlap, §3.2.1)
@@ -288,34 +292,36 @@ class ComputeEngine:
             window=cfg.compute_pipeline_window,
             host_fn=chain.host_fn(),
         )
-        served = failed = derived_bytes = 0
         t0 = time.perf_counter()
         try:
             for (m, _, gen), out in zip(items, pipe.map(a for _, a, _ in items)):
                 result = np.asarray(out)
                 self.cache.put((m.key, m.digest, m.roi), gen, result)
-                if _deliver(m, result.copy()):
-                    served += 1
-                    derived_bytes += result.nbytes
+                # count before fulfilling (see gateway._deliver), rolling
+                # back only on a lost race with a client-side cancel
+                stats.add(compute_served=1, derived_reply_bytes=result.nbytes)
+                self.chain_stats.add(
+                    chain.name, served=1, derived_bytes=result.nbytes
+                )
+                if not _deliver(m, result.copy()):
+                    stats.add(
+                        compute_served=-1, derived_reply_bytes=-result.nbytes
+                    )
+                    self.chain_stats.add(
+                        chain.name, served=-1, derived_bytes=-result.nbytes
+                    )
         except BaseException as e:  # noqa: BLE001 — a kernel failure must
             # answer every still-pending member, not poison the batch
             for m, _, _ in items:
-                if not m.done() and _deliver_error(m, e):
-                    failed += 1
-        compute_ms = (time.perf_counter() - t0) * 1e3
-        stats.add(
-            compute_served=served,
-            compute_failed=failed,
-            raw_fetch_bytes=raw_bytes,
-            derived_reply_bytes=derived_bytes,
-        )
+                if m.done():
+                    continue
+                stats.add(compute_failed=1)
+                self.chain_stats.add(chain.name, failed=1)
+                if not _deliver_error(m, e):
+                    stats.add(compute_failed=-1)
+                    self.chain_stats.add(chain.name, failed=-1)
         self.chain_stats.add(
-            chain.name,
-            served=served,
-            failed=failed,
-            raw_bytes=raw_bytes,
-            derived_bytes=derived_bytes,
-            compute_ms=compute_ms,
+            chain.name, compute_ms=(time.perf_counter() - t0) * 1e3
         )
 
     def as_dict(self) -> dict:

@@ -185,7 +185,13 @@ class ReadTicket(concurrent.futures.Future):
 
 
 def _deliver(ticket: ReadTicket, value: np.ndarray) -> bool:
-    """set_result unless the client cancelled meanwhile; True = counted."""
+    """set_result unless the client cancelled meanwhile; True = counted.
+
+    Callers must bump their stats counters BEFORE calling this (rolling
+    back with a negative delta on False): set_result wakes the client,
+    and a client reading ``gateway.stats`` right after ``result()``
+    returns must already see its own request counted.
+    """
     try:
         ticket.set_result(value)
         return True
@@ -424,14 +430,13 @@ class RegionGateway:
                 # survive anything (even MemoryError mid-batch): answer
                 # every unresolved ticket and keep draining, or queued
                 # clients would hang for their full request_timeout
-                reads = computes = 0
                 for m in batch:
-                    if not m.done() and _deliver_error(m, e):
-                        if m.group is None:
-                            reads += 1
-                        else:
-                            computes += 1
-                self.stats.add(failed=reads, compute_failed=computes)
+                    if m.done():
+                        continue
+                    field = "failed" if m.group is None else "compute_failed"
+                    self.stats.add(**{field: 1})
+                    if not _deliver_error(m, e):
+                        self.stats.add(**{field: -1})
 
     def _next_batch(self) -> list[ReadTicket] | None:
         """Pop the head request plus every queued same-key same-group
@@ -517,7 +522,6 @@ class RegionGateway:
                 for m in c.members:
                     self._serve_one(m)
                 continue
-            served = failed = 0
             for m in c.members:
                 if m.done():
                     continue  # cancelled while queued
@@ -528,12 +532,13 @@ class RegionGateway:
                     payload = window_arr[m.roi.local_slices(c.window)].copy()
                 except BaseException as e:  # noqa: BLE001 — e.g. MemoryError
                     # on the copy: fail this member, keep serving the rest
-                    if _deliver_error(m, e):
-                        failed += 1
+                    self.stats.add(failed=1)
+                    if not _deliver_error(m, e):
+                        self.stats.add(failed=-1)
                     continue
-                if _deliver(m, payload):
-                    served += 1
-            self.stats.add(served=served, failed=failed)
+                self.stats.add(served=1)
+                if not _deliver(m, payload):
+                    self.stats.add(served=-1)
 
     def _serve_one(self, req: ReadTicket) -> None:
         if req.done():
@@ -541,11 +546,13 @@ class RegionGateway:
         try:
             value = self.store.get(req.key, req.roi)
         except BaseException as e:  # noqa: BLE001 — surfaced on the ticket
-            if _deliver_error(req, e):
-                self.stats.add(failed=1)
+            self.stats.add(failed=1)
+            if not _deliver_error(req, e):
+                self.stats.add(failed=-1)
             return
-        if _deliver(req, value):
-            self.stats.add(served=1)
+        self.stats.add(served=1)
+        if not _deliver(req, value):
+            self.stats.add(served=-1)
 
     # -- StorageBackend protocol ----------------------------------------------------
     def get(self, key: RegionKey, roi: BoundingBox) -> np.ndarray:

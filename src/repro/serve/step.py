@@ -5,7 +5,6 @@ token against a populated cache), per the assignment brief.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

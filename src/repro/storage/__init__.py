@@ -31,6 +31,12 @@ live.  Picking one:
   transfers per tier.
 """
 from repro.storage.autotune import IOConfig, TuneResult, autotune_io
+from repro.storage.codec import (
+    WIRE_CODECS,
+    Encoded,
+    decode_block,
+    encode_block,
+)
 from repro.storage.disk import DiskCostModel, DiskStats, DiskStorage
 from repro.storage.dms import (
     DistributedMemoryStorage,
@@ -45,9 +51,11 @@ from repro.storage.dms import (
 from repro.storage.net import (
     ServerGroup,
     ServerProcess,
+    ShmTransport,
     SocketTransport,
     spawn_servers,
 )
+from repro.storage.shm import ShmArena, ShmWindow
 from repro.storage.placement import (
     Placement,
     PlacementPolicy,
@@ -79,9 +87,16 @@ __all__ = [
     "encode_homes",
     "ServerGroup",
     "ServerProcess",
+    "ShmArena",
+    "ShmTransport",
+    "ShmWindow",
     "SocketTransport",
     "TransportError",
     "spawn_servers",
+    "WIRE_CODECS",
+    "Encoded",
+    "decode_block",
+    "encode_block",
     "IOConfig",
     "TuneResult",
     "autotune_io",

@@ -11,7 +11,6 @@ slices first; survivors graduate to the full workload).
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import shutil
 import tempfile
 from typing import Iterable

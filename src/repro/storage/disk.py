@@ -39,7 +39,6 @@ import random
 import threading
 import time
 import uuid
-from typing import Iterable
 
 import numpy as np
 

@@ -89,16 +89,32 @@ def decode_homes(home) -> tuple[int, ...]:
 
 @dataclasses.dataclass
 class TransportStats:
+    """Per-transport traffic accounting.
+
+    ``bytes_put``/``bytes_get`` count WIRE bytes — what actually crossed
+    the link (compressed payloads, or just the control frame for a
+    shared-memory fetch).  ``bytes_put_raw``/``bytes_get_raw`` count the
+    decoded array bytes the application moved.  On a plain transport the
+    two are equal; the gap is the data-plane saving, surfaced by
+    ``storage_stats()``.  ``shm_gets`` counts blocks served by shared-
+    memory reference instead of a socket payload.
+    """
+
     puts: int = 0
     gets: int = 0
     meta_msgs: int = 0
     bytes_put: int = 0
     bytes_get: int = 0
     bytes_meta: int = 0
+    bytes_put_raw: int = 0
+    bytes_get_raw: int = 0
+    shm_gets: int = 0
 
     def reset(self) -> None:
         self.puts = self.gets = self.meta_msgs = 0
         self.bytes_put = self.bytes_get = self.bytes_meta = 0
+        self.bytes_put_raw = self.bytes_get_raw = 0
+        self.shm_gets = 0
 
 
 @runtime_checkable
@@ -175,20 +191,28 @@ class Transport(Protocol):
 
 
 class _Server:
-    """One storage server: payload blocks + a replicated metadata directory."""
+    """One storage server: payload blocks + a replicated metadata directory.
+
+    Resident blocks are read-only ndarrays, or ``codec.Encoded`` blobs
+    when the hosting process runs with at-rest compression.  When the
+    socket server attaches a shared-memory ``arena``, ndarray blocks
+    live inside it (copied in at store time, or promoted on first shm
+    fetch) so co-located clients can read them without a socket payload.
+    """
 
     def __init__(self, sid: int) -> None:
         self.sid = sid
-        self._blocks: dict[tuple, np.ndarray] = {}
+        self._blocks: dict[tuple, object] = {}  # ndarray | codec.Encoded
         self._meta: dict[RegionKey, dict[tuple, tuple[BoundingBox, object]]] = {}
         self._lock = threading.Lock()
+        self.arena = None  # optional shm.ShmArena, set by the socket server
 
     def store(
         self,
         key: RegionKey,
         block_coord: tuple,
         box: BoundingBox,
-        payload: np.ndarray,
+        payload,
         *,
         owned: bool = False,
     ) -> None:
@@ -198,19 +222,60 @@ class _Server:
         # caller hands over a private buffer (the socket server decodes
         # each frame into one; copying it again would double the memory
         # traffic of every replicated put).
-        if not owned:
-            payload = np.array(payload, copy=True)
-        payload.setflags(write=False)
+        if isinstance(payload, np.ndarray):
+            if not owned:
+                payload = np.array(payload, copy=True)
+            payload.setflags(write=False)
         with self._lock:
+            if self.arena is not None:
+                handle = (self.sid, key, block_coord)
+                self.arena.release(handle)  # overwrite frees the old slot
+                if isinstance(payload, np.ndarray) and payload.nbytes:
+                    adopted = self.arena.place(handle, payload)
+                    if adopted is not None:
+                        payload = adopted  # arena-resident read-only view
             self._blocks[(key, block_coord)] = payload
 
     def fetch(self, key: RegionKey, block_coord: tuple) -> np.ndarray:
         with self._lock:
             block = self._blocks[(key, block_coord)]
+        if not isinstance(block, np.ndarray):
+            return block.decode()  # at-rest Encoded: read-only (frombuffer over bytes)
         # read-only view: in-process clients cannot mutate the store
         # through the returned array (its base is non-writable, so even
         # setflags cannot re-enable writes)
         return block.view()
+
+    def fetch_resident(self, key: RegionKey, block_coord: tuple):
+        """The resident object itself (ndarray or ``Encoded``) — lets the
+        socket server pass an at-rest blob to a codec-capable client
+        without a decode/re-encode round."""
+        with self._lock:
+            return self._blocks[(key, block_coord)]
+
+    def arena_ref(self, key: RegionKey, block_coord: tuple):
+        """``(array header, offset, nbytes)`` of the block's arena slot,
+        promoting a heap-resident ndarray into the arena on first shm
+        fetch.  ``None`` when the block cannot be shm-served (no arena,
+        arena full, empty block, or at-rest ``Encoded``) — the caller
+        falls back to a socket payload.  Raises ``KeyError`` for a
+        missing block, matching ``fetch``."""
+        if self.arena is None:
+            return None
+        with self._lock:
+            block = self._blocks[(key, block_coord)]
+            if not isinstance(block, np.ndarray) or block.nbytes == 0:
+                return None
+            handle = (self.sid, key, block_coord)
+            slot = self.arena.locate(handle)
+            if slot is None:
+                adopted = self.arena.place(handle, block)
+                if adopted is None:
+                    return None
+                self._blocks[(key, block_coord)] = adopted
+                slot = self.arena.locate(handle)
+            meta = {"shape": list(block.shape), "dtype": str(block.dtype)}
+            return meta, slot[0], slot[1]
 
     def put_meta(
         self, key: RegionKey, block_coord: tuple, box: BoundingBox, home: int | Sequence[int]
@@ -231,12 +296,16 @@ class _Server:
             self._meta.pop(key, None)
             for bk in [bk for bk in self._blocks if bk[0] == key]:
                 self._blocks.pop(bk, None)
+                if self.arena is not None:
+                    self.arena.release((self.sid, bk[0], bk[1]))
 
     def drop_block(self, key: RegionKey, block_coord: tuple) -> None:
         """Remove ONE block's payload and directory entry (put rollback:
         a failed put must not leave orphaned bytes or phantom entries)."""
         with self._lock:
             self._blocks.pop((key, block_coord), None)
+            if self.arena is not None:
+                self.arena.release((self.sid, key, block_coord))
             meta = self._meta.get(key)
             if meta is not None:
                 meta.pop(block_coord, None)
@@ -274,13 +343,16 @@ class InProcTransport:
 
     # -- accounting ---------------------------------------------------------------
     def _account(self, server: int, nbytes: int, op: str) -> None:
+        # in-process moves are never compressed: wire bytes == raw bytes
         with self._lock:
             if op == "put":
                 self.stats.puts += 1
                 self.stats.bytes_put += nbytes
+                self.stats.bytes_put_raw += nbytes
             elif op == "get":
                 self.stats.gets += 1
                 self.stats.bytes_get += nbytes
+                self.stats.bytes_get_raw += nbytes
             else:
                 self.stats.meta_msgs += 1
                 self.stats.bytes_meta += nbytes

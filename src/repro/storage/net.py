@@ -12,19 +12,40 @@ Wire protocol (one request/response round-trip per message)::
 
     frame    := u32 header_len | u64 payload_len | header | payload
     header   := JSON (op, sid, key/coord/bb/home..., array meta)
-    payload  := raw little-endian array bytes (C order), only for
-                store requests and fetch / fetch_many responses
-                (fetch_many: blocks concatenated in request order)
+    payload  := block bytes (C order, little-endian), only for store
+                requests and fetch / fetch_many responses.
+                fetch_many: per-block buffers back to back, each block's
+                byte offset in its header entry ("off"/"len"; legacy
+                servers omit them and the client falls back to
+                cumulative raw sizes).  The server sends the buffers
+                with one scatter-IO ``sendmsg`` — they are never
+                concatenated in memory.
 
 Array payloads travel as ``header {shape, dtype} + raw buffer`` — no
 pickling, dtype and shape preserved bit-exact (including float16 /
 bfloat16 / empty arrays; non-contiguous inputs are compacted once on the
-sending side).
+sending side).  Optionally the buffer is compressed by one of the
+``storage/codec.py`` codecs (a ``codec`` tag in the array header makes
+every block self-describing) and/or replaced entirely by a
+shared-memory reference (``"shm": [offset, nbytes]``) when client and
+server negotiated a same-host arena — see ``storage/shm.py``.
+
+Negotiation: a client constructed with ``wire_codec=`` or ``shm=`` sends
+one ``hello`` frame per connection before its first message.  The reply
+carries the server's supported codecs and (when requested and available)
+its arena descriptor ``{name, size, token}``.  An old server rejects
+``hello`` as an unknown op and the client silently falls back to the
+plain wire format, so mixed-version fleets interoperate; a client
+without those options never sends ``hello`` and is byte-identical to the
+legacy protocol.
 
 Pieces:
   * :class:`SocketTransport` — the client: one pipelined TCP connection
     per server endpoint, thread-safe, every wire byte accounted in
-    ``TransportStats``.
+    ``TransportStats`` (raw vs wire bytes split).
+  * :class:`ShmTransport` — a :class:`SocketTransport` that requires the
+    shared-memory data plane (co-located fleets; control frames on the
+    socket, payloads through the arena).
   * :class:`ServerProcess` — a subprocess handle that runs ``python -m
     repro.storage.net`` hosting one or more ``_Server`` shards behind a
     threaded socket loop (the standalone entry point documented in the
@@ -52,6 +73,17 @@ import numpy as np
 
 from repro.core.bbox import BoundingBox
 from repro.core.regions import RegionKey
+from repro.storage.codec import (  # noqa: F401 — array codec re-exported
+    WIRE_CODECS,
+    Encoded,
+    check_codec,
+    decode_array,  # noqa: F401
+    decode_block,
+    encode_array,  # noqa: F401
+    encode_block,
+    is_lossless,
+    raw_nbytes,
+)
 from repro.storage.disk import _bb_from_json, _bb_to_json, _key_from_json, _key_to_json
 from repro.storage.dms import (  # noqa: F401 — TransportError re-exported
     META_MSG_BYTES,
@@ -61,8 +93,13 @@ from repro.storage.dms import (  # noqa: F401 — TransportError re-exported
     decode_homes,
     encode_homes,
 )
+from repro.storage.shm import ShmArena, ShmWindow
 
 _PREFIX = struct.Struct("!IQ")  # header_len, payload_len
+
+# default arena capacity for shard hosts (created lazily on the first
+# shm-negotiating hello, so plain fleets never touch /dev/shm)
+DEFAULT_ARENA_BYTES = 256 << 20
 
 
 def _homes_json(home):
@@ -88,14 +125,43 @@ def _recv_exact(sock: socket.socket, n: int) -> bytearray:
     return buf
 
 
+def _nbytes(buf) -> int:
+    return buf.nbytes if isinstance(buf, memoryview) else len(buf)
+
+
+_IOV_CHUNK = 64  # comfortably under IOV_MAX (1024 on linux)
+
+
+def _sendmsg_all(sock: socket.socket, parts: list) -> None:
+    """Scatter-IO sendall: put every buffer on the wire without ever
+    concatenating them (``sendmsg`` io-vectors + partial-send loop)."""
+    bufs = [memoryview(p).cast("B") for p in parts]
+    bufs = [b for b in bufs if b.nbytes]
+    while bufs:
+        sent = sock.sendmsg(bufs[:_IOV_CHUNK])
+        if sent <= 0:
+            raise OSError("sendmsg returned no progress")
+        while bufs and sent:
+            if sent >= bufs[0].nbytes:
+                sent -= bufs[0].nbytes
+                bufs.pop(0)
+            else:
+                bufs[0] = bufs[0][sent:]
+                sent = 0
+
+
+def send_frame_parts(sock: socket.socket, header: dict, parts: Sequence) -> int:
+    """Send one frame whose payload is ``parts`` back to back; returns
+    the number of bytes put on the wire."""
+    hbytes = json.dumps(header, separators=(",", ":")).encode()
+    plen = sum(_nbytes(p) for p in parts)
+    _sendmsg_all(sock, [_PREFIX.pack(len(hbytes), plen), hbytes, *parts])
+    return _PREFIX.size + len(hbytes) + plen
+
+
 def send_frame(sock: socket.socket, header: dict, payload=b"") -> int:
     """Send one frame; returns the number of bytes put on the wire."""
-    hbytes = json.dumps(header, separators=(",", ":")).encode()
-    plen = payload.nbytes if isinstance(payload, memoryview) else len(payload)
-    sock.sendall(_PREFIX.pack(len(hbytes), plen) + hbytes)
-    if plen:
-        sock.sendall(payload)
-    return _PREFIX.size + len(hbytes) + plen
+    return send_frame_parts(sock, header, (payload,))
 
 
 def recv_frame(sock: socket.socket) -> tuple[dict, bytearray, int]:
@@ -106,32 +172,9 @@ def recv_frame(sock: socket.socket) -> tuple[dict, bytearray, int]:
     return header, payload, _PREFIX.size + hlen + plen
 
 
-def _dtype_from_str(name: str) -> np.dtype:
-    try:
-        return np.dtype(name)
-    except TypeError:
-        # jax extended dtypes (bfloat16, float8_*) register with ml_dtypes
-        import ml_dtypes
-
-        return np.dtype(getattr(ml_dtypes, name))
-
-
-def encode_array(arr: np.ndarray) -> tuple[dict, memoryview]:
-    """(meta, buffer): raw C-order bytes + {shape, dtype} — no pickling."""
-    arr = np.ascontiguousarray(arr)
-    meta = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
-    if not arr.nbytes:
-        return meta, memoryview(b"")
-    try:
-        return meta, arr.data.cast("B")  # zero-copy
-    except ValueError:
-        # extended dtypes (bfloat16, float8_*) refuse the buffer protocol
-        return meta, memoryview(arr.tobytes())
-
-
-def decode_array(meta: dict, payload: bytearray) -> np.ndarray:
-    dt = _dtype_from_str(meta["dtype"])
-    return np.frombuffer(payload, dtype=dt).reshape(tuple(meta["shape"]))
+# The array codec itself (encode_array/decode_array + the compressing
+# encode_block/decode_block) lives in ``storage/codec.py`` and is
+# re-exported above: net.py owns framing, codec.py owns payload bytes.
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +219,23 @@ class SocketTransport:
     connect/op timeout, which is what keeps the DMS's replica failover
     cheap.  ``alive()`` exposes the cache so routing can prefer live
     replicas up front.
+
+    Data-plane options (all default OFF — the plain transport is
+    byte-identical to the legacy wire format and never sends ``hello``):
+
+      * ``wire_codec`` — compress payload blocks on the wire with one of
+        ``codec.WIRE_CODECS`` ("zlib" lossless; "bf16"/"int8" lossy for
+        float blocks, lossless-zlib fallback otherwise).  Negotiated per
+        connection; an old server degrades the link to raw.
+      * ``shm`` — ``"off"`` | ``"auto"`` | ``"require"``: map the
+        server's shared-memory arena when co-located so fetch payloads
+        arrive by ``(offset, nbytes)`` reference instead of a TCP
+        stream.  ``auto`` silently falls back to socket payloads (remote
+        host, old server, no arena); ``require`` raises
+        :class:`TransportError` when any endpoint cannot negotiate it.
+      * ``zero_copy`` — shm fetches return read-only views directly into
+        the mapped arena (RDMA-window semantics: valid until the block
+        is dropped or overwritten server-side) instead of copying out.
     """
 
     def __init__(
@@ -187,10 +247,15 @@ class SocketTransport:
         scope: str | None = None,
         dead_backoff: float = 2.0,
         probe_timeout: float = 1.0,
+        wire_codec: str | None = None,
+        shm: str = "off",
+        zero_copy: bool = False,
     ) -> None:
         self.endpoints = [_parse_endpoint(e) for e in endpoints]
         if not self.endpoints:
             raise ValueError("SocketTransport needs at least one endpoint")
+        if shm not in ("off", "auto", "require"):
+            raise ValueError(f"shm must be 'off', 'auto' or 'require', got {shm!r}")
         self.scope = scope
         self.num_servers = len(self.endpoints)
         self.stats = TransportStats()
@@ -198,10 +263,16 @@ class SocketTransport:
         self.op_timeout = op_timeout
         self.dead_backoff = dead_backoff
         self.probe_timeout = probe_timeout
+        self.wire_codec = check_codec(wire_codec)
+        self.shm = shm
+        self.zero_copy = zero_copy
         self._conns: dict[tuple[str, int], socket.socket] = {}
         self._conn_locks: dict[tuple[str, int], threading.Lock] = {
             addr: threading.Lock() for addr in set(self.endpoints)
         }
+        # per-connection negotiation outcome: {"codec": str|None,
+        # "window": ShmWindow|None}; absent until the first dial
+        self._neg: dict[tuple[str, int], dict] = {}
         self._dead: dict[tuple[str, int], float] = {}  # addr -> retry-at (monotonic)
         self._probe_failed: set[tuple[str, int]] = set()  # probed dead this window
         self._closed = False
@@ -222,8 +293,49 @@ class SocketTransport:
             raise TransportError(f"cannot reach DMS server at {addr[0]}:{addr[1]}: {e}") from e
         sock.settimeout(self.op_timeout)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        if self.wire_codec or self.shm != "off":
+            try:
+                self._negotiate(addr, sock)
+            except (OSError, TransportError):
+                sock.close()
+                raise
         self._conns[addr] = sock
         return sock
+
+    def _negotiate(self, addr: tuple[str, int], sock: socket.socket) -> None:
+        """One ``hello`` round-trip on a fresh connection.
+
+        Establishes the wire codec and (when requested) maps the
+        server's shm arena.  An old server rejects the unknown op —
+        that degrades the link to the plain wire format rather than
+        failing it, so new clients keep working against old fleets.
+        """
+        self._close_window(addr)
+        hello = {"op": "hello", "shm": self.shm != "off"}
+        if self.wire_codec:
+            hello["codecs"] = [self.wire_codec]
+        wire = send_frame(sock, hello)
+        rheader, _, rwire = recv_frame(sock)
+        self._account("meta", wire + rwire)
+        neg = {"codec": None, "window": None}
+        if rheader.get("ok"):
+            if self.wire_codec and self.wire_codec in rheader.get("codecs", ()):
+                neg["codec"] = self.wire_codec
+            desc = rheader.get("shm")
+            if desc:
+                neg["window"] = ShmWindow.attach(desc)
+        if self.shm == "require" and neg["window"] is None:
+            raise TransportError(
+                f"shm='require' but server at {addr[0]}:{addr[1]} could not "
+                "negotiate a same-host arena (old server, remote host, or no "
+                "arena configured)"
+            )
+        self._neg[addr] = neg
+
+    def _close_window(self, addr: tuple[str, int]) -> None:
+        neg = self._neg.pop(addr, None)
+        if neg and neg.get("window") is not None:
+            neg["window"].close()
 
     def _drop_connection(self, addr: tuple[str, int]) -> None:
         sock = self._conns.pop(addr, None)
@@ -232,6 +344,9 @@ class SocketTransport:
                 sock.close()
             except OSError:
                 pass
+        # negotiation state is per-connection: a re-dial re-negotiates
+        # (the server may have restarted with a brand-new arena)
+        self._close_window(addr)
 
     # -- liveness cache -------------------------------------------------------------
     def alive(self, server: int) -> bool:
@@ -278,7 +393,9 @@ class SocketTransport:
         self._dead.pop(addr, None)
         self._probe_failed.discard(addr)
 
-    def _request(self, server: int, header: dict, payload=b"") -> tuple[dict, bytearray, int]:
+    def _request(
+        self, server: int, header: dict, payload=b"", *, encode_arr=None, data_plane=False
+    ) -> tuple[dict, bytearray, int]:
         addr = self.endpoints[server]
         t0 = time.perf_counter()
         with self._conn_locks[addr]:
@@ -289,6 +406,18 @@ class SocketTransport:
                 )
             self._check_liveness(server, addr, header.get("op"))
             sock = self._connection(addr)
+            # negotiation outcome is per-connection, so the request's
+            # data-plane fields can only be filled in once the dial (and
+            # hello) above has happened
+            neg = self._neg.get(addr)
+            if data_plane and neg is not None:
+                if neg["codec"]:
+                    header["codec"] = neg["codec"]
+                if neg["window"] is not None:
+                    header["shm"] = True
+            if encode_arr is not None:
+                meta, payload = encode_block(encode_arr, neg["codec"] if neg else None)
+                header["array"] = meta
             try:
                 wire = send_frame(sock, header, payload)
                 rheader, rpayload, rwire = recv_frame(sock)
@@ -336,31 +465,52 @@ class SocketTransport:
             return None
         return dataclasses.replace(key, namespace=key.namespace[len(prefix):])
 
-    def _account(self, op: str, nbytes: int) -> None:
+    def _account(self, op: str, nbytes: int, raw: int | None = None, shm_blocks: int = 0) -> None:
         with self._stats_lock:
             if op == "put":
                 self.stats.puts += 1
                 self.stats.bytes_put += nbytes
+                self.stats.bytes_put_raw += nbytes if raw is None else raw
             elif op == "get":
                 self.stats.gets += 1
                 self.stats.bytes_get += nbytes
+                self.stats.bytes_get_raw += nbytes if raw is None else raw
+                self.stats.shm_gets += shm_blocks
             else:
                 self.stats.meta_msgs += 1
                 self.stats.bytes_meta += nbytes
 
+    def _window(self, server: int) -> ShmWindow | None:
+        neg = self._neg.get(self.endpoints[server])
+        return neg["window"] if neg else None
+
+    def _read_shm(self, server: int, meta: dict) -> np.ndarray:
+        window = self._window(server)
+        if window is None:
+            # a reply can only carry an shm ref when this client asked
+            # for one on this connection — a missing window is a bug or
+            # a torn re-dial, not a protocol state
+            raise TransportError(
+                f"server {server} replied with an shm reference but no "
+                "arena window is mapped on this connection"
+            )
+        return window.read(int(meta["shm"][0]), meta, zero_copy=self.zero_copy)
+
     # -- Transport message API -----------------------------------------------------
     def store(self, server, key, block_coord, box, payload) -> None:
-        meta, buf = encode_array(np.asarray(payload))
+        arr = np.asarray(payload)
         header = {
             "op": "store",
             "sid": server,
             "key": _key_to_json(self._scoped(key)),
             "coord": list(block_coord),
             "bb": _bb_to_json(box),
-            "array": meta,
         }
-        _, _, wire = self._request(server, header, buf)
-        self._account("put", wire)
+        # the payload is encoded inside _request once the connection's
+        # negotiated codec is known (stores always ride the socket; the
+        # server places them into its arena for later shm fetches)
+        _, _, wire = self._request(server, header, encode_arr=arr)
+        self._account("put", wire, raw=arr.nbytes)
 
     def fetch(self, server, key, block_coord) -> np.ndarray:
         header = {
@@ -369,16 +519,25 @@ class SocketTransport:
             "key": _key_to_json(self._scoped(key)),
             "coord": list(block_coord),
         }
-        rheader, rpayload, wire = self._request(server, header)
-        self._account("get", wire)
-        return decode_array(rheader["array"], rpayload)
+        rheader, rpayload, wire = self._request(server, header, data_plane=True)
+        meta = rheader["array"]
+        if "shm" in meta:
+            arr = self._read_shm(server, meta)
+            self._account("get", wire, raw=arr.nbytes, shm_blocks=1)
+            return arr
+        arr = decode_block(meta, rpayload)
+        self._account("get", wire, raw=arr.nbytes)
+        return arr
 
     def fetch_many(self, server, requests) -> list[np.ndarray]:
         """Scatter-gather fetch: N blocks in ONE round-trip.
 
-        The response header carries per-block {shape, dtype} metadata and
-        the payload is the blocks' raw buffers concatenated in request
-        order, so the frame cost is one header + the bytes themselves.
+        The response header carries per-block {shape, dtype, off, len}
+        metadata; each block decodes straight out of the single receive
+        buffer at its stated offset (shm-resident blocks carry an
+        ``shm`` arena reference instead and skip the socket payload
+        entirely).  Legacy servers omit the offsets — the client falls
+        back to cumulative raw sizes in request order.
         """
         if not requests:
             return []
@@ -390,15 +549,25 @@ class SocketTransport:
                 for key, coord in requests
             ],
         }
-        rheader, rpayload, wire = self._request(server, header)
-        self._account("get", wire)
+        rheader, rpayload, wire = self._request(server, header, data_plane=True)
         out: list[np.ndarray] = []
         view = memoryview(rpayload)
-        off = 0
+        cursor = 0
+        shm_blocks = 0
         for meta in rheader["arrays"]:
-            n = int(np.prod(meta["shape"])) * _dtype_from_str(meta["dtype"]).itemsize
-            out.append(decode_array(meta, view[off : off + n]))
-            off += n
+            if "shm" in meta:
+                out.append(self._read_shm(server, meta))
+                shm_blocks += 1
+                continue
+            if "off" in meta:
+                off, n = int(meta["off"]), int(meta["len"])
+            else:  # legacy server: raw buffers back to back, no offsets
+                off, n = cursor, raw_nbytes(meta)
+                cursor = off + n
+            out.append(decode_block(meta, view[off : off + n]))
+        self._account(
+            "get", wire, raw=sum(a.nbytes for a in out), shm_blocks=shm_blocks
+        )
         return out
 
     def put_meta(self, server, key, block_coord, box, home) -> None:
@@ -515,6 +684,19 @@ class SocketTransport:
                     lock.release()
 
 
+class ShmTransport(SocketTransport):
+    """A :class:`SocketTransport` that requires the shared-memory data
+    plane: control frames on the socket, fetch payloads through the
+    server's mapped arena.  Construction fails fast (on first use of an
+    endpoint) with :class:`TransportError` when the fleet is not
+    co-located or predates arenas — use ``SocketTransport(shm="auto")``
+    for opportunistic zero-copy that degrades to the stream."""
+
+    def __init__(self, endpoints: Sequence, **kw) -> None:
+        kw.setdefault("shm", "require")
+        super().__init__(endpoints, **kw)
+
+
 # ---------------------------------------------------------------------------
 # server: _Server shards behind a threaded socket loop
 # ---------------------------------------------------------------------------
@@ -522,38 +704,117 @@ class _NetServer(socketserver.ThreadingTCPServer):
     allow_reuse_address = True
     daemon_threads = True
 
-    def __init__(self, address: tuple[str, int], sids: Iterable[int]) -> None:
+    def __init__(
+        self,
+        address: tuple[str, int],
+        sids: Iterable[int],
+        *,
+        arena_bytes: int = DEFAULT_ARENA_BYTES,
+        at_rest: bool = False,
+    ) -> None:
         self.shards: dict[int, _Server] = {int(s): _Server(int(s)) for s in sids}
+        self.arena_bytes = int(arena_bytes)
+        self.at_rest = bool(at_rest)
+        self.arena: ShmArena | None = None
+        self._arena_lock = threading.Lock()
+        # REPRO_NET_COMPAT=1 makes this process behave like a pre-codec
+        # server (hello is an unknown op, every payload raw) — the
+        # mixed-fleet compatibility tests run against the real code path
+        # new clients hit on old fleets, not a mock
+        self.compat = os.environ.get("REPRO_NET_COMPAT", "") not in ("", "0")
         super().__init__(address, _FrameHandler)
+
+    def _ensure_arena(self) -> ShmArena | None:
+        """Create the arena on the first shm-negotiating hello — plain
+        fleets never allocate /dev/shm capacity."""
+        if self.arena_bytes <= 0:
+            return None
+        with self._arena_lock:
+            if self.arena is None:
+                self.arena = ShmArena(self.arena_bytes)
+                for shard in self.shards.values():
+                    shard.arena = self.arena
+            return self.arena
+
+    def _encode_for_reply(self, shard: _Server, key, coord, header: dict):
+        """(meta, buf) for one fetched block, honouring the request's
+        negotiated data plane: shm reference > at-rest passthrough >
+        wire codec > raw."""
+        if header.get("shm"):
+            ref = shard.arena_ref(key, coord)
+            if ref is not None:
+                meta, off, nbytes = ref
+                return dict(meta, shm=[off, nbytes]), b""
+        codec = header.get("codec")
+        block = shard.fetch_resident(key, coord)
+        if isinstance(block, Encoded):
+            if codec:  # codec-capable client: ship the resident blob as-is
+                return dict(block.meta), memoryview(block.data)
+            block = block.decode()
+        return encode_block(block, codec)
 
     def dispatch(self, header: dict, payload: bytearray) -> tuple[dict, object]:
         op = header.get("op")
         if op == "ping":
             return {"ok": True, "sids": sorted(self.shards)}, b""
+        if op == "hello":
+            if self.compat:
+                raise ValueError(f"unknown op {op!r}")
+            resp: dict = {
+                "ok": True,
+                "sids": sorted(self.shards),
+                "codecs": [c for c in WIRE_CODECS if c != "raw"],
+            }
+            if header.get("shm"):
+                arena = self._ensure_arena()
+                if arena is not None:
+                    resp["shm"] = arena.describe()
+            return resp, b""
         sid = header.get("sid")
         if sid not in self.shards:
             raise ValueError(f"shard {sid} not hosted here (have {sorted(self.shards)})")
         shard = self.shards[sid]
         if op == "store":
-            shard.store(
-                _key_from_json(header["key"]),
-                tuple(header["coord"]),
-                _bb_from_json(header["bb"]),
-                decode_array(header["array"], payload),
-                owned=True,  # the frame buffer is private: no second copy
-            )
+            meta = header["array"]
+            key = _key_from_json(header["key"])
+            coord = tuple(header["coord"])
+            box = _bb_from_json(header["bb"])
+            if self.at_rest and is_lossless(meta) and meta.get("codec"):
+                # keep the losslessly-compressed blob resident: decode is
+                # deferred to fetch time (plain clients) or skipped
+                # entirely (codec clients get the blob passed through)
+                shard.store(key, coord, box, Encoded(meta, bytes(payload)))
+            else:
+                shard.store(
+                    key,
+                    coord,
+                    box,
+                    decode_block(meta, payload),
+                    owned=True,  # the frame buffer is private: no second copy
+                )
             return {"ok": True}, b""
         if op == "fetch":
-            block = shard.fetch(_key_from_json(header["key"]), tuple(header["coord"]))
-            meta, buf = encode_array(block)
+            meta, buf = self._encode_for_reply(
+                shard, _key_from_json(header["key"]), tuple(header["coord"]), header
+            )
             return {"ok": True, "array": meta}, buf
         if op == "fetch_many":
+            # scatter-IO: per-block buffers with explicit offsets in the
+            # header; the send path hands the list straight to sendmsg —
+            # payloads are never concatenated server-side
             metas, bufs = [], []
+            off = 0
             for kj, coord in header["reqs"]:
-                meta, buf = encode_array(shard.fetch(_key_from_json(kj), tuple(coord)))
+                meta, buf = self._encode_for_reply(
+                    shard, _key_from_json(kj), tuple(coord), header
+                )
+                n = _nbytes(buf)
+                if "shm" not in meta:
+                    meta = dict(meta, off=off, len=n)
+                    off += n
+                    bufs.append(buf)
                 metas.append(meta)
-                bufs.append(buf)
-            return {"ok": True, "arrays": metas}, b"".join(bufs)
+            return {"ok": True, "arrays": metas}, bufs
         if op == "put_meta":
             shard.put_meta(
                 _key_from_json(header["key"]),
@@ -612,18 +873,41 @@ class _FrameHandler(socketserver.BaseRequestHandler):
                     b"",
                 )
             try:
-                send_frame(sock, rheader, rpayload)
+                if isinstance(rpayload, list):
+                    send_frame_parts(sock, rheader, rpayload)
+                else:
+                    send_frame(sock, rheader, rpayload)
             except OSError:
                 return
 
 
-def serve(host: str = "127.0.0.1", port: int = 0, sids: Iterable[int] = (0,)) -> None:
+def serve(
+    host: str = "127.0.0.1",
+    port: int = 0,
+    sids: Iterable[int] = (0,),
+    *,
+    arena_bytes: int = DEFAULT_ARENA_BYTES,
+    at_rest: bool = False,
+) -> None:
     """Run a shard host in the foreground (the ``python -m`` entry).
 
     Prints ``REPRO_NET LISTENING <port>`` once bound so a parent process
     (or an operator's script) can discover the ephemeral port.
     """
-    server = _NetServer((host, port), sids)
+    import signal
+
+    server = _NetServer((host, port), sids, arena_bytes=arena_bytes, at_rest=at_rest)
+
+    def _sigterm(_sig, _frm):
+        # ServerProcess.stop() sends SIGTERM; without a handler the
+        # finally below never runs and the shm arena is left for the
+        # parent's resource tracker to reclaim (noisily)
+        raise SystemExit(0)
+
+    try:
+        signal.signal(signal.SIGTERM, _sigterm)
+    except ValueError:
+        pass  # not the main thread (embedded use)
     print(f"REPRO_NET LISTENING {server.server_address[1]}", flush=True)
     try:
         server.serve_forever()
@@ -631,6 +915,8 @@ def serve(host: str = "127.0.0.1", port: int = 0, sids: Iterable[int] = (0,)) ->
         pass
     finally:
         server.server_close()
+        if server.arena is not None:
+            server.arena.close(unlink=True)
 
 
 # ---------------------------------------------------------------------------
@@ -651,11 +937,17 @@ class ServerProcess:
         host: str = "127.0.0.1",
         port: int = 0,
         startup_timeout: float = 60.0,
+        arena_bytes: int = DEFAULT_ARENA_BYTES,
+        at_rest: bool = False,
+        extra_env: dict[str, str] | None = None,
     ) -> None:
         self.sids = [int(s) for s in sids]
         self.host = host
         self.port = int(port)
         self.startup_timeout = startup_timeout
+        self.arena_bytes = int(arena_bytes)
+        self.at_rest = bool(at_rest)
+        self.extra_env = dict(extra_env) if extra_env else {}
         self.proc: subprocess.Popen | None = None
 
     @property
@@ -666,6 +958,7 @@ class ServerProcess:
         if self.proc is not None:
             raise RuntimeError("ServerProcess already started")
         env = os.environ.copy()
+        env.update(self.extra_env)
         env["PYTHONPATH"] = _src_root() + (
             os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
         )
@@ -680,7 +973,11 @@ class ServerProcess:
             str(self.port),
             "--sids",
             ",".join(map(str, self.sids)),
+            "--arena-bytes",
+            str(self.arena_bytes),
         ]
+        if self.at_rest:
+            cmd.append("--at-rest")
         self.proc = subprocess.Popen(
             cmd,
             stdout=subprocess.PIPE,
@@ -792,13 +1089,19 @@ def spawn_servers(
     processes: int | None = None,
     host: str = "127.0.0.1",
     startup_timeout: float = 60.0,
+    arena_bytes: int = DEFAULT_ARENA_BYTES,
+    at_rest: bool = False,
+    extra_env: dict[str, str] | None = None,
 ) -> ServerGroup:
     """Start ``num_servers`` shards spread over ``processes`` hosts.
 
     Defaults to one process per shard (the fully distributed shape);
     ``processes=M`` packs shards contiguously onto M processes, matching
     a deployment where each node runs one server daemon with several
-    shards.
+    shards.  Each process gets an ``arena_bytes`` shared-memory budget
+    (allocated lazily on the first shm-negotiating client; 0 disables);
+    ``at_rest=True`` keeps losslessly-compressed puts resident in
+    compressed form.
     """
     num_servers = int(num_servers)
     if num_servers < 1:
@@ -812,7 +1115,14 @@ def spawn_servers(
             sids = list(range(p * per, min((p + 1) * per, num_servers)))
             if not sids:
                 break
-            sp = ServerProcess(sids, host=host, startup_timeout=startup_timeout).start()
+            sp = ServerProcess(
+                sids,
+                host=host,
+                startup_timeout=startup_timeout,
+                arena_bytes=arena_bytes,
+                at_rest=at_rest,
+                extra_env=extra_env,
+            ).start()
             procs.append(sp)
             for sid in sids:
                 endpoints[sid] = sp.address
@@ -835,9 +1145,21 @@ def main(argv: Sequence[str] | None = None) -> None:
     ap.add_argument(
         "--sids", default="0", help="comma-separated global shard ids hosted here"
     )
+    ap.add_argument(
+        "--arena-bytes",
+        type=int,
+        default=DEFAULT_ARENA_BYTES,
+        help="shared-memory arena budget for same-host zero-copy fetches "
+        "(allocated lazily on first use; 0 disables)",
+    )
+    ap.add_argument(
+        "--at-rest",
+        action="store_true",
+        help="keep losslessly-compressed puts resident in compressed form",
+    )
     args = ap.parse_args(argv)
     sids = [int(s) for s in args.sids.split(",") if s.strip() != ""]
-    serve(args.host, args.port, sids)
+    serve(args.host, args.port, sids, arena_bytes=args.arena_bytes, at_rest=args.at_rest)
 
 
 if __name__ == "__main__":

@@ -20,7 +20,6 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
-from typing import Any
 
 import numpy as np
 

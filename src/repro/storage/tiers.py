@@ -821,6 +821,7 @@ class TieredStore:
         dms_transport=None,
         replication: int = 1,
         repair_interval: float | None = None,
+        wire_codec: str | None = None,
     ) -> "TieredStore":
         """The paper-shaped stack: bounded RAM -> DISK (ADIOS-style) -> DMS.
 
@@ -839,10 +840,26 @@ class TieredStore:
         tier's background anti-entropy sweep: a crashed server that
         rejoins empty is re-filled until every block has R live copies
         again; ``close()`` stops the sweep.
+
+        ``wire_codec`` compresses the DMS tier's payloads on the wire
+        (one of ``repro.storage.codec.WIRE_CODECS``; negotiated per
+        connection, old servers degrade the link to raw).  It requires a
+        socket ``dms_transport`` — in-process shards move no wire bytes,
+        so a codec there would only burn CPU — and must be set before
+        the transport's first use (negotiation happens at dial time).
         """
+        from repro.storage.codec import check_codec
         from repro.storage.disk import DiskStorage
         from repro.storage.dms import DistributedMemoryStorage
 
+        if wire_codec is not None:
+            if dms_transport is None:
+                raise ValueError(
+                    "wire_codec= needs a socket dms_transport (in-process "
+                    "shards move no wire bytes); pass a SocketTransport or "
+                    "ServerGroup().transport()"
+                )
+            dms_transport.wire_codec = check_codec(wire_codec)
         mem = MemoryTier(name="MEM")
         disk = DiskStorage(root, name=f"{name}-DISK", **(disk_kwargs or {}))
         dms = DistributedMemoryStorage(

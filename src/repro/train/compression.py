@@ -14,7 +14,6 @@ numerics on a multi-device host mesh.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -46,8 +45,6 @@ def compression_ratio(mode: str) -> float:
 def make_dp_allreduce(mesh: jax.sharding.Mesh, *, pod_mode: str = "bf16"):
     """Hierarchical gradient reduction: fp32 within-pod (ICI), compressed
     across pods (DCN).  Returns a shard_map'ed tree all-reduce."""
-    from jax.sharding import PartitionSpec as P
-
     axes = mesh.axis_names
     has_pod = "pod" in axes
 

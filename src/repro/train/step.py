@@ -10,7 +10,6 @@ Beyond-paper distributed-optimization features wired in here:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

@@ -1,5 +1,5 @@
 """I/O configuration auto-tuner (paper §5.3 future work)."""
-from repro.storage.autotune import IOConfig, autotune_io, default_space
+from repro.storage.autotune import autotune_io, default_space
 
 
 def test_space_is_reasonable():

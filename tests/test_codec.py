@@ -1,0 +1,279 @@
+"""Unit coverage for the data-plane building blocks: block codecs
+(`storage/codec.py`) and the shared-memory arena/window pair
+(`storage/shm.py`).  Everything here is single-process — the live-fleet
+integration (negotiation, mixed fleets, at-rest servers) lives in
+tests/test_net.py under the `net` marker."""
+import numpy as np
+import pytest
+
+from repro.storage.codec import (
+    WIRE_CODECS,
+    Encoded,
+    check_codec,
+    decode_array,
+    decode_block,
+    encode_array,
+    encode_block,
+    is_lossless,
+    raw_nbytes,
+)
+from repro.storage.shm import ShmArena, ShmWindow
+
+
+def _reregister(arena):
+    """ShmWindow.attach unregisters the segment from the caller's
+    resource tracker (correct cross-process, where the SERVER owns the
+    registration).  These unit tests attach in the creating process, so
+    re-register to keep the arena's unlink paired and the tracker
+    quiet."""
+    from multiprocessing import resource_tracker
+
+    try:
+        resource_tracker.register(arena._shm._name, "shared_memory")
+    except Exception:
+        pass
+
+
+def _bf16():
+    import ml_dtypes
+
+    return ml_dtypes.bfloat16
+
+
+def _arrays():
+    rng = np.random.default_rng(0)
+    return {
+        "f32": rng.random((16, 16)).astype(np.float32),
+        "f64": rng.standard_normal((8, 8)) * 100.0,
+        "f16": rng.random((8, 8)).astype(np.float16),
+        "bf16": np.arange(24, dtype=np.float32).astype(_bf16()).reshape(4, 6),
+        "u8_labels": np.repeat(rng.integers(0, 8, (4, 64)), 16, axis=0).astype(np.uint8),
+        "i64": rng.integers(-5, 5, (6, 7)).astype(np.int64),
+        "bool": rng.random((9, 9)) > 0.5,
+        "empty": np.zeros((0, 5), np.float32),
+        "noncontig": rng.random((8, 8, 8)).astype(np.float32)[:, ::2, :],
+    }
+
+
+# ---------------------------------------------------------------------------
+# codec round-trips
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("codec", list(WIRE_CODECS) + [None])
+@pytest.mark.parametrize("name", list(_arrays().keys()))
+def test_block_roundtrip_every_codec_every_dtype(codec, name):
+    """The full matrix: dtype and shape always survive; lossless codecs
+    (and lossy codecs on non-float payloads, which degrade to zlib) are
+    bit-exact; lossy codecs on f32/f64 land within quantization error."""
+    arr = _arrays()[name]
+    meta, buf = encode_block(arr, codec)
+    back = decode_block(meta, bytes(buf))
+    assert back.dtype == arr.dtype
+    assert back.shape == arr.shape
+    lossy = (
+        arr.size > 0
+        and codec in ("bf16", "int8")
+        and arr.dtype.type in (np.float32, np.float64)
+    )
+    if not lossy:
+        np.testing.assert_array_equal(back, arr)
+        assert is_lossless(meta)
+    elif codec == "bf16":
+        # bf16 keeps 8 mantissa bits: relative error <= 2^-8
+        np.testing.assert_allclose(
+            back.astype(np.float64), arr.astype(np.float64),
+            rtol=2 ** -7, atol=1e-12,
+        )
+    else:  # int8: absolute error <= scale/2 = absmax/254
+        atol = float(np.abs(arr).max()) / 127.0 + 1e-12
+        np.testing.assert_allclose(
+            back.astype(np.float64), arr.astype(np.float64), atol=atol
+        )
+
+
+def test_raw_codec_is_legacy_wire_format():
+    """codec=None and codec='raw' emit the untagged legacy frame —
+    byte-identical meta and payload to encode_array."""
+    arr = np.arange(64, dtype=np.float32).reshape(8, 8)
+    legacy_meta, legacy_buf = encode_array(arr)
+    for codec in (None, "raw"):
+        meta, buf = encode_block(arr, codec)
+        assert meta == legacy_meta  # no codec tag added
+        assert bytes(buf) == bytes(legacy_buf)
+    np.testing.assert_array_equal(decode_block(legacy_meta, bytes(legacy_buf)), arr)
+
+
+def test_zlib_tags_and_shrinks_compressible_blocks():
+    tile = np.zeros((64, 64), np.uint8)
+    tile[::8] = 3
+    meta, buf = encode_block(tile, "zlib")
+    assert meta["codec"] == "zlib"
+    assert buf.nbytes < tile.nbytes // 3
+    np.testing.assert_array_equal(decode_block(meta, bytes(buf)), tile)
+
+
+def test_zlib_incompressible_falls_back_to_untagged_raw():
+    """Random bytes don't compress: the encoder must emit the raw frame
+    (no tag, no size penalty) instead of a bigger zlib blob."""
+    noise = np.random.default_rng(1).integers(0, 256, 4096).astype(np.uint8)
+    meta, buf = encode_block(noise, "zlib")
+    assert "codec" not in meta
+    assert buf.nbytes == noise.nbytes
+    np.testing.assert_array_equal(decode_block(meta, bytes(buf)), noise)
+
+
+def test_empty_blocks_always_raw():
+    for codec in WIRE_CODECS:
+        meta, buf = encode_block(np.zeros((0, 3), np.float64), codec)
+        assert "codec" not in meta and buf.nbytes == 0
+
+
+def test_lossy_modes_never_touch_discrete_dtypes():
+    """Labels/masks/ints under bf16/int8 degrade to lossless zlib (or
+    raw) — never quantized."""
+    labels = np.repeat(np.arange(8, dtype=np.uint8), 512).reshape(64, 64)
+    for codec in ("bf16", "int8"):
+        meta, buf = encode_block(labels, codec)
+        assert meta.get("codec") in (None, "zlib")
+        np.testing.assert_array_equal(decode_block(meta, bytes(buf)), labels)
+
+
+def test_int8_all_zeros_block_decodes_exact():
+    """absmax=0 must not divide by zero; zeros round-trip exactly."""
+    z = np.zeros((16, 16), np.float32)
+    meta, buf = encode_block(z, "int8")
+    assert meta["codec"] == "int8" and buf.nbytes == z.size
+    np.testing.assert_array_equal(decode_block(meta, bytes(buf)), z)
+
+
+def test_bf16_halves_wire_bytes_and_preserves_dtype():
+    arr = np.random.default_rng(2).standard_normal((32, 32)).astype(np.float32)
+    meta, buf = encode_block(arr, "bf16")
+    assert meta["codec"] == "bf16"
+    assert buf.nbytes == arr.nbytes // 2
+    assert not is_lossless(meta)
+    back = decode_block(meta, bytes(buf))
+    assert back.dtype == np.float32
+
+
+def test_decode_block_rejects_unknown_tag():
+    meta, buf = encode_array(np.ones(4, np.float32))
+    with pytest.raises(ValueError, match="unknown codec"):
+        decode_block(dict(meta, codec="lzma"), bytes(buf))
+
+
+def test_check_codec_normalizes_and_validates():
+    assert check_codec(None) is None
+    assert check_codec("raw") is None
+    assert check_codec("zlib") == "zlib"
+    assert check_codec("bf16") == "bf16"
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        check_codec("gzip")
+
+
+def test_raw_nbytes_matches_decoded_size():
+    for arr in _arrays().values():
+        meta, _ = encode_array(arr)
+        assert raw_nbytes(meta) == np.ascontiguousarray(arr).nbytes
+
+
+def test_encoded_at_rest_block_accounting_and_decode():
+    tile = np.repeat(np.arange(16, dtype=np.uint8), 1024).reshape(128, 128)
+    meta, buf = encode_block(tile, "zlib")
+    assert is_lossless(meta)
+    enc = Encoded(dict(meta), bytes(buf))
+    assert enc.nbytes == len(bytes(buf)) < tile.nbytes  # resident size
+    assert enc.raw_nbytes == tile.nbytes
+    np.testing.assert_array_equal(enc.decode(), tile)
+
+
+def test_legacy_meta_without_codec_tag_decodes_as_raw():
+    """Frames from an old peer (no codec key at all) decode unchanged —
+    the mixed-fleet invariant at the codec layer."""
+    arr = np.arange(12, dtype=np.int32).reshape(3, 4)
+    meta = {"shape": [3, 4], "dtype": "int32"}  # exactly what old peers send
+    assert is_lossless(meta)
+    np.testing.assert_array_equal(
+        decode_block(meta, arr.tobytes()), arr
+    )
+    np.testing.assert_array_equal(decode_array(meta, arr.tobytes()), arr)
+
+
+# ---------------------------------------------------------------------------
+# shm arena + window
+# ---------------------------------------------------------------------------
+def test_arena_place_locate_window_read_roundtrip():
+    arena = ShmArena(1 << 16)
+    try:
+        arr = np.random.default_rng(3).random((32, 32)).astype(np.float32)
+        view = arena.place("h1", arr)
+        assert view is not None and not view.flags.writeable
+        np.testing.assert_array_equal(view, arr)
+        off, nbytes = arena.locate("h1")
+        assert nbytes == arr.nbytes
+        assert arena.used_bytes == arr.nbytes
+
+        win = ShmWindow.attach(arena.describe())
+        _reregister(arena)
+        assert win is not None
+        meta = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+        copied = win.read(off, meta)
+        np.testing.assert_array_equal(copied, arr)
+        copied[0, 0] = -1.0  # private copy: arena unaffected
+        zc = win.read(off, meta, zero_copy=True)
+        np.testing.assert_array_equal(zc, arr)
+        assert not zc.flags.writeable
+        del zc
+        win.close()
+    finally:
+        arena.close()
+
+
+def test_arena_replace_release_and_pressure_reclaim():
+    """A handle re-place frees the old slot; released slots sit in
+    quarantine but are force-reclaimed under allocation pressure, with
+    neighbour coalescing making the full capacity reusable as one
+    block."""
+    arena = ShmArena(4096)
+    try:
+        blocks = {f"b{i}": np.full(1024, i, np.uint8) for i in range(4)}
+        for h, a in blocks.items():
+            assert arena.place(h, a) is not None
+        assert arena.used_bytes == 4096
+        # full: a fifth block has nowhere to go
+        assert arena.place("b4", np.ones(1024, np.uint8)) is None
+        # replacing an existing handle succeeds (its own slot frees)
+        assert arena.place("b0", np.full(1024, 9, np.uint8)) is not None
+        # release everything, then place one arena-sized block: only
+        # works if quarantine is drained early AND the slots coalesce
+        for h in blocks:
+            arena.release(h)
+        assert arena.used_bytes == 0
+        big = np.arange(4096, dtype=np.uint8)
+        view = arena.place("big", big)
+        assert view is not None
+        np.testing.assert_array_equal(view, big)
+    finally:
+        arena.close()
+
+
+def test_arena_rejects_oversized_and_empty_blocks():
+    arena = ShmArena(1024)
+    try:
+        assert arena.place("big", np.zeros(4096, np.uint8)) is None
+        assert arena.place("empty", np.zeros(0, np.float32)) is None
+        assert arena.locate("big") is None
+    finally:
+        arena.close()
+
+
+def test_window_attach_rejects_wrong_token_and_missing_segment():
+    arena = ShmArena(1 << 12)
+    try:
+        desc = arena.describe()
+        assert set(desc) == {"name", "size", "token"}
+        bad = dict(desc, token="00" * 16)
+        assert ShmWindow.attach(bad) is None  # co-location disproved
+        _reregister(arena)
+    finally:
+        arena.close()
+    assert ShmWindow.attach({"name": "repro_no_such_seg", "token": "00"}) is None

@@ -4,7 +4,6 @@ platform; the quantization math is also validated in-process."""
 import subprocess
 import sys
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.train.compression import compression_ratio

@@ -1,7 +1,6 @@
 """Multiplicity-aware HLO analyzer: scan trip counts, slice accounting."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis import hlo as H

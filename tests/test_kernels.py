@@ -1,6 +1,5 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
 swept over shapes/dtypes, plus hypothesis property tests on invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,17 +1,19 @@
 """Multi-host DMS transport: wire codec, Transport conformance, live
-ServerProcess round-trips, R-way replication + failover chaos, tiered
-staging over sockets, WSI on sockets."""
+ServerProcess round-trips, shm zero-copy data plane, R-way replication +
+failover chaos, tiered staging over sockets, WSI on sockets."""
+import os
 import threading
 import time
 
 import numpy as np
 import pytest
 
-from repro.core import BoundingBox, ElementType, RegionKey, StorageRegistry
+from repro.core import BoundingBox, ElementType, RegionKey
 from repro.storage import (
     DistributedMemoryStorage,
     InProcTransport,
     MemoryTier,
+    ShmTransport,
     SocketTransport,
     Tier,
     TieredStore,
@@ -21,6 +23,14 @@ from repro.storage import (
     spawn_servers,
 )
 from repro.storage.net import ServerProcess, decode_array, encode_array
+
+# every test here spawns (or attaches to) real server processes — the
+# fast unit CI leg deselects the whole module via `-m "not net"`
+pytestmark = pytest.mark.net
+
+# nightly chaos runs scale the kill/restart/hammer loops up without
+# code changes (see .github/workflows/ci.yml chaos-nightly)
+CHAOS_ITERS = max(1, int(os.environ.get("REPRO_CHAOS_ITERS", "1")))
 
 DOM = BoundingBox((0, 0), (64, 64))
 
@@ -40,13 +50,16 @@ def group():
     g.close()
 
 
-@pytest.fixture(params=["inproc", "socket"])
+@pytest.fixture(params=["inproc", "socket", "shm"])
 def transport(request, group):
     if request.param == "inproc":
         tr = InProcTransport(4)
         yield tr
     else:
-        tr = group.transport()
+        # "shm" runs the identical conformance suite over the negotiated
+        # shared-memory data plane (fetches map the server arena instead
+        # of riding the socket payload)
+        tr = group.transport() if request.param == "socket" else group.transport(shm="require")
         # module-scoped servers: isolate tests by dropping our keys
         yield tr
         for sid in range(tr.num_servers):
@@ -130,11 +143,14 @@ def test_transport_protocol_conformance(transport):
     # a failed put's rollback consults before dropping anything)
     assert transport.put_meta_batch(0, [(key, (3, 4), box, 1)]) == [(3, 4)]
 
-    # byte accounting is real on both transports
+    # byte accounting is real on every transport: the *_raw fields count
+    # decoded array bytes regardless of data plane (shm fetches and
+    # codec'd frames move fewer wire bytes, never fewer raw bytes)
     assert transport.stats.puts == 4
     assert transport.stats.gets >= 4
-    assert transport.stats.bytes_put >= 4 * payload.nbytes
-    assert transport.stats.bytes_get >= 4 * payload.nbytes
+    assert transport.stats.bytes_put_raw >= 4 * payload.nbytes
+    assert transport.stats.bytes_get_raw >= 4 * payload.nbytes
+    assert transport.stats.bytes_put > 0 and transport.stats.bytes_get > 0
     assert transport.stats.meta_msgs >= 3
     assert transport.payload_bytes(0) >= payload.nbytes
 
@@ -167,8 +183,9 @@ def test_fetch_many_conformance(transport):
         assert back.dtype == want.dtype and back.shape == want.shape
         np.testing.assert_array_equal(back, want)
     # one round-trip for the whole gather, every payload byte accounted
+    # (raw bytes: over the shm plane the wire only carries block refs)
     assert transport.stats.gets == 1
-    assert transport.stats.bytes_get >= sum(b.nbytes for b in blocks)
+    assert transport.stats.bytes_get_raw >= sum(b.nbytes for b in blocks)
     # empty request list short-circuits (no wire traffic)
     transport.reset()
     assert transport.fetch_many(1, []) == []
@@ -392,7 +409,7 @@ def test_concurrent_put_get_hammer(group):
     def worker(wid: int):
         try:
             key = _key(f"hammer{wid}")
-            for rep in range(3):
+            for rep in range(3 * CHAOS_ITERS):
                 for i, bb in enumerate(tiles):
                     dms.put(key.at(i), bb, payloads[i])
                 for i, bb in enumerate(tiles):
@@ -626,9 +643,10 @@ def test_chaos_replicated_reads_survive_server_kills():
 
         # kill a non-zero host: its blocks regroup onto ring neighbors
         fleet.procs[2].kill()
-        for k, a in zip(keys, arrays):
-            for roi in rois:
-                np.testing.assert_array_equal(dms.get(k, roi), a[roi.slices()])
+        for _ in range(CHAOS_ITERS):
+            for k, a in zip(keys, arrays):
+                for roi in rois:
+                    np.testing.assert_array_equal(dms.get(k, roi), a[roi.slices()])
         assert dms.stats.failover_fetches > 0
         # the dead host was discovered either by a fetch error or by a
         # directory lookup that failed over (both arm the liveness cache)
@@ -654,9 +672,10 @@ def test_chaos_replicated_reads_survive_server_kills():
         # neighbors, so every block still has one live replica) — the
         # directory rotation must also route around it
         fleet.procs[0].kill()
-        for k, a in zip(keys, arrays):
-            for roi in rois:
-                np.testing.assert_array_equal(dms.get(k, roi), a[roi.slices()])
+        for _ in range(CHAOS_ITERS):
+            for k, a in zip(keys, arrays):
+                for roi in rois:
+                    np.testing.assert_array_equal(dms.get(k, roi), a[roi.slices()])
         found = dms.query("t", "chaos")  # tolerates the dead servers
         assert [k.timestamp for k, _ in found] == [0, 1]
 
@@ -785,7 +804,7 @@ def test_chaos_writes_survive_server_kill_and_repair_heals_rejoin():
         for i in range(3):
             step(i)
         fleet.procs[1].kill()  # mid-workload: half the replica pairs touch it
-        for i in range(3, 8):
+        for i in range(3, 3 + 5 * CHAOS_ITERS):
             step(i)
         assert dms.stats.put_failovers > 0  # writes re-homed, none failed
         # every post-kill placement avoids the dead server
@@ -817,7 +836,8 @@ def test_chaos_writes_survive_server_kill_and_repair_heals_rejoin():
                     assert tr.fetch(sid, k, bc) is not None
         assert dms.repair()["repaired"] == 0  # second sweep: nothing left
         # the workload (including reads of pre-kill data) continues green
-        for i in range(8, 10):
+        last = 3 + 5 * CHAOS_ITERS
+        for i in range(last, last + 2):
             step(i)
         dms.close()
     finally:
@@ -999,3 +1019,273 @@ def test_dms_partial_coverage_still_raises(group):
         assert (got == 1).all()
         dms.delete(_key("hole"))
         dms.close()
+
+
+# ---------------------------------------------------------------------------
+# shared-memory data plane: negotiation, zero-copy views, promotion,
+# exhaustion fallback
+# ---------------------------------------------------------------------------
+def test_shm_negotiation_moves_payloads_off_the_wire(group):
+    """A co-located client that negotiates shm fetches blocks out of the
+    server arena: stats count the fetch raw bytes in full while the wire
+    carries only the block ref (order-of-magnitude smaller)."""
+    tr = group.transport(shm="require")
+    key = _key("shmneg")
+    box = BoundingBox((0, 0), (64, 64))
+    payload = np.random.default_rng(21).random((64, 64)).astype(np.float32)
+    try:
+        tr.store(0, key, (0, 0), box, payload)
+        tr.reset()
+        got = tr.fetch(0, key, (0, 0))
+        np.testing.assert_array_equal(got, payload)
+        assert tr.stats.shm_gets == 1
+        assert tr.stats.bytes_get_raw >= payload.nbytes
+        assert tr.stats.bytes_get < payload.nbytes // 4  # ref, not payload
+        # default mode hands out private copies: scribbling is safe
+        got[0, 0] = -99.0
+        np.testing.assert_array_equal(tr.fetch(0, key, (0, 0)), payload)
+    finally:
+        tr.drop(0, key)
+        tr.close()
+
+
+def test_shm_zero_copy_views_are_read_only(group):
+    """zero_copy=True maps the arena block directly: the view is
+    read-only (the store stays uncorruptible) and still bit-exact."""
+    tr = group.transport(shm="require", zero_copy=True)
+    key = _key("shmzc")
+    box = BoundingBox((0, 0), (64, 64))
+    payload = np.random.default_rng(22).random((64, 64)).astype(np.float32)
+    try:
+        tr.store(1, key, (0, 0), box, payload)
+        got = tr.fetch(1, key, (0, 0))
+        np.testing.assert_array_equal(got, payload)
+        with pytest.raises(ValueError):
+            got[0, 0] = 1.0
+        # scatter-gather rides the same plane
+        tr.store(1, key, (1, 0), box, 2 * payload)
+        many = tr.fetch_many(1, [(key, (0, 0)), (key, (1, 0))])
+        np.testing.assert_array_equal(many[0], payload)
+        np.testing.assert_array_equal(many[1], 2 * payload)
+        assert tr.stats.shm_gets >= 3
+    finally:
+        tr.drop(1, key)
+        tr.close()
+
+
+def test_shm_promotion_on_fetch_from_plain_store(group):
+    """Blocks stored by a plain client are promoted into the arena when
+    an shm client fetches them — the data plane is per-reader, not
+    per-writer."""
+    plain = group.transport()
+    shm = group.transport(shm="require")
+    key = _key("promote")
+    box = BoundingBox((0, 0), (32, 32))
+    payload = np.random.default_rng(23).random((32, 32)).astype(np.float32)
+    try:
+        plain.store(2, key, (0, 0), box, payload)
+        got = shm.fetch(2, key, (0, 0))
+        np.testing.assert_array_equal(got, payload)
+        assert shm.stats.shm_gets == 1
+    finally:
+        plain.drop(2, key)
+        plain.close()
+        shm.close()
+
+
+def test_shm_arena_exhaustion_falls_back_to_socket():
+    """A block that does not fit the arena still serves bit-exact over
+    the socket payload path — shm is an optimization, never a capacity
+    limit."""
+    proc = ServerProcess([0], arena_bytes=1 << 20).start()  # 1 MB arena
+    try:
+        tr = ShmTransport([proc.address])
+        box = BoundingBox((0, 0), (1024, 1024))
+        big = np.random.default_rng(24).random((1024, 1024)).astype(np.float32)  # 4 MB
+        small = np.ones((64, 64), np.float32)  # 16 KB: fits
+        tr.store(0, _key("big"), (0, 0), box, big)
+        tr.store(0, _key("small"), (0, 0), BoundingBox((0, 0), (64, 64)), small)
+        np.testing.assert_array_equal(tr.fetch(0, _key("big"), (0, 0)), big)
+        np.testing.assert_array_equal(tr.fetch(0, _key("small"), (0, 0)), small)
+        assert tr.stats.shm_gets >= 1  # the small block rode the arena
+        tr.close()
+    finally:
+        proc.stop()
+
+
+def test_shm_require_fails_against_compat_server():
+    """shm='require' against a server that cannot negotiate (pre-codec
+    wire protocol) surfaces as TransportError, not a silent downgrade."""
+    proc = ServerProcess([0], extra_env={"REPRO_NET_COMPAT": "1"}).start()
+    try:
+        tr = ShmTransport([proc.address], connect_timeout=5.0, op_timeout=10.0)
+        with pytest.raises(TransportError):
+            tr.ping(0)
+        tr.close()
+    finally:
+        proc.stop()
+
+
+def test_dms_bit_exact_over_shm_transport(group):
+    """Full DMS put/get over the shm data plane matches the array."""
+    dms = DistributedMemoryStorage(
+        DOM, (16, 16), 4, transport=group.transport(shm="require")
+    )
+    arr = np.random.default_rng(25).random((64, 64)).astype(np.float32)
+    dms.put(_key("shmdms"), DOM, arr)
+    np.testing.assert_array_equal(dms.get(_key("shmdms"), DOM), arr)
+    roi = BoundingBox((5, 9), (61, 47))
+    np.testing.assert_array_equal(dms.get(_key("shmdms"), roi), arr[roi.slices()])
+    assert dms.transport.stats.shm_gets > 0
+    dms.delete(_key("shmdms"))
+    dms.close()
+
+
+# ---------------------------------------------------------------------------
+# wire codecs over live servers + mixed codec-vs-plain fleets
+# ---------------------------------------------------------------------------
+def _codec_arrays(rng):
+    import jax.numpy as jnp
+
+    return {
+        "f32": rng.random((32, 32)).astype(np.float32),
+        "f16": rng.random((16, 16)).astype(np.float16),
+        "bf16": np.asarray(jnp.arange(64, dtype=jnp.bfloat16).reshape(8, 8)),
+        "u8_labels": rng.integers(0, 8, (64, 64)).astype(np.uint8),
+        "empty": np.zeros((0, 5), np.float32),
+        "noncontig": rng.random((8, 8, 8)).astype(np.float64)[:, ::2, :],
+        "bool": rng.random((16, 16)) > 0.5,
+    }
+
+
+@pytest.mark.parametrize("codec", ["zlib", "bf16", "int8"])
+def test_wire_codec_roundtrip_over_socket(group, codec):
+    """Every codec round-trips every dtype over a live fleet: lossless
+    codecs bit-exact, lossy ones within tolerance on f32/f64 and
+    bit-exact on everything else (they degrade to zlib off-dtype)."""
+    tr = group.transport(wire_codec=codec)
+    box = BoundingBox((0, 0), (64, 64))
+    arrays = _codec_arrays(np.random.default_rng(26))
+    key = _key(f"codec_{codec}")
+    try:
+        for i, (name, arr) in enumerate(arrays.items()):
+            tr.store(0, key, (i, 0), box, arr)
+            got = tr.fetch(0, key, (i, 0))
+            assert got.dtype == arr.dtype, name
+            assert got.shape == arr.shape, name
+            lossy = (
+                arr.size > 0
+                and codec in ("bf16", "int8")
+                and arr.dtype in (np.float32, np.float64)
+            )
+            if lossy:
+                atol = 0.02 if codec == "bf16" else float(np.abs(arr).max()) / 127 + 1e-6
+                np.testing.assert_allclose(
+                    got.astype(np.float64), arr.astype(np.float64), atol=atol
+                )
+            else:
+                np.testing.assert_array_equal(got, arr)
+        # the whole matrix again through scatter-gather
+        many = tr.fetch_many(0, [(key, (i, 0)) for i in range(len(arrays))])
+        for got, arr in zip(many, arrays.values()):
+            assert got.dtype == arr.dtype and got.shape == arr.shape
+    finally:
+        tr.drop(0, key)
+        tr.close()
+
+
+def test_zlib_codec_reduces_wire_bytes_on_label_tiles(group):
+    """The acceptance claim at test scale: compressible uint8 label
+    tiles move >=30% fewer wire bytes than raw under the zlib codec,
+    bit-exact."""
+    tr = group.transport(wire_codec="zlib")
+    key = _key("labels")
+    box = BoundingBox((0, 0), (64, 64))
+    tile = np.kron(
+        np.random.default_rng(27).integers(0, 8, (8, 8)).astype(np.uint8),
+        np.ones((8, 8), np.uint8),
+    )
+    try:
+        tr.store(3, key, (0, 0), box, tile)
+        tr.reset()
+        got = tr.fetch(3, key, (0, 0))
+        np.testing.assert_array_equal(got, tile)
+        assert tr.stats.bytes_get_raw >= tile.nbytes
+        assert tr.stats.bytes_get < 0.7 * tr.stats.bytes_get_raw
+    finally:
+        tr.drop(3, key)
+        tr.close()
+
+
+def test_mixed_fleet_old_server_new_client_degrades_to_plain():
+    """A codec/shm client against a pre-codec server: the failed hello
+    downgrades the connection to the legacy wire format — round-trips
+    stay bit-exact, nothing is compressed."""
+    proc = ServerProcess([0], extra_env={"REPRO_NET_COMPAT": "1"}).start()
+    try:
+        tr = SocketTransport(
+            [proc.address], wire_codec="zlib", shm="auto",
+            connect_timeout=5.0, op_timeout=10.0,
+        )
+        box = BoundingBox((0, 0), (64, 64))
+        payload = np.random.default_rng(28).integers(0, 8, (64, 64)).astype(np.uint8)
+        tr.store(0, _key("compat"), (0, 0), box, payload)
+        np.testing.assert_array_equal(tr.fetch(0, _key("compat"), (0, 0)), payload)
+        assert tr.stats.shm_gets == 0
+        # no codec on the wire: wire bytes >= raw bytes both directions
+        assert tr.stats.bytes_put >= tr.stats.bytes_put_raw
+        assert tr.stats.bytes_get >= tr.stats.bytes_get_raw
+        many = tr.fetch_many(0, [(_key("compat"), (0, 0))])
+        np.testing.assert_array_equal(many[0], payload)
+        tr.close()
+    finally:
+        proc.stop()
+
+
+def test_mixed_fleet_new_server_old_client_stays_legacy():
+    """A plain client (no codec, no shm — i.e. yesterday's build) against
+    a new server: no hello is sent, frames are the legacy format, blocks
+    round-trip bit-exact — including blocks STORED by a codec client."""
+    proc = ServerProcess([0]).start()
+    try:
+        old = SocketTransport([proc.address])
+        new = SocketTransport([proc.address], wire_codec="zlib")
+        box = BoundingBox((0, 0), (64, 64))
+        payload = np.random.default_rng(29).integers(0, 8, (64, 64)).astype(np.uint8)
+        # codec client writes, plain client reads
+        new.store(0, _key("x"), (0, 0), box, payload)
+        np.testing.assert_array_equal(old.fetch(0, _key("x"), (0, 0)), payload)
+        # plain client writes, codec client reads
+        old.store(0, _key("y"), (0, 0), box, 2 * payload)
+        np.testing.assert_array_equal(new.fetch(0, _key("y"), (0, 0)), 2 * payload)
+        old.close()
+        new.close()
+    finally:
+        proc.stop()
+
+
+def test_at_rest_compression_keeps_blocks_small_and_readable():
+    """at_rest=True keeps losslessly-codec'd puts resident in compressed
+    form: shard payload bytes shrink, and a PLAIN client still reads the
+    block bit-exact (the server re-encodes per reader)."""
+    proc = ServerProcess([0], at_rest=True).start()
+    try:
+        zl = SocketTransport([proc.address], wire_codec="zlib")
+        box = BoundingBox((0, 0), (128, 128))
+        tile = np.kron(
+            np.random.default_rng(31).integers(0, 8, (16, 16)).astype(np.uint8),
+            np.ones((8, 8), np.uint8),
+        )
+        zl.store(0, _key("rest"), (0, 0), box, tile)
+        assert zl.payload_bytes(0) < tile.nbytes // 2  # resident compressed
+        np.testing.assert_array_equal(zl.fetch(0, _key("rest"), (0, 0)), tile)
+        plain = SocketTransport([proc.address])
+        np.testing.assert_array_equal(plain.fetch(0, _key("rest"), (0, 0)), tile)
+        # lossy-codec and plain puts stay raw-resident (lossy at rest
+        # would corrupt the only copy)
+        plain.store(0, _key("rawres"), (0, 0), box, tile)
+        assert plain.payload_bytes(0) >= tile.nbytes
+        zl.close()
+        plain.close()
+    finally:
+        proc.stop()

@@ -1,5 +1,4 @@
 """3-phase prefetch pipeline (paper S3.2.1)."""
-import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime import DevicePipeline, prefetch_to_device

@@ -4,10 +4,8 @@ import pytest
 
 from repro.core import (
     BoundingBox,
-    DataRegion,
     ElementType,
     RegionKey,
-    RegionKind,
     RegionTemplate,
     StorageRegistry,
 )

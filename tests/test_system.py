@@ -6,7 +6,6 @@
    resumes.
 """
 import numpy as np
-import pytest
 
 from repro.configs.wsi import WSIConfig
 from repro.core import BoundingBox, Intent, RegionTemplate, StorageRegistry

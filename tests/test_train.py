@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models import ModelConfig, registry, spec
+from repro.models import ModelConfig
 from repro.train import (
     Adafactor,
     AdamW,
