@@ -34,13 +34,22 @@ case "$SUITE" in unit|net|all) ;; *)
   echo "ci_smoke: unknown --suite '$SUITE' (want unit|net|all)" >&2; exit 2 ;;
 esac
 
+echo "== relint: concurrency & wire-protocol static analysis =="
+# Blocking, stdlib-only (tools/relint) — mirrors the dedicated CI job so
+# the local gate catches violations before push.
+python -m tools.relint src/repro
+
 echo "== tier-1: pytest (suite: $SUITE) =="
 # Fail fast (-x) over the selected suite: the former envdrift skip set is
 # empty (the jax API drifts were fixed with version-tolerant accessors).
+# The net/all legs run under the runtime lock-order witness
+# (tools/relint/witness.py via the autouse conftest fixture): every
+# threading.Lock/RLock is wrapped, and a test fails on an observed
+# acquisition-order cycle or a blocking call under a held lock.
 case "$SUITE" in
   unit) python -m pytest -x -q -m "not net" ;;
-  net)  python -m pytest -x -q -m net ;;
-  all)  python -m pytest -x -q ;;
+  net)  REPRO_LOCK_WITNESS=1 python -m pytest -x -q -m net ;;
+  all)  REPRO_LOCK_WITNESS=1 python -m pytest -x -q ;;
 esac
 
 if [ "$SUITE" = "unit" ]; then

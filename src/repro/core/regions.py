@@ -224,19 +224,25 @@ class DataRegion:
     # -- payload state --------------------------------------------------------
     @property
     def location(self) -> str:
-        return self._location
+        with self._lock:
+            return self._location
 
     def empty(self) -> bool:
-        return self._data is None
+        with self._lock:
+            return self._data is None
 
     @property
     def data(self) -> Any:
-        if self._data is None:
+        # Lock-free fast path: holding _lock across instantiate() would
+        # serialize every reader behind a storage fetch.  _data only
+        # transitions None -> payload here (instantiate is idempotent),
+        # so a stale None costs a redundant fetch, never a wrong answer.
+        if self._data is None:  # relint: allow(guarded-attribute) — see above
             if self.lazy and self.input_storage:
                 self.instantiate(STORAGE)
             else:
                 raise RuntimeError(f"data region {self.key} not materialized")
-        return self._data
+        return self._data  # relint: allow(guarded-attribute) — monotonic publication
 
     def set_data(self, array: Any) -> None:
         with self._lock:
@@ -265,8 +271,9 @@ class DataRegion:
         registry = registry or STORAGE
         if self.output_storage is None:
             raise RuntimeError(f"{self.key}: no output storage bound")
-        if self._data is None:
-            raise RuntimeError(f"{self.key}: nothing to write")
+        with self._lock:
+            if self._data is None:
+                raise RuntimeError(f"{self.key}: nothing to write")
         backend = registry.get(self.output_storage)
         arr = self.to_host()
         t0 = time.perf_counter()
@@ -300,28 +307,38 @@ class DataRegion:
 
     def ready(self) -> bool:
         """Non-blocking transfer-completion query (paper S3.3)."""
-        if self._location != "device":
-            return self._data is not None
+        # A readiness probe must stay non-blocking: taking _lock here
+        # would park it behind an in-flight to_device()'s device_put.
+        # CPython attribute loads are atomic; a stale answer is the
+        # accepted semantics of an asynchronous query.
+        if self._location != "device":  # relint: allow(guarded-attribute) — see above
+            return self._data is not None  # relint: allow(guarded-attribute) — see above
         try:
             import jax
 
             # jax arrays expose is_ready on the committed future
-            return bool(getattr(self._data, "is_ready", lambda: True)())
+            return bool(getattr(self._data, "is_ready", lambda: True)())  # relint: allow(guarded-attribute) — see above
         except Exception:
             return True
 
     def block_until_ready(self) -> None:
-        if self._location == "device":
+        # snapshot under the lock, then block OUTSIDE it: holding _lock
+        # across a device sync would stall every concurrent reader
+        with self._lock:
+            location, data = self._location, self._data
+        if location == "device":
             import jax
 
-            jax.block_until_ready(self._data)
+            jax.block_until_ready(data)
 
     # -- misc -------------------------------------------------------------
     @property
     def nbytes(self) -> int:
-        if self._data is None:
+        with self._lock:
+            data = self._data
+        if data is None:
             return int(np.prod(self.roi.shape)) * self.key.elem_type.to_dtype().itemsize
-        return int(getattr(self._data, "nbytes", 0))
+        return int(getattr(data, "nbytes", 0))
 
     def with_roi(self, roi: BoundingBox) -> "DataRegion":
         """Metadata-sharing view with a different ROI (partitioning, S3.4)."""
@@ -338,7 +355,8 @@ class DataRegion:
     def __repr__(self) -> str:
         return (
             f"DataRegion({self.key.qualified} t={self.key.timestamp} v={self.key.version} "
-            f"{self.kind.name} bb={self.bb} roi={self.roi} loc={self._location})"
+            f"{self.kind.name} bb={self.bb} roi={self.roi} "
+            f"loc={self._location})"  # relint: allow(guarded-attribute) — diagnostic snapshot; repr must not block
         )
 
 
@@ -476,9 +494,10 @@ class RegionTemplate:
 
     # -- partitioning (manager side, paper Fig. 8a) -------------------------------
     def partition(self, tile_shape: Iterable[int]) -> list[BoundingBox]:
-        if self.bb is None:
-            raise RuntimeError("empty region template has no domain to partition")
-        return list(self.bb.tiles(tuple(tile_shape)))
+        with self._lock:
+            if self.bb is None:
+                raise RuntimeError("empty region template has no domain to partition")
+            return list(self.bb.tiles(tuple(tile_shape)))
 
     # -- pack/unpack for Manager -> Worker shipping (paper S3.2) -------------------
     def pack(self) -> dict:
@@ -523,4 +542,7 @@ class RegionTemplate:
         return rt
 
     def __repr__(self) -> str:
-        return f"RegionTemplate({self.namespace}::{self.name} bb={self.bb} regions={self.num_regions()})"
+        return (
+            f"RegionTemplate({self.namespace}::{self.name} "
+            f"bb={self.bb} regions={self.num_regions()})"  # relint: allow(guarded-attribute) — diagnostic snapshot; repr must not block
+        )

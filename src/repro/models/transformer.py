@@ -244,10 +244,10 @@ def _hybrid_forward_nocache(params, x, cfg, positions):
     seg_bounds = _segments(n_swa, max(n_glob, 1))
     for gi, (lo, hi) in enumerate(seg_bounds):
         if n_glob and gi < n_glob:
-            gp = jax.tree_util.tree_map(lambda a: a[gi], params["global_layers"])
+            gp = jax.tree_util.tree_map(lambda a, gi=gi: a[gi], params["global_layers"])
             x, _, _ = _hybrid_layer(gp, x, cfg, positions, window=None)
         if hi > lo:
-            seg = jax.tree_util.tree_map(lambda a: a[lo:hi], params["layers"])
+            seg = jax.tree_util.tree_map(lambda a, lo=lo, hi=hi: a[lo:hi], params["layers"])
             x, _ = jax.lax.scan(swa_body, x, seg)
     return x
 
@@ -415,7 +415,7 @@ def _hybrid_prefill(params, x, cfg, positions, cache):
     swa_conv, swa_ssm = cache["swa_ssm"]["conv"], cache["swa_ssm"]["ssm"]
     for gi, (lo, hi) in enumerate(seg_bounds):
         if n_glob and gi < n_glob:
-            gp = jax.tree_util.tree_map(lambda a: a[gi], params["global_layers"])
+            gp = jax.tree_util.tree_map(lambda a, gi=gi: a[gi], params["global_layers"])
             gkv = (cache["global"]["k"][gi], cache["global"]["v"][gi])
             gssm = {
                 "conv": cache["global_ssm"]["conv"][gi],
@@ -434,7 +434,7 @@ def _hybrid_prefill(params, x, cfg, positions, cache):
         ring_slots = jnp.mod(jnp.arange(s - take, s), w)
         kv_hd = (b, cfg.num_kv_heads, s, cfg.resolved_head_dim)
         for li in range(lo, hi):
-            lp = jax.tree_util.tree_map(lambda a: a[li], params["layers"])
+            lp = jax.tree_util.tree_map(lambda a, li=li: a[li], params["layers"])
             gssm = {"conv": swa_conv[li], "ssm": swa_ssm[li]}
             # temp full-length cache so prefill also yields the k/v stream;
             # the trailing window lands in the ring cache for decode
@@ -575,7 +575,7 @@ def _hybrid_decode(params, x, cfg, positions, cache, pos):
     out_swa = jax.tree_util.tree_map(lambda a: a, swa_cache)
     for gi, (lo, hi) in enumerate(seg_bounds):
         if n_glob and gi < n_glob:
-            gp = jax.tree_util.tree_map(lambda a: a[gi], params["global_layers"])
+            gp = jax.tree_util.tree_map(lambda a, gi=gi: a[gi], params["global_layers"])
             gssm = L.SSMState(
                 conv=cache["global_ssm"]["conv"][gi], ssm=cache["global_ssm"]["ssm"][gi]
             )
@@ -593,8 +593,8 @@ def _hybrid_decode(params, x, cfg, positions, cache, pos):
                 new_cache["global_ssm"]["ssm"].at[gi].set(new_state.ssm)
             )
         if hi > lo:
-            seg_cache = jax.tree_util.tree_map(lambda a: a[lo:hi], swa_cache)
-            seg_params = jax.tree_util.tree_map(lambda a: a[lo:hi], params["layers"])
+            seg_cache = jax.tree_util.tree_map(lambda a, lo=lo, hi=hi: a[lo:hi], swa_cache)
+            seg_params = jax.tree_util.tree_map(lambda a, lo=lo, hi=hi: a[lo:hi], params["layers"])
             (x, new_slotpos), seg_out = jax.lax.scan(
                 swa_body, (x, new_slotpos), (seg_params, seg_cache)
             )

@@ -92,7 +92,7 @@ class DerivedCache:
         self.evictions = 0
         self.invalidations = 0
 
-    def _drop(self, ck: tuple) -> None:
+    def _drop_locked(self, ck: tuple) -> None:
         gen_arr = self._entries.pop(ck, None)
         if gen_arr is None:
             return
@@ -111,7 +111,7 @@ class DerivedCache:
                 return None
             gen, arr = entry
             if gen != current_gen:
-                self._drop(ck)  # stale: the region was rewritten
+                self._drop_locked(ck)  # stale: the region was rewritten
                 self.misses += 1
                 return None
             self._entries.move_to_end(ck)
@@ -122,13 +122,13 @@ class DerivedCache:
         if arr.nbytes > self.capacity_bytes:
             return  # would evict everything for one entry
         with self._lock:
-            self._drop(ck)
+            self._drop_locked(ck)
             self._entries[ck] = (gen, arr)
             self._by_key.setdefault(ck[0], set()).add(ck)
             self._bytes += arr.nbytes
             while self._bytes > self.capacity_bytes and self._entries:
                 victim = next(iter(self._entries))
-                self._drop(victim)
+                self._drop_locked(victim)
                 self.evictions += 1
 
     def invalidate(self, key: RegionKey) -> int:
@@ -136,7 +136,7 @@ class DerivedCache:
         with self._lock:
             cks = list(self._by_key.get(key, ()))
             for ck in cks:
-                self._drop(ck)
+                self._drop_locked(ck)
             self.invalidations += len(cks)
             return len(cks)
 

@@ -353,13 +353,16 @@ class RegionGateway:
     @property
     def engine(self):
         """The lazily-built :class:`~repro.serve.compute.ComputeEngine`."""
-        if self._engine is None:
+        # double-checked lazy init: _engine only ever transitions
+        # None -> engine (under _engine_lock), so the lock-free fast
+        # path can at worst take the slow path once more
+        if self._engine is None:  # relint: allow(guarded-attribute) — see above
             with self._engine_lock:
                 if self._engine is None:
                     from repro.serve.compute import ComputeEngine
 
                     self._engine = ComputeEngine(self.store, self.config)
-        return self._engine
+        return self._engine  # relint: allow(guarded-attribute) — monotonic once set
 
     def submit_compute(
         self,
@@ -569,18 +572,20 @@ class RegionGateway:
 
     def put(self, key: RegionKey, bb: BoundingBox, array: np.ndarray) -> None:
         self.store.put(key, bb, array)
-        if self._engine is not None:
+        engine = self._engine  # relint: allow(guarded-attribute) — monotonic None->engine; a racing first build has no derived products to invalidate
+        if engine is not None:
             # a write through the facade invalidates the key's derived
             # products (stores with generation() also catch direct puts)
-            self._engine.note_write(key)
+            engine.note_write(key)
 
     def query(self, namespace: str, name: str) -> list[tuple[RegionKey, BoundingBox]]:
         return self.store.query(namespace, name)
 
     def delete(self, key: RegionKey) -> None:
         self.store.delete(key)
-        if self._engine is not None:
-            self._engine.note_write(key)
+        engine = self._engine  # relint: allow(guarded-attribute) — monotonic None->engine; a racing first build has no derived products to invalidate
+        if engine is not None:
+            engine.note_write(key)
 
     # -- lifecycle ------------------------------------------------------------------
     def pause(self) -> None:
@@ -609,9 +614,10 @@ class RegionGateway:
         happening below it without reaching around the facade.
         """
         out: dict = {"gateway": self.stats.as_dict()}
-        if self._engine is not None:
+        engine = self._engine  # relint: allow(guarded-attribute) — monotonic None->engine; stats snapshots tolerate missing the engine being built right now
+        if engine is not None:
             # per-chain latency + egress savings and derived-cache health
-            out["compute"] = self._engine.as_dict()
+            out["compute"] = engine.as_dict()
         tier_stats = getattr(self.store, "tier_stats", None)
         if callable(tier_stats):
             out["tiers"] = {n: s.as_dict() for n, s in tier_stats().items()}
@@ -625,7 +631,9 @@ class RegionGateway:
             transport = getattr(backend, "transport", None)
             tstats = getattr(transport, "stats", None)
             if tstats is not None:
-                entry["transport"] = dataclasses.asdict(tstats)
+                # as_dict() snapshots every counter under the stats lock;
+                # asdict() here was the PR-7 torn-read bug class
+                entry["transport"] = tstats.as_dict()
             out.setdefault("dms", {})[getattr(backend, "name", "DMS")] = entry
         return out
 

@@ -142,6 +142,10 @@ class CheckpointManager:
             self._inflight = None
         self._raise_if_failed()
 
+    def close(self) -> None:
+        """Join any in-flight async save (surfacing its error, if any)."""
+        self.wait()
+
     def _raise_if_failed(self) -> None:
         with self._lock:
             if self._error is not None:

@@ -353,6 +353,18 @@ class DiskStorage:
             for g in groups:
                 g.drain()
 
+    def close(self) -> None:
+        """Drain buffers and retire the I/O workers for good (flush()
+        restarts them so the store stays usable; close() does not)."""
+        if self.io_mode == "separated":
+            workers, self._workers = self._workers, []
+            for w in workers:
+                w.q.put(None)
+            for w in workers:
+                w.join()
+        else:
+            self.flush()
+
     # -- read path ---------------------------------------------------------------------
     def get(self, key: RegionKey, roi: BoundingBox) -> np.ndarray:
         from repro.storage.tiers import _assemble

@@ -87,9 +87,8 @@ def decode_homes(home) -> tuple[int, ...]:
     return tuple(int(s) for s in home)
 
 
-@dataclasses.dataclass
 class TransportStats:
-    """Per-transport traffic accounting.
+    """Per-transport traffic accounting: counters behind ONE lock.
 
     ``bytes_put``/``bytes_get`` count WIRE bytes — what actually crossed
     the link (compressed payloads, or just the control frame for a
@@ -98,23 +97,49 @@ class TransportStats:
     two are equal; the gap is the data-plane saving, surfaced by
     ``storage_stats()``.  ``shm_gets`` counts blocks served by shared-
     memory reference instead of a socket payload.
+
+    Same discipline as ``GatewayStats``: writers bump related counters
+    together through :meth:`add` (one atomic multi-counter step), and
+    snapshot readers use :meth:`as_dict` so a concurrent bump can never
+    produce a torn cross-counter view (e.g. ``puts`` without its
+    ``bytes_put``).  Plain attribute reads of a single counter remain
+    lock-free.
     """
 
-    puts: int = 0
-    gets: int = 0
-    meta_msgs: int = 0
-    bytes_put: int = 0
-    bytes_get: int = 0
-    bytes_meta: int = 0
-    bytes_put_raw: int = 0
-    bytes_get_raw: int = 0
-    shm_gets: int = 0
+    _FIELDS = (
+        "puts",
+        "gets",
+        "meta_msgs",
+        "bytes_put",
+        "bytes_get",
+        "bytes_meta",
+        "bytes_put_raw",
+        "bytes_get_raw",
+        "shm_gets",
+    )
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        for f in self._FIELDS:
+            setattr(self, f, 0)
+
+    def add(self, **deltas: int) -> None:
+        """Atomically bump several counters (one lock acquisition)."""
+        with self._lock:
+            for name, delta in deltas.items():
+                if name not in self._FIELDS:
+                    raise AttributeError(f"unknown transport counter {name!r}")
+                setattr(self, name, getattr(self, name) + delta)
 
     def reset(self) -> None:
-        self.puts = self.gets = self.meta_msgs = 0
-        self.bytes_put = self.bytes_get = self.bytes_meta = 0
-        self.bytes_put_raw = self.bytes_get_raw = 0
-        self.shm_gets = 0
+        with self._lock:
+            for f in self._FIELDS:
+                setattr(self, f, 0)
+
+    def as_dict(self) -> dict:
+        """Consistent snapshot of every counter (taken under the lock)."""
+        with self._lock:
+            return {f: getattr(self, f) for f in self._FIELDS}
 
 
 @runtime_checkable
@@ -344,18 +369,13 @@ class InProcTransport:
     # -- accounting ---------------------------------------------------------------
     def _account(self, server: int, nbytes: int, op: str) -> None:
         # in-process moves are never compressed: wire bytes == raw bytes
-        with self._lock:
-            if op == "put":
-                self.stats.puts += 1
-                self.stats.bytes_put += nbytes
-                self.stats.bytes_put_raw += nbytes
-            elif op == "get":
-                self.stats.gets += 1
-                self.stats.bytes_get += nbytes
-                self.stats.bytes_get_raw += nbytes
-            else:
-                self.stats.meta_msgs += 1
-                self.stats.bytes_meta += nbytes
+        if op == "put":
+            self.stats.add(puts=1, bytes_put=nbytes, bytes_put_raw=nbytes)
+        elif op == "get":
+            self.stats.add(gets=1, bytes_get=nbytes, bytes_get_raw=nbytes)
+        else:
+            self.stats.add(meta_msgs=1, bytes_meta=nbytes)
+        with self._lock:  # _lock guards the virtual clock, stats guard themselves
             self._clock[server] += self.latency + nbytes / self.link_bandwidth
 
     # -- Transport message API -----------------------------------------------------
@@ -425,34 +445,52 @@ class InProcTransport:
         pass
 
 
-@dataclasses.dataclass
 class DMSStats:
-    """Availability accounting for the replicated routing layer."""
+    """Availability accounting for the replicated routing layer.
 
-    failover_fetches: int = 0   # blocks served by a non-primary replica (fault-driven)
-    balanced_fetches: int = 0   # blocks served by a non-primary replica (load rotation)
-    failed_servers: int = 0     # TransportErrors that rerouted a fetch group / put replica
-    empty_reroutes: int = 0     # blocks rerouted past a reachable-but-dataless replica
-    directory_retries: int = 0  # directory lookups retried past a dead/empty server
-    directory_repairs: int = 0  # coverage holes healed by a cross-directory union
-    meta_broadcast_skips: int = 0  # put_meta broadcasts dropped (dead server, R > 1)
-    delete_skips: int = 0       # best-effort drops skipped on unreachable servers
-    put_failovers: int = 0      # blocks re-homed off their ideal replica ring on put
-    put_rollbacks: int = 0      # blocks dropped by a failed put's best-effort rollback
-    repaired_blocks: int = 0    # payload copies re-replicated by repair() sweeps
-    repair_meta_fixes: int = 0  # directories re-filled by repair() sweeps
-    lost_blocks: int = 0        # repair() found blocks with no surviving replica
+    Lock-guarded like :class:`TransportStats`/``GatewayStats``: gateway
+    workers bump these concurrently, and ``storage_stats()`` snapshots
+    them through :meth:`as_dict` under the same internal lock.
+    """
+
+    _FIELDS = (
+        "failover_fetches",   # blocks served by a non-primary replica (fault-driven)
+        "balanced_fetches",   # blocks served by a non-primary replica (load rotation)
+        "failed_servers",     # TransportErrors that rerouted a fetch group / put replica
+        "empty_reroutes",     # blocks rerouted past a reachable-but-dataless replica
+        "directory_retries",  # directory lookups retried past a dead/empty server
+        "directory_repairs",  # coverage holes healed by a cross-directory union
+        "meta_broadcast_skips",  # put_meta broadcasts dropped (dead server, R > 1)
+        "delete_skips",       # best-effort drops skipped on unreachable servers
+        "put_failovers",      # blocks re-homed off their ideal replica ring on put
+        "put_rollbacks",      # blocks dropped by a failed put's best-effort rollback
+        "repaired_blocks",    # payload copies re-replicated by repair() sweeps
+        "repair_meta_fixes",  # directories re-filled by repair() sweeps
+        "lost_blocks",        # repair() found blocks with no surviving replica
+    )
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        for f in self._FIELDS:
+            setattr(self, f, 0)
+
+    def add(self, **deltas: int) -> None:
+        """Atomically bump several counters (one lock acquisition)."""
+        with self._lock:
+            for name, delta in deltas.items():
+                if name not in self._FIELDS:
+                    raise AttributeError(f"unknown DMS counter {name!r}")
+                setattr(self, name, getattr(self, name) + delta)
 
     def reset(self) -> None:
-        self.failover_fetches = self.balanced_fetches = self.failed_servers = 0
-        self.empty_reroutes = 0
-        self.directory_retries = self.directory_repairs = 0
-        self.meta_broadcast_skips = self.delete_skips = 0
-        self.put_failovers = self.put_rollbacks = 0
-        self.repaired_blocks = self.repair_meta_fixes = self.lost_blocks = 0
+        with self._lock:
+            for f in self._FIELDS:
+                setattr(self, f, 0)
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        """Consistent snapshot of every counter (taken under the lock)."""
+        with self._lock:
+            return {f: getattr(self, f) for f in self._FIELDS}
 
 
 class DistributedMemoryStorage:
@@ -516,7 +554,6 @@ class DistributedMemoryStorage:
             )
         self.read_balance = bool(read_balance)
         self.stats = DMSStats()
-        self._stats_lock = threading.Lock()  # gateway workers call get concurrently
         self._dir_rotor = itertools.count()  # rotating directory start
         self._read_rotor = itertools.count()  # per-block replica rotation
         self._repair_thread: threading.Thread | None = None
@@ -626,8 +663,7 @@ class DistributedMemoryStorage:
         return sorted(order, key=lambda s: not self._alive(s))  # stable
 
     def _count(self, field: str, n: int = 1) -> None:
-        with self._stats_lock:
-            setattr(self.stats, field, getattr(self.stats, field) + n)
+        self.stats.add(**{field: n})
 
     def _lookup_any(self, key: RegionKey) -> dict[tuple, tuple[BoundingBox, object]]:
         """First NON-EMPTY directory answer over the rotated order.

@@ -419,8 +419,8 @@ class SocketTransport:
                 meta, payload = encode_block(encode_arr, neg["codec"] if neg else None)
                 header["array"] = meta
             try:
-                wire = send_frame(sock, header, payload)
-                rheader, rpayload, rwire = recv_frame(sock)
+                wire = send_frame(sock, header, payload)  # relint: allow(blocking-under-lock) — the per-connection lock IS the wire serialization: one request owns the socket for its full round-trip
+                rheader, rpayload, rwire = recv_frame(sock)  # relint: allow(blocking-under-lock) — paired with the send above; interleaved frames would corrupt the stream
             except (OSError, TransportError) as e:
                 self._drop_connection(addr)
                 # fresh failure: dead-marked, but the next request earns
@@ -466,19 +466,19 @@ class SocketTransport:
         return dataclasses.replace(key, namespace=key.namespace[len(prefix):])
 
     def _account(self, op: str, nbytes: int, raw: int | None = None, shm_blocks: int = 0) -> None:
-        with self._stats_lock:
-            if op == "put":
-                self.stats.puts += 1
-                self.stats.bytes_put += nbytes
-                self.stats.bytes_put_raw += nbytes if raw is None else raw
-            elif op == "get":
-                self.stats.gets += 1
-                self.stats.bytes_get += nbytes
-                self.stats.bytes_get_raw += nbytes if raw is None else raw
-                self.stats.shm_gets += shm_blocks
-            else:
-                self.stats.meta_msgs += 1
-                self.stats.bytes_meta += nbytes
+        if op == "put":
+            self.stats.add(
+                puts=1, bytes_put=nbytes, bytes_put_raw=nbytes if raw is None else raw
+            )
+        elif op == "get":
+            self.stats.add(
+                gets=1,
+                bytes_get=nbytes,
+                bytes_get_raw=nbytes if raw is None else raw,
+                shm_gets=shm_blocks,
+            )
+        else:
+            self.stats.add(meta_msgs=1, bytes_meta=nbytes)
 
     def _window(self, server: int) -> ShmWindow | None:
         neg = self._neg.get(self.endpoints[server])
@@ -601,10 +601,8 @@ class SocketTransport:
             ],
         }
         rheader, _, wire = self._request(server, header)
-        with self._stats_lock:
-            # one wire frame, len(entries) logical directory records
-            self.stats.meta_msgs += len(entries)
-            self.stats.bytes_meta += wire
+        # one wire frame, len(entries) logical directory records
+        self.stats.add(meta_msgs=len(entries), bytes_meta=wire)
         had = rheader.get("had")
         return None if had is None else [tuple(c) for c in had]
 

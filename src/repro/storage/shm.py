@@ -137,9 +137,11 @@ class ShmArena:
         the handle (old slot goes to quarantine)."""
         arr = np.ascontiguousarray(payload)
         nbytes = arr.nbytes
-        if self._closed or nbytes == 0 or nbytes > self.capacity:
+        if nbytes == 0 or nbytes > self.capacity:
             return None
         with self._lock:
+            if self._closed:  # checked under _lock: close() races with place()
+                return None
             self._release_locked(handle)
             now = time.monotonic()
             self._reclaim_locked(now)

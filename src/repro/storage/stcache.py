@@ -199,3 +199,12 @@ class SpatioTemporalCache:
     def delete(self, key: RegionKey) -> None:
         self.backend.delete(key)
         self.invalidate(key)
+
+    def close(self) -> None:
+        """Stop issuing prefetches and wait out in-flight prefetch
+        threads (each signals its event when done, hit or miss)."""
+        self.prefetch_enabled = False
+        with self._lock:
+            pending = list(self._inflight.values())
+        for evt in pending:
+            evt.wait(timeout=5.0)

@@ -701,7 +701,7 @@ class TieredStore:
                     continue
                 # source = the freshest copy (fastest tier on ties)
                 src = max(
-                    tiers, key=lambda t: (self._tier_gen[t].get(key, 0), -t)
+                    tiers, key=lambda t, key=key: (self._tier_gen[t].get(key, 0), -t)
                 )
                 if src == bi:
                     continue

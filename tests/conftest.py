@@ -17,3 +17,31 @@ if HAVE_HYPOTHESIS:
 # The envdrift marker machinery that used to live here is gone: the jax
 # API drifts it tracked (jax.sharding.AxisType, jax.shard_map) are fixed
 # with version-tolerant accessors, so the whole suite runs unconditionally.
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _lock_witness(request):
+    """Runtime lock-order witness (tools/relint/witness.py).
+
+    Off by default; the CI net/chaos legs set REPRO_LOCK_WITNESS=1 so
+    every test in those legs records real lock-acquisition orders and
+    fails on an order-graph cycle or a blocking call under a held lock.
+    Tests that install their own witness (the relint suite's deliberate
+    cycles) opt out with @pytest.mark.no_lock_witness.
+    """
+    if not os.environ.get("REPRO_LOCK_WITNESS") or request.node.get_closest_marker(
+        "no_lock_witness"
+    ):
+        yield
+        return
+    from tools.relint.witness import LockWitness
+
+    witness = LockWitness()
+    witness.install()
+    try:
+        yield
+    finally:
+        witness.uninstall()
+    witness.check()

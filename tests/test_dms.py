@@ -466,3 +466,47 @@ def test_throughput_accounting():
     assert dms.transport.stats.bytes_put == arr.nbytes
     assert dms.transport.stats.bytes_get == arr.nbytes
     assert dms.aggregate_throughput() > 0
+
+
+def test_transport_stats_snapshot_is_atomic_under_hammer():
+    """as_dict() must snapshot all counters under the stats lock: with
+    writers always bumping (puts, bytes_put) together via add(), every
+    snapshot a reader takes must show bytes_put == 64 * puts — skew
+    means a torn cross-counter read (mirrors the GatewayStats hammer;
+    TransportStats was the remaining PR-7 follow-up)."""
+    import threading
+
+    from repro.storage.dms import TransportStats
+
+    stats = TransportStats()
+    rounds, writers = 2000, 4
+    stop = threading.Event()
+    skews = []
+
+    def writer():
+        for _ in range(rounds):
+            stats.add(puts=1, bytes_put=64, bytes_put_raw=64)
+
+    def reader():
+        while not stop.is_set():
+            snap = stats.as_dict()
+            if snap["bytes_put"] != 64 * snap["puts"]:
+                skews.append(snap)
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    threads = [threading.Thread(target=writer) for _ in range(writers)]
+    for t in readers + threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    stop.set()
+    for t in readers:
+        t.join(timeout=10)
+    assert not skews, skews[:3]
+    final = stats.as_dict()
+    assert final["puts"] == rounds * writers
+    assert final["bytes_put"] == final["bytes_put_raw"] == 64 * rounds * writers
+    stats.reset()
+    assert all(v == 0 for v in stats.as_dict().values())
+    with pytest.raises(AttributeError):
+        stats.add(not_a_counter=1)  # typo'd counter names must not pass silently

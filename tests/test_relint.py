@@ -1,0 +1,576 @@
+"""relint fixture corpus: per-rule firing and non-firing snippets, the
+repo self-check, pragma semantics, and the runtime lock witness."""
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from tools.relint import rules as R
+from tools.relint.core import SourceFile, run
+from tools.relint.witness import LockWitness
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def lint(src: str, rule: str):
+    """Run one rule over a source snippet, honoring pragmas."""
+    f = SourceFile("<snippet>", textwrap.dedent(src))
+    return [v for v in R.ALL_RULES[rule]([f]) if not f.allowed(v.rule, v.line)]
+
+
+# ---------------------------------------------------------------------------
+# rule 1: guarded-attribute
+# ---------------------------------------------------------------------------
+GUARDED_FIRING = """
+    import threading
+
+    class Counter:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.n = 0
+
+        def bump(self):
+            with self._lock:
+                self.n += 1
+
+        def read(self):
+            return self.n
+"""
+
+
+def test_guarded_attribute_fires_on_unlocked_read():
+    vs = lint(GUARDED_FIRING, "guarded-attribute")
+    assert len(vs) == 1 and "self.n is read" in vs[0].message
+
+
+def test_guarded_attribute_clean_when_read_under_lock():
+    src = GUARDED_FIRING.replace(
+        "return self.n", "with self._lock:\n                return self.n"
+    )
+    assert lint(src, "guarded-attribute") == []
+
+
+def test_guarded_attribute_pragma_suppresses():
+    src = GUARDED_FIRING.replace(
+        "return self.n",
+        "return self.n  # relint: allow(guarded-attribute) — test escape",
+    )
+    assert lint(src, "guarded-attribute") == []
+
+
+def test_guarded_attribute_condition_aliases_its_lock():
+    # holding a Condition built over self._lock IS holding self._lock
+    src = """
+        import threading
+
+        class Q:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._ready = threading.Condition(self._lock)
+                self.depth = 0
+
+            def push(self):
+                with self._lock:
+                    self.depth += 1
+
+            def pop(self):
+                with self._ready:
+                    self.depth -= 1
+    """
+    assert lint(src, "guarded-attribute") == []
+
+
+def test_guarded_attribute_locked_suffix_convention():
+    # *_locked methods are analyzed as if the class locks were held
+    src = """
+        import threading
+
+        class Cache:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.size = 0
+
+            def insert(self):
+                with self._lock:
+                    self.size += 1
+                    self._evict_locked()
+
+            def _evict_locked(self):
+                self.size -= 1
+    """
+    assert lint(src, "guarded-attribute") == []
+
+
+# ---------------------------------------------------------------------------
+# rule 2: blocking-under-lock
+# ---------------------------------------------------------------------------
+def test_blocking_under_lock_fires_on_sleep():
+    src = """
+        import threading
+        import time
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def slow(self):
+                with self._lock:
+                    time.sleep(0.1)
+    """
+    vs = lint(src, "blocking-under-lock")
+    assert len(vs) == 1 and "time.sleep" in vs[0].message
+
+
+def test_blocking_under_lock_fires_on_socket_and_join_and_anonymous_lock():
+    src = """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._locks = {}
+                self._lock = threading.Lock()
+
+            def send(self, sock, addr):
+                with self._locks[addr]:
+                    sock.sendall(b"x")
+
+            def stop(self, worker):
+                with self._lock:
+                    worker.join()
+    """
+    vs = lint(src, "blocking-under-lock")
+    assert len(vs) == 2
+    assert any("sendall" in v.message for v in vs)
+    assert any(".join()" in v.message for v in vs)
+
+
+def test_blocking_under_lock_clean_cases():
+    # sleep outside the lock; str.join / os.path.join under the lock
+    src = """
+        import os
+        import threading
+        import time
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.parts = []
+
+            def ok(self):
+                with self._lock:
+                    name = ", ".join(self.parts)
+                    path = os.path.join("a", "b")
+                time.sleep(0.1)
+                return name, path
+    """
+    assert lint(src, "blocking-under-lock") == []
+
+
+# ---------------------------------------------------------------------------
+# rule 3: lock-order
+# ---------------------------------------------------------------------------
+def test_lock_order_fires_on_cycle():
+    src = """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def one(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def two(self):
+                with self._b:
+                    with self._a:
+                        pass
+    """
+    vs = lint(src, "lock-order")
+    assert len(vs) == 1 and "cycle" in vs[0].message
+
+
+def test_lock_order_clean_on_consistent_order():
+    src = """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def one(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def two(self):
+                with self._a:
+                    with self._b:
+                        pass
+    """
+    assert lint(src, "lock-order") == []
+
+
+def test_lock_order_flags_plain_lock_reacquire_but_not_rlock():
+    plain = """
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def oops(self):
+                with self._lock:
+                    with self._lock:
+                        pass
+    """
+    vs = lint(plain, "lock-order")
+    assert len(vs) == 1 and "re-acquire" in vs[0].message
+    assert lint(plain.replace("Lock()", "RLock()"), "lock-order") == []
+
+
+def test_lock_order_sees_cross_class_nesting():
+    # A holds its lock while calling into B, B holds its lock while
+    # calling into A -> cross-class cycle through the attr type map
+    src = """
+        import threading
+
+        class B:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def poke(self):
+                with self._lock:
+                    pass
+
+        class A:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.b = B()
+
+            def use(self):
+                with self._lock:
+                    self.b.poke()
+    """
+    assert lint(src, "lock-order") == []
+    cyclic = """
+        import threading
+
+        class B:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.a = A()
+
+            def poke(self):
+                with self._lock:
+                    self.a.use()
+
+        class A:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.b = B()
+
+            def use(self):
+                with self._lock:
+                    self.b.poke()
+    """
+    vs = lint(cyclic, "lock-order")
+    assert len(vs) == 1 and "cycle" in vs[0].message
+
+
+# ---------------------------------------------------------------------------
+# rule 4: transport-conformance
+# ---------------------------------------------------------------------------
+PROTO = """
+    from typing import Protocol
+
+    class Transport(Protocol):
+        def store(self, server, key): ...
+        def fetch(self, server, key): ...
+        def close(self): ...
+"""
+
+
+def test_transport_conformance_clean_impl():
+    src = PROTO + """
+    class GoodTransport:
+        def store(self, server, key):
+            pass
+
+        def fetch(self, server, key):
+            pass
+
+        def close(self):
+            pass
+    """
+    assert lint(src, "transport-conformance") == []
+
+
+def test_transport_conformance_fires_on_missing_and_mismatched_ops():
+    src = PROTO + """
+    class BadTransport:
+        def store(self, server):
+            pass
+
+        def fetch(self, server, key):
+            pass
+    """
+    vs = lint(src, "transport-conformance")
+    assert len(vs) == 2
+    assert any("does not implement Transport.close" in v.message for v in vs)
+    assert any("does not match Transport.store" in v.message for v in vs)
+
+
+def test_transport_conformance_inherited_ops_count():
+    src = PROTO + """
+    class BaseTransport:
+        def store(self, server, key):
+            pass
+
+        def fetch(self, server, key):
+            pass
+
+        def close(self):
+            pass
+
+    class ShinyTransport(BaseTransport):
+        pass
+    """
+    assert lint(src, "transport-conformance") == []
+
+
+def test_transport_conformance_frame_tag_parity():
+    src = """
+    class _NetServer:
+        def dispatch(self, header):
+            op = header.get("op")
+            if op == "ping":
+                return {}
+            if op == "store":
+                return {}
+
+    class WireTransport:
+        def ping(self):
+            self._request({"op": "ping"})
+
+        def store(self):
+            self._request({"op": "store"})
+    """
+    assert lint(src, "transport-conformance") == []
+    drifted = src.replace('self._request({"op": "store"})', 'self._request({"op": "stash"})')
+    vs = lint(drifted, "transport-conformance")
+    assert len(vs) == 2  # client emits unknown 'stash'; server 'store' unused
+    assert any("'stash'" in v.message for v in vs)
+    assert any("'store'" in v.message for v in vs)
+
+
+# ---------------------------------------------------------------------------
+# rule 5: resource-lifecycle
+# ---------------------------------------------------------------------------
+def test_resource_lifecycle_fires_without_close():
+    src = """
+        import threading
+
+        class Spawner:
+            def go(self):
+                threading.Thread(target=self.run, daemon=True).start()
+    """
+    vs = lint(src, "resource-lifecycle")
+    assert len(vs) == 1 and "spawns threads" in vs[0].message
+
+
+def test_resource_lifecycle_clean_with_close():
+    src = """
+        import threading
+
+        class Spawner:
+            def go(self):
+                self._t = threading.Thread(target=self.run, daemon=True)
+                self._t.start()
+
+            def close(self):
+                pass
+    """
+    assert lint(src, "resource-lifecycle") == []
+
+
+def test_resource_lifecycle_nondaemon_needs_join():
+    src = """
+        import threading
+
+        class Spawner:
+            def go(self):
+                self._t = threading.Thread(target=self.run)
+                self._t.start()
+
+            def close(self):
+                pass
+    """
+    vs = lint(src, "resource-lifecycle")
+    assert len(vs) == 1 and "non-daemon" in vs[0].message
+    joined = src.replace("def close(self):\n                pass",
+                         "def close(self):\n                self._t.join()")
+    assert lint(joined, "resource-lifecycle") == []
+
+
+# ---------------------------------------------------------------------------
+# pragma mechanics
+# ---------------------------------------------------------------------------
+def test_pragma_on_line_above_suppresses():
+    src = GUARDED_FIRING.replace(
+        "return self.n",
+        "# relint: allow(guarded-attribute) — escape above\n            return self.n",
+    )
+    assert lint(src, "guarded-attribute") == []
+
+
+def test_pragma_does_not_suppress_other_rules():
+    src = GUARDED_FIRING.replace(
+        "return self.n",
+        "return self.n  # relint: allow(blocking-under-lock) — wrong rule",
+    )
+    assert len(lint(src, "guarded-attribute")) == 1
+
+
+# ---------------------------------------------------------------------------
+# repo self-check: the codebase itself lints clean
+# ---------------------------------------------------------------------------
+def test_repo_lints_clean():
+    assert run([str(REPO / "src" / "repro")]) == []
+
+
+def test_cli_exits_clean_on_repo():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.relint", "src/repro"],
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# runtime lock witness
+# ---------------------------------------------------------------------------
+@pytest.mark.no_lock_witness
+def test_witness_detects_order_cycle():
+    w = LockWitness()
+    w.install()
+    try:
+        a = threading.Lock()
+        b = threading.Lock()
+
+        def one():
+            with a:
+                with b:
+                    pass
+
+        def two():
+            with b:
+                with a:
+                    pass
+
+        # sequential threads: opposite orders, no actual deadlock — the
+        # witness must still call the latent cycle
+        t1 = threading.Thread(target=one)
+        t1.start()
+        t1.join()
+        t2 = threading.Thread(target=two)
+        t2.start()
+        t2.join()
+    finally:
+        w.uninstall()
+    with pytest.raises(AssertionError, match="cycle"):
+        w.check()
+
+
+@pytest.mark.no_lock_witness
+def test_witness_accepts_consistent_order():
+    w = LockWitness()
+    w.install()
+    try:
+        a = threading.Lock()
+        b = threading.Lock()
+        for _ in range(3):
+            with a:
+                with b:
+                    pass
+    finally:
+        w.uninstall()
+    w.check()
+
+
+@pytest.mark.no_lock_witness
+def test_witness_flags_sleep_under_lock():
+    w = LockWitness(blocking_allow=())
+    w.install()
+    try:
+        lock = threading.Lock()
+        with lock:
+            time.sleep(0.001)
+    finally:
+        w.uninstall()
+    with pytest.raises(AssertionError, match="time.sleep"):
+        w.check()
+
+
+@pytest.mark.no_lock_witness
+def test_witness_allowlist_spares_blocking_sites():
+    w = LockWitness(blocking_allow=("test_relint.py",))
+    w.install()
+    try:
+        lock = threading.Lock()
+        with lock:
+            time.sleep(0.001)
+    finally:
+        w.uninstall()
+    w.check()
+
+
+@pytest.mark.no_lock_witness
+def test_witness_condition_over_rlock_survives_wait():
+    # Condition steals _release_save/_acquire_restore/_is_owned from a
+    # wrapped RLock; held bookkeeping must survive the wait cycle
+    w = LockWitness()
+    w.install()
+    try:
+        lk = threading.RLock()
+        cv = threading.Condition(lk)
+        done = []
+
+        def waiter():
+            with cv:
+                while not done:
+                    cv.wait(timeout=2.0)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        time.sleep(0.02)
+        with cv:
+            done.append(1)
+            cv.notify_all()
+        t.join(timeout=5.0)
+        assert not t.is_alive()
+    finally:
+        w.uninstall()
+    w.check()
+
+
+@pytest.mark.no_lock_witness
+def test_witness_uninstall_restores_factories():
+    real_lock, real_sleep = threading.Lock, time.sleep
+    w = LockWitness()
+    w.install()
+    assert threading.Lock is not real_lock
+    w.uninstall()
+    assert threading.Lock is real_lock
+    assert time.sleep is real_sleep

@@ -1,0 +1,7 @@
+"""relint: project-specific concurrency & wire-protocol static analysis.
+
+Run as ``python -m tools.relint src/repro`` from the repository root.
+See tools/relint/rules.py for the rule set and README.md for the
+pragma syntax (``# relint: allow(rule-name) — justification``).
+"""
+from tools.relint.core import SourceFile, Violation, load_files, run  # noqa: F401

@@ -1,0 +1,51 @@
+"""CLI: ``python -m tools.relint [--rule NAME]... [PATH]...``
+
+Exit status 0 when clean, 1 when violations survive pragma filtering,
+2 on usage errors.  Default path: ``src/repro``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.relint.core import run
+from tools.relint.rules import ALL_RULES
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.relint",
+        description="project-specific concurrency & wire-protocol lint",
+    )
+    parser.add_argument("paths", nargs="*", default=["src/repro"])
+    parser.add_argument(
+        "--rule",
+        action="append",
+        dest="rules",
+        metavar="NAME",
+        help="run only this rule (repeatable); default: all",
+    )
+    args = parser.parse_args(argv)
+    only = None
+    if args.rules:
+        unknown = set(args.rules) - set(ALL_RULES)
+        if unknown:
+            print(
+                f"unknown rule(s): {', '.join(sorted(unknown))}; "
+                f"known: {', '.join(ALL_RULES)}",
+                file=sys.stderr,
+            )
+            return 2
+        only = set(args.rules)
+    violations = run(args.paths or ["src/repro"], only=only)
+    for v in violations:
+        print(v.render())
+    if violations:
+        print(f"relint: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    print("relint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

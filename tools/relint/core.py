@@ -1,0 +1,96 @@
+"""relint core: file loading, pragma table, violation model, runner.
+
+The analyzer is pure stdlib (``ast`` + ``re``) on purpose: the CI job
+that runs it must not need numpy/jax, and importing the code under
+analysis would execute it.  Everything here is source-level.
+
+Suppression pragma::
+
+    some_code()  # relint: allow(rule-name) — one-line justification
+
+A pragma suppresses the named rule (comma-separate several, ``*`` for
+all) on its own line and on the line directly below it, so it can sit
+either trailing the offending statement or on a comment line above it.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+
+PRAGMA_RE = re.compile(r"#\s*relint:\s*allow\(([^)]*)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class SourceFile:
+    """One parsed module plus its pragma table."""
+
+    def __init__(self, path: str, source: str) -> None:
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.allow: dict[int, set[str]] = {}
+        for lineno, text in enumerate(source.splitlines(), start=1):
+            m = PRAGMA_RE.search(text)
+            if m:
+                self.allow[lineno] = {
+                    name.strip() for name in m.group(1).split(",") if name.strip()
+                }
+
+    def allowed(self, rule: str, line: int) -> bool:
+        # a pragma covers its own line (trailing comment) and the next
+        # line (comment-above style)
+        for ln in (line, line - 1):
+            names = self.allow.get(ln)
+            if names is not None and (rule in names or "*" in names):
+                return True
+        return False
+
+
+def load_files(paths) -> list[SourceFile]:
+    """Parse every ``.py`` file under ``paths`` (files or directories)."""
+    found: list[str] = []
+    for root_path in paths:
+        if os.path.isfile(root_path):
+            found.append(root_path)
+            continue
+        for dirpath, dirnames, filenames in os.walk(root_path):
+            dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+            found.extend(
+                os.path.join(dirpath, f) for f in sorted(filenames) if f.endswith(".py")
+            )
+    out = []
+    for p in found:
+        with open(p, "r", encoding="utf-8") as fh:
+            out.append(SourceFile(p, fh.read()))
+    return out
+
+
+def run(paths, only: set[str] | None = None) -> list[Violation]:
+    """Run every rule (or the ``only`` subset) over ``paths``; return
+    the violations that survive pragma filtering, sorted by location."""
+    from tools.relint import rules as rules_mod
+
+    files = load_files(paths)
+    by_path = {f.path: f for f in files}
+    violations: list[Violation] = []
+    for rule_name, rule_fn in rules_mod.ALL_RULES.items():
+        if only is not None and rule_name not in only:
+            continue
+        for v in rule_fn(files):
+            src = by_path.get(v.path)
+            if src is not None and src.allowed(v.rule, v.line):
+                continue
+            violations.append(v)
+    return sorted(violations, key=lambda v: (v.path, v.line, v.rule))

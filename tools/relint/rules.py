@@ -1,0 +1,701 @@
+"""The five relint rules, derived from this codebase's real invariants.
+
+1. guarded-attribute    — an attribute assigned under ``with self.<lock>``
+                          in any method of a class must not be touched
+                          outside a lock block in that class (the PR-7
+                          ``GatewayStats`` bug class).
+2. blocking-under-lock  — no socket send/recv, frame helpers, Transport
+                          ops, ``time.sleep`` or thread ``.join()``
+                          inside a held-lock block.
+3. lock-order           — the static nested-acquisition graph across
+                          classes must be acyclic (and a plain ``Lock``
+                          must never re-acquire itself).
+4. transport-conformance— every ``*Transport`` class implements the full
+                          ``Transport`` protocol op set with matching
+                          signatures; the ``_NetServer`` dispatch table
+                          and the client frame-tag set must match.
+5. resource-lifecycle   — classes spawning threads / opening sockets /
+                          mapping shared memory must define
+                          ``close()``/``stop()``/``shutdown()``, and
+                          non-daemon threads must be joined somewhere on
+                          that path.
+
+Analysis conventions (documented in README):
+
+* Lock attributes are ``self.X = threading.Lock()/RLock()/Condition()``.
+  A ``Condition(self.Y)`` aliases its underlying lock, so holding the
+  condition counts as holding ``Y`` and vice versa.
+* A ``with`` over any other expression whose source mentions ``lock``
+  (e.g. ``with self._conn_locks[addr]:``) is tracked as an anonymous
+  lock: it arms blocking-under-lock but cannot guard attributes.
+* Methods named ``*_locked`` are analyzed as if every lock of their
+  class were held — the codebase's caller-holds-the-lock convention.
+* The analysis is intraprocedural plus one level of ``self.m()`` /
+  ``self.attr.m()`` resolution for the lock-order graph; container
+  mutation (``d[k] = v``) is not an attribute write.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.relint.core import SourceFile, Violation
+
+LOCK_FACTORIES = {"threading.Lock", "threading.RLock"}
+CONDITION_FACTORY = "threading.Condition"
+LIFECYCLE_NAMES = {"close", "stop", "shutdown"}
+
+SOCKET_METHODS = {"recv", "recv_into", "sendall", "sendmsg", "sendto", "accept", "connect"}
+FRAME_HELPERS = {"send_frame", "send_frame_parts", "recv_frame", "_recv_exact", "_sendmsg_all"}
+TRANSPORT_OPS = {
+    "store", "fetch", "fetch_many", "put_meta", "put_meta_batch", "lookup",
+    "keys", "drop", "drop_block", "payload_bytes",
+}
+
+
+# ---------------------------------------------------------------------------
+# shared class-level analysis
+# ---------------------------------------------------------------------------
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    """``X`` when node is exactly ``self.X``."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+class ClassInfo:
+    """Locks, attribute types, and methods of one top-level class."""
+
+    def __init__(self, src: SourceFile, node: ast.ClassDef) -> None:
+        self.src = src
+        self.node = node
+        self.name = node.name
+        self.bases = [b for b in (_dotted(base) for base in node.bases) if b]
+        self.methods: dict[str, ast.FunctionDef] = {
+            stmt.name: stmt
+            for stmt in node.body
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        # attr -> canonical frozenset of underlying lock attr names
+        self.lock_attrs: dict[str, frozenset[str]] = {}
+        # attr -> class name, from ``self.X = ClassName(...)``
+        self.attr_types: dict[str, str] = {}
+        self._collect_attrs()
+
+    def _collect_attrs(self) -> None:
+        conditions: dict[str, str | None] = {}  # cond attr -> wrapped lock attr
+        for meth in self.methods.values():
+            for stmt in ast.walk(meth):
+                if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+                    continue
+                attr = _self_attr(stmt.targets[0])
+                if attr is None or not isinstance(stmt.value, ast.Call):
+                    continue
+                callee = _dotted(stmt.value.func)
+                if callee in LOCK_FACTORIES:
+                    self.lock_attrs[attr] = frozenset({attr})
+                elif callee == CONDITION_FACTORY:
+                    wrapped = None
+                    if stmt.value.args:
+                        wrapped = _self_attr(stmt.value.args[0])
+                    conditions[attr] = wrapped
+                elif callee is not None and "." not in callee and callee[:1].isupper():
+                    self.attr_types[attr] = callee
+        for attr, wrapped in conditions.items():
+            if wrapped is not None:
+                self.lock_attrs[attr] = frozenset({wrapped})
+            else:
+                self.lock_attrs[attr] = frozenset({attr})
+
+    def all_canonical(self) -> frozenset[str]:
+        out: set[str] = set()
+        for canon in self.lock_attrs.values():
+            out |= canon
+        return frozenset(out)
+
+
+def collect_classes(files: list[SourceFile]) -> list[ClassInfo]:
+    out = []
+    for f in files:
+        for node in f.tree.body:
+            if isinstance(node, ast.ClassDef):
+                out.append(ClassInfo(f, node))
+    return out
+
+
+def _with_acquisitions(
+    item_exprs: list[ast.expr], ci: ClassInfo
+) -> tuple[set[str], list[tuple[str, ast.expr]]]:
+    """Locks acquired by one ``with`` statement's items.
+
+    Returns (canonical named-lock set, [(anon id, expr), ...]).
+    """
+    named: set[str] = set()
+    anon: list[tuple[str, ast.expr]] = []
+    for expr in item_exprs:
+        attr = _self_attr(expr)
+        if attr is not None and attr in ci.lock_attrs:
+            named |= ci.lock_attrs[attr]
+            continue
+        try:
+            text = ast.unparse(expr)
+        except Exception:  # pragma: no cover - unparse is total on 3.9+
+            text = ""
+        if "lock" in text.lower():
+            anon.append((f"<{text}>", expr))
+    return named, anon
+
+
+def iter_held(meth: ast.FunctionDef, ci: ClassInfo):
+    """Yield ``(node, held)`` for every node in ``meth``.
+
+    ``held`` is the set of lock ids held at that node: canonical
+    ``self`` lock names plus ``<...>`` anonymous ids.  ``*_locked``
+    methods start with every class lock held (caller-holds convention).
+    Nested functions inherit the enclosing held set: closures here run
+    either inline or on worker threads the enclosing block hands the
+    lock to — assuming held is the conservative choice for rule 2 and
+    matches the codebase's usage for rule 1.
+    """
+    assumed: frozenset[str] = (
+        ci.all_canonical() if meth.name.endswith("_locked") else frozenset()
+    )
+
+    def walk(node: ast.AST, held: frozenset[str]):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            # the With itself is reported under the OUTER held set, so
+            # lock-order sees nested acquisitions as (held -> acquired)
+            yield node, held
+            exprs = [item.context_expr for item in node.items]
+            named, anon = _with_acquisitions(exprs, ci)
+            for expr in exprs:
+                yield from walk(expr, held)
+            for item in node.items:
+                if item.optional_vars is not None:
+                    yield from walk(item.optional_vars, held)
+            inner = held | named | {a for a, _ in anon}
+            for stmt in node.body:
+                yield from walk(stmt, inner)
+            return
+        yield node, held
+        for child in ast.iter_child_nodes(node):
+            yield from walk(child, held)
+
+    for stmt in meth.body:
+        yield from walk(stmt, assumed)
+
+
+# ---------------------------------------------------------------------------
+# rule 1: guarded-attribute
+# ---------------------------------------------------------------------------
+def rule_guarded_attribute(files: list[SourceFile]) -> list[Violation]:
+    violations = []
+    for ci in collect_classes(files):
+        if not ci.lock_attrs:
+            continue
+        # (attr, is_store, held, lineno, method name)
+        accesses: list[tuple[str, bool, frozenset[str], int, str]] = []
+        for mname, meth in ci.methods.items():
+            if mname == "__init__":
+                continue
+            for node, held in iter_held(meth, ci):
+                attr = _self_attr(node)
+                if attr is None or attr in ci.lock_attrs:
+                    continue
+                is_store = isinstance(node.ctx, (ast.Store, ast.Del))
+                accesses.append((attr, is_store, held, node.lineno, mname))
+        guards: dict[str, set[str]] = {}
+        for attr, is_store, held, _, _ in accesses:
+            named_held = {h for h in held if not h.startswith("<")}
+            if is_store and named_held:
+                guards.setdefault(attr, set()).update(named_held)
+        for attr, is_store, held, lineno, mname in accesses:
+            guard = guards.get(attr)
+            if not guard:
+                continue
+            named_held = {h for h in held if not h.startswith("<")}
+            if named_held & guard:
+                continue
+            verb = "written" if is_store else "read"
+            violations.append(
+                Violation(
+                    "guarded-attribute",
+                    ci.src.path,
+                    lineno,
+                    f"{ci.name}.{mname}: self.{attr} is {verb} without a lock, "
+                    f"but it is assigned under {sorted(guard)} elsewhere in "
+                    f"{ci.name}",
+                )
+            )
+    return violations
+
+
+# ---------------------------------------------------------------------------
+# rule 2: blocking-under-lock
+# ---------------------------------------------------------------------------
+def _is_blocking_call(node: ast.Call) -> str | None:
+    """A human-readable reason when ``node`` is a blocking call."""
+    callee = _dotted(node.func)
+    if callee == "time.sleep":
+        return "time.sleep()"
+    if callee == "socket.create_connection":
+        return "socket.create_connection()"
+    fname = None
+    if isinstance(node.func, ast.Name):
+        fname = node.func.id
+    elif isinstance(node.func, ast.Attribute):
+        fname = node.func.attr
+    if fname in FRAME_HELPERS:
+        return f"frame I/O helper {fname}()"
+    if isinstance(node.func, ast.Attribute):
+        attr = node.func.attr
+        recv = node.func.value
+        if attr in SOCKET_METHODS:
+            return f"socket op .{attr}()"
+        if attr in TRANSPORT_OPS:
+            try:
+                recv_src = ast.unparse(recv).lower()
+            except Exception:  # pragma: no cover
+                recv_src = ""
+            if "transport" in recv_src:
+                return f"Transport op .{attr}()"
+        if attr == "join" and not isinstance(recv, ast.Constant):
+            # thread-style join: no args, a single numeric timeout, or
+            # timeout= — str.join / os.path.join always pass an iterable
+            args_ok = not node.args or (
+                len(node.args) == 1
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, (int, float))
+            )
+            kw_ok = all(kw.arg == "timeout" for kw in node.keywords)
+            if args_ok and kw_ok and (not node.args or not node.keywords):
+                return ".join()"
+    return None
+
+
+def rule_blocking_under_lock(files: list[SourceFile]) -> list[Violation]:
+    violations = []
+    for ci in collect_classes(files):
+        for mname, meth in ci.methods.items():
+            for node, held in iter_held(meth, ci):
+                if not held or not isinstance(node, ast.Call):
+                    continue
+                reason = _is_blocking_call(node)
+                if reason is None:
+                    continue
+                violations.append(
+                    Violation(
+                        "blocking-under-lock",
+                        ci.src.path,
+                        node.lineno,
+                        f"{ci.name}.{mname}: {reason} while holding "
+                        f"{sorted(held)}",
+                    )
+                )
+    return violations
+
+
+# ---------------------------------------------------------------------------
+# rule 3: lock-order
+# ---------------------------------------------------------------------------
+def rule_lock_order(files: list[SourceFile]) -> list[Violation]:
+    classes = collect_classes(files)
+
+    def lock_id(ci: ClassInfo, canon: str) -> str:
+        return f"{ci.name}.{canon}"
+
+    # per (class, method): locks directly acquired anywhere in the method
+    direct: dict[tuple[str, str], set[str]] = {}
+    # whether a canonical lock is an RLock (self-edges are reentrancy)
+    reentrant: set[str] = set()
+    for ci in classes:
+        for meth in ci.methods.values():
+            for stmt in ast.walk(meth):
+                if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+                    continue
+                attr = _self_attr(stmt.targets[0])
+                if attr is None or not isinstance(stmt.value, ast.Call):
+                    continue
+                if _dotted(stmt.value.func) == "threading.RLock":
+                    reentrant.add(lock_id(ci, attr))
+        for mname, meth in ci.methods.items():
+            acquired: set[str] = set()
+            for stmt in ast.walk(meth):
+                if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                    named, _ = _with_acquisitions(
+                        [i.context_expr for i in stmt.items], ci
+                    )
+                    acquired |= {lock_id(ci, c) for c in named}
+            direct[(ci.name, mname)] = acquired
+
+    # edges: held lock -> acquired lock, with first evidence site
+    edges: dict[tuple[str, str], tuple[str, int, str]] = {}
+
+    def add_edge(src: str, dst: str, path: str, line: int, why: str) -> None:
+        edges.setdefault((src, dst), (path, line, why))
+
+    for ci in classes:
+        for mname, meth in ci.methods.items():
+            for node, held in iter_held(meth, ci):
+                named_held = {
+                    lock_id(ci, h) for h in held if not h.startswith("<")
+                }
+                if not named_held:
+                    continue
+                acquired: set[str] = set()
+                why = ""
+                if isinstance(node, (ast.With, ast.AsyncWith)):
+                    named, _ = _with_acquisitions(
+                        [i.context_expr for i in node.items], ci
+                    )
+                    acquired = {lock_id(ci, c) for c in named}
+                    why = "nested with"
+                elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+                    callee_attr = node.func.attr
+                    owner = node.func.value
+                    if isinstance(owner, ast.Name) and owner.id == "self":
+                        acquired = direct.get((ci.name, callee_attr), set())
+                        why = f"call self.{callee_attr}()"
+                    else:
+                        owner_attr = _self_attr(owner)
+                        if owner_attr is not None and owner_attr in ci.attr_types:
+                            tname = ci.attr_types[owner_attr]
+                            acquired = direct.get((tname, callee_attr), set())
+                            why = f"call self.{owner_attr}.{callee_attr}() [{tname}]"
+                for h in named_held:
+                    for a in acquired:
+                        if a == h:
+                            if h not in reentrant and why == "nested with":
+                                add_edge(
+                                    h, a, ci.src.path, node.lineno,
+                                    f"{ci.name}.{mname}: non-reentrant re-acquire",
+                                )
+                            continue
+                        add_edge(h, a, ci.src.path, node.lineno, f"{ci.name}.{mname}: {why}")
+
+    # cycle detection (includes self-edges on plain Locks recorded above)
+    violations = []
+    graph: dict[str, set[str]] = {}
+    for (src, dst), _ in edges.items():
+        graph.setdefault(src, set()).add(dst)
+
+    def find_cycle() -> list[str] | None:
+        WHITE, GRAY, BLACK = 0, 1, 2
+        color = {n: WHITE for n in set(graph) | {d for ds in graph.values() for d in ds}}
+        parent: dict[str, str] = {}
+
+        def dfs(n: str) -> list[str] | None:
+            color[n] = GRAY
+            for nb in sorted(graph.get(n, ())):
+                if color[nb] == GRAY:
+                    cyc = [nb, n]
+                    cur = n
+                    while cur != nb:
+                        cur = parent[cur]
+                        cyc.append(cur)
+                    return list(reversed(cyc))
+                if color[nb] == WHITE:
+                    parent[nb] = n
+                    found = dfs(nb)
+                    if found:
+                        return found
+            color[n] = BLACK
+            return None
+
+        for n in sorted(color):
+            if color[n] == WHITE:
+                found = dfs(n)
+                if found:
+                    return found
+        return None
+
+    cycle = find_cycle()
+    if cycle:
+        pairs = list(zip(cycle, cycle[1:]))
+        path, line, why = edges[pairs[0]]
+        violations.append(
+            Violation(
+                "lock-order",
+                path,
+                line,
+                "lock acquisition cycle: " + " -> ".join(cycle) + f" ({why})",
+            )
+        )
+    return violations
+
+
+# ---------------------------------------------------------------------------
+# rule 4: transport-conformance
+# ---------------------------------------------------------------------------
+def _method_params(meth: ast.FunctionDef) -> list[str]:
+    args = [a.arg for a in meth.args.posonlyargs + meth.args.args]
+    if args and args[0] in ("self", "cls"):
+        args = args[1:]
+    return args
+
+
+def rule_transport_conformance(files: list[SourceFile]) -> list[Violation]:
+    violations: list[Violation] = []
+    classes = collect_classes(files)
+    by_name = {ci.name: ci for ci in classes}
+
+    proto = next(
+        (
+            ci
+            for ci in classes
+            if ci.name == "Transport" and any("Protocol" in b for b in ci.bases)
+        ),
+        None,
+    )
+    proto_methods = (
+        {
+            name: _method_params(meth)
+            for name, meth in proto.methods.items()
+            if not name.startswith("_")
+        }
+        if proto is not None
+        else {}
+    )
+
+    def effective_methods(ci: ClassInfo) -> dict[str, tuple[ClassInfo, ast.FunctionDef]]:
+        out: dict[str, tuple[ClassInfo, ast.FunctionDef]] = {}
+        seen: set[str] = set()
+        stack = [ci]
+        while stack:
+            cur = stack.pop(0)
+            if cur.name in seen:
+                continue
+            seen.add(cur.name)
+            for name, meth in cur.methods.items():
+                out.setdefault(name, (cur, meth))
+            for base in cur.bases:
+                base_ci = by_name.get(base.rsplit(".", 1)[-1])
+                if base_ci is not None:
+                    stack.append(base_ci)
+        return out
+
+    impls = [
+        ci
+        for ci in classes
+        if ci.name != "Transport"
+        and (
+            ci.name.endswith("Transport")
+            or any(b.rsplit(".", 1)[-1].endswith("Transport") for b in ci.bases)
+        )
+    ]
+    for ci in impls:
+        methods = effective_methods(ci)
+        for op, proto_params in proto_methods.items():
+            if op not in methods:
+                violations.append(
+                    Violation(
+                        "transport-conformance",
+                        ci.src.path,
+                        ci.node.lineno,
+                        f"{ci.name} does not implement Transport.{op}()",
+                    )
+                )
+                continue
+            owner, meth = methods[op]
+            params = _method_params(meth)
+            if params != proto_params:
+                violations.append(
+                    Violation(
+                        "transport-conformance",
+                        owner.src.path,
+                        meth.lineno,
+                        f"{ci.name}.{op}({', '.join(params)}) does not match "
+                        f"Transport.{op}({', '.join(proto_params)})",
+                    )
+                )
+
+    # frame-tag parity: client-emitted {"op": ...} values vs the tags
+    # _NetServer.dispatch compares against
+    server_ci = by_name.get("_NetServer")
+    if server_ci is not None:
+        src = server_ci.src
+        server_tags: set[str] = set()
+        for node in ast.walk(server_ci.node):
+            if isinstance(node, ast.Compare):
+                sides = [node.left] + list(node.comparators)
+                texts = []
+                consts = []
+                for s in sides:
+                    if isinstance(s, ast.Constant) and isinstance(s.value, str):
+                        consts.append(s.value)
+                    else:
+                        try:
+                            texts.append(ast.unparse(s))
+                        except Exception:  # pragma: no cover
+                            pass
+                if consts and any("op" in t for t in texts):
+                    server_tags.update(consts)
+        client_tags: dict[str, int] = {}
+        in_server = set()
+        for node in ast.walk(server_ci.node):
+            in_server.add(id(node))
+        for node in ast.walk(src.tree):
+            if id(node) in in_server or not isinstance(node, ast.Dict):
+                continue
+            for k, v in zip(node.keys, node.values):
+                if (
+                    isinstance(k, ast.Constant)
+                    and k.value == "op"
+                    and isinstance(v, ast.Constant)
+                    and isinstance(v.value, str)
+                ):
+                    client_tags.setdefault(v.value, node.lineno)
+        for tag, lineno in sorted(client_tags.items()):
+            if tag not in server_tags:
+                violations.append(
+                    Violation(
+                        "transport-conformance",
+                        src.path,
+                        lineno,
+                        f"client emits frame tag {tag!r} but _NetServer.dispatch "
+                        "never handles it",
+                    )
+                )
+        for tag in sorted(server_tags - set(client_tags)):
+            violations.append(
+                Violation(
+                    "transport-conformance",
+                    src.path,
+                    server_ci.node.lineno,
+                    f"_NetServer.dispatch handles frame tag {tag!r} that no "
+                    "client-side code emits",
+                )
+            )
+    return violations
+
+
+# ---------------------------------------------------------------------------
+# rule 5: resource-lifecycle
+# ---------------------------------------------------------------------------
+def rule_resource_lifecycle(files: list[SourceFile]) -> list[Violation]:
+    violations = []
+    classes = collect_classes(files)
+    by_name = {ci.name: ci for ci in classes}
+
+    def is_thread_subclass(ci: ClassInfo) -> bool:
+        return any(b.rsplit(".", 1)[-1] == "Thread" for b in ci.bases)
+
+    thread_subclasses = {ci.name for ci in classes if is_thread_subclass(ci)}
+
+    def subclass_is_daemon(name: str) -> bool:
+        ci = by_name.get(name)
+        if ci is None:
+            return False
+        init = ci.methods.get("__init__")
+        if init is None:
+            return False
+        for node in ast.walk(init):
+            if isinstance(node, ast.Call):
+                callee = _dotted(node.func)
+                if callee is not None and callee.endswith("__init__"):
+                    for kw in node.keywords:
+                        if (
+                            kw.arg == "daemon"
+                            and isinstance(kw.value, ast.Constant)
+                            and kw.value.value is True
+                        ):
+                            return True
+        return False
+
+    def has_lifecycle(ci: ClassInfo) -> bool:
+        seen: set[str] = set()
+        stack = [ci]
+        while stack:
+            cur = stack.pop(0)
+            if cur.name in seen:
+                continue
+            seen.add(cur.name)
+            if LIFECYCLE_NAMES & set(cur.methods):
+                return True
+            for base in cur.bases:
+                base_ci = by_name.get(base.rsplit(".", 1)[-1])
+                if base_ci is not None:
+                    stack.append(base_ci)
+        return False
+
+    for ci in classes:
+        if is_thread_subclass(ci):
+            continue  # run() bodies don't spawn; joining is the owner's job
+        spawns: list[tuple[ast.Call, bool]] = []  # (call, daemon)
+        opens: list[tuple[ast.Call, str]] = []
+        joins = False
+        for meth in ci.methods.values():
+            for node in ast.walk(meth):
+                if isinstance(node, ast.Call):
+                    if isinstance(node.func, ast.Attribute) and node.func.attr == "join":
+                        joins = True
+                    callee = _dotted(node.func)
+                    if callee == "threading.Thread" or (
+                        callee in thread_subclasses
+                    ):
+                        daemon = any(
+                            kw.arg == "daemon"
+                            and isinstance(kw.value, ast.Constant)
+                            and kw.value.value is True
+                            for kw in node.keywords
+                        )
+                        if not daemon and callee in thread_subclasses:
+                            daemon = subclass_is_daemon(callee)
+                        spawns.append((node, daemon))
+                    elif callee in ("socket.socket", "socket.create_connection"):
+                        opens.append((node, "socket"))
+                    elif callee is not None and callee.rsplit(".", 1)[-1] == "SharedMemory":
+                        opens.append((node, "shared memory"))
+        if not spawns and not opens:
+            continue
+        if not has_lifecycle(ci):
+            what = []
+            if spawns:
+                what.append("spawns threads")
+            if opens:
+                what.append("opens " + "/".join(sorted({k for _, k in opens})))
+            violations.append(
+                Violation(
+                    "resource-lifecycle",
+                    ci.src.path,
+                    ci.node.lineno,
+                    f"{ci.name} {' and '.join(what)} but defines no "
+                    "close()/stop()/shutdown()",
+                )
+            )
+        for call, daemon in spawns:
+            if not daemon and not joins:
+                violations.append(
+                    Violation(
+                        "resource-lifecycle",
+                        ci.src.path,
+                        call.lineno,
+                        f"{ci.name} spawns a non-daemon thread but never joins "
+                        "any thread",
+                    )
+                )
+    return violations
+
+
+ALL_RULES = {
+    "guarded-attribute": rule_guarded_attribute,
+    "blocking-under-lock": rule_blocking_under_lock,
+    "lock-order": rule_lock_order,
+    "transport-conformance": rule_transport_conformance,
+    "resource-lifecycle": rule_resource_lifecycle,
+}

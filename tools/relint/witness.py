@@ -1,0 +1,268 @@
+"""Runtime lock-order witness: the dynamic half of relint.
+
+While installed, every lock built through ``threading.Lock()`` /
+``threading.RLock()`` is wrapped so the witness can record, per thread,
+the order locks are actually acquired in, plus any blocking call
+(``time.sleep``, ``Thread.join``) issued while a lock is held.
+:meth:`LockWitness.check` then fails on
+
+* a cycle in the observed acquisition-order graph (two threads that
+  interleave differently WILL deadlock eventually, even if this run got
+  lucky), or
+* a blocking call under a held lock whose creation site is not
+  allowlisted (the SocketTransport per-connection locks are allowed by
+  default: serializing the socket for a full round-trip is their job).
+
+Lock identity is the creation site ``basename:lineno`` — stable across
+runs and instances, and matching the static rule's Class.attr
+granularity (each ``self.X = threading.Lock()`` line is one site).
+Edges between two locks from the SAME site (distinct instances of one
+class) are not treated as cycles: ordering peer instances needs a total
+order the witness cannot infer.
+
+Used by the autouse fixture in tests/conftest.py, gated on
+``REPRO_LOCK_WITNESS=1`` (the CI net/chaos legs set it).
+"""
+from __future__ import annotations
+
+import _thread
+import os
+import sys
+import threading
+import time
+
+
+def _creation_site() -> str:
+    """``basename:lineno`` of the frame that called the lock factory."""
+    frame = sys._getframe(2)
+    while frame is not None:
+        fname = frame.f_code.co_filename
+        base = os.path.basename(fname)
+        if base not in ("witness.py", "threading.py"):
+            return f"{base}:{frame.f_lineno}"
+        frame = frame.f_back
+    return "<unknown>"
+
+
+class _WitnessLock:
+    """Wrapper over a real lock; mirrors the _thread.lock surface."""
+
+    _reentrant = False
+
+    def __init__(self, witness: "LockWitness", inner, site: str) -> None:
+        self._witness = witness
+        self._inner = inner
+        self._site = site
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._witness._note_acquire(self)
+        return got
+
+    def release(self) -> None:
+        self._witness._note_release(self)
+        self._inner.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<witness {'R' if self._reentrant else ''}lock {self._site} over {self._inner!r}>"
+
+
+class _WitnessRLock(_WitnessLock):
+    _reentrant = True
+
+    # threading.Condition steals these three when the wrapped lock
+    # provides them, so the bookkeeping must stay accurate across
+    # cv.wait()'s full release/re-acquire cycle.
+    def _release_save(self):
+        depth = self._witness._forget(self)
+        return (self._inner._release_save(), depth)
+
+    def _acquire_restore(self, state) -> None:
+        inner_state, depth = state
+        self._inner._acquire_restore(inner_state)
+        self._witness._restore(self, depth)
+
+    def _is_owned(self) -> bool:
+        return self._inner._is_owned()
+
+
+class LockWitness:
+    """Installable recorder of real lock-acquisition orders."""
+
+    def __init__(self, blocking_allow: tuple[str, ...] = ("net.py",)) -> None:
+        self.blocking_allow = blocking_allow
+        self._mu = _thread.allocate_lock()  # raw: never witnessed
+        self._tls = threading.local()
+        # (src site, dst site) -> how often observed nested
+        self.edges: dict[tuple[str, str], int] = {}
+        self.blocking: list[str] = []
+        self._installed = False
+        self._saved: dict[str, object] = {}
+
+    # -- per-thread held bookkeeping -------------------------------------------
+    def _held(self):
+        tls = self._tls
+        if not hasattr(tls, "held"):
+            tls.held = []      # [(lock, depth)] in acquisition order
+        return tls.held
+
+    def _note_acquire(self, lock: _WitnessLock) -> None:
+        held = self._held()
+        for i, (other, depth) in enumerate(held):
+            if other is lock:  # reentrant re-acquire: no new edges
+                held[i] = (other, depth + 1)
+                return
+        new_edges = []
+        for other, _ in held:
+            if other._site != lock._site:
+                new_edges.append((other._site, lock._site))
+        held.append((lock, 1))
+        if new_edges:
+            with self._mu:
+                for e in new_edges:
+                    self.edges[e] = self.edges.get(e, 0) + 1
+
+    def _note_release(self, lock: _WitnessLock) -> None:
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            other, depth = held[i]
+            if other is lock:
+                if depth > 1:
+                    held[i] = (other, depth - 1)
+                else:
+                    del held[i]
+                return
+
+    def _forget(self, lock: _WitnessLock) -> int:
+        """Drop ``lock`` from the held list entirely (cv.wait); return
+        its nesting depth so _restore can put it back."""
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            other, depth = held[i]
+            if other is lock:
+                del held[i]
+                return depth
+        return 0
+
+    def _restore(self, lock: _WitnessLock, depth: int) -> None:
+        if depth > 0:
+            # deliberately NOT re-recording order edges: cv.wait()'s
+            # re-acquire happens with no other application lock held
+            self._held().append((lock, depth))
+
+    def _note_blocking(self, what: str) -> None:
+        held = [
+            lock._site
+            for lock, _ in self._held()
+            if not any(allow in lock._site for allow in self.blocking_allow)
+        ]
+        if held:
+            with self._mu:
+                self.blocking.append(f"{what} while holding {held}")
+
+    # -- install / uninstall ----------------------------------------------------
+    def install(self) -> None:
+        if self._installed:
+            return
+        witness = self
+        real_lock = threading.Lock
+        real_rlock = threading.RLock
+        real_sleep = time.sleep
+        real_join = threading.Thread.join
+        self._saved = {
+            "lock": real_lock,
+            "rlock": real_rlock,
+            "sleep": real_sleep,
+            "join": real_join,
+        }
+
+        def make_lock():
+            return _WitnessLock(witness, real_lock(), _creation_site())
+
+        def make_rlock():
+            return _WitnessRLock(witness, real_rlock(), _creation_site())
+
+        def sleep(secs):
+            witness._note_blocking(f"time.sleep({secs})")
+            return real_sleep(secs)
+
+        def join(thread_self, timeout=None):
+            witness._note_blocking(f"Thread.join({thread_self.name})")
+            return real_join(thread_self, timeout)
+
+        threading.Lock = make_lock
+        threading.RLock = make_rlock
+        time.sleep = sleep
+        threading.Thread.join = join
+        self._installed = True
+
+    def uninstall(self) -> None:
+        if not self._installed:
+            return
+        threading.Lock = self._saved["lock"]
+        threading.RLock = self._saved["rlock"]
+        time.sleep = self._saved["sleep"]
+        threading.Thread.join = self._saved["join"]
+        self._installed = False
+
+    # -- verdict ---------------------------------------------------------------
+    def find_cycle(self) -> list[str] | None:
+        with self._mu:
+            graph: dict[str, set[str]] = {}
+            for src, dst in self.edges:
+                graph.setdefault(src, set()).add(dst)
+        WHITE, GRAY, BLACK = 0, 1, 2
+        nodes = set(graph) | {d for ds in graph.values() for d in ds}
+        color = {n: WHITE for n in nodes}
+        parent: dict[str, str] = {}
+
+        def dfs(n: str) -> list[str] | None:
+            color[n] = GRAY
+            for nb in sorted(graph.get(n, ())):
+                if color[nb] == GRAY:
+                    cyc = [nb, n]
+                    cur = n
+                    while cur != nb:
+                        cur = parent[cur]
+                        cyc.append(cur)
+                    return list(reversed(cyc))
+                if color[nb] == WHITE:
+                    parent[nb] = n
+                    found = dfs(nb)
+                    if found:
+                        return found
+            color[n] = BLACK
+            return None
+
+        for n in sorted(nodes):
+            if color[n] == WHITE:
+                found = dfs(n)
+                if found:
+                    return found
+        return None
+
+    def check(self) -> None:
+        """Raise AssertionError on an order cycle or blocking-under-lock."""
+        problems = []
+        cycle = self.find_cycle()
+        if cycle:
+            problems.append(
+                "lock acquisition order cycle observed: " + " -> ".join(cycle)
+            )
+        with self._mu:
+            problems.extend(self.blocking)
+        if problems:
+            raise AssertionError(
+                "lock witness: " + "; ".join(problems)
+            )
