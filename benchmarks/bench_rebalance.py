@@ -1,0 +1,179 @@
+"""Elastic rebalance throughput + foreground latency under a paced sweep.
+
+Two claims of the elastic membership layer, kept honest:
+
+  * **minimal migration** — after a join, ``rebalance()`` moves ONLY the
+    blocks whose ideal placement changed under the new epoch (the SFC
+    arc-donation bound, ~K/(N+1) of K blocks when server N+1 joins), and
+    a second sweep is a no-op.  Self-asserted exactly on the in-proc leg
+    (R=1: migrated == homes-changed count) and as a bound on the socket
+    leg (R=2: replica sets widen the set, but never past ``scanned``).
+  * **pacing yields to foreground traffic** — a TokenBucket-paced sweep
+    caps migration throughput, so concurrent reads keep a bounded p99
+    and zero failures while blocks drain between real server processes.
+
+Rows report the per-migrated-block sweep latency (in-proc and over a
+live socket join) and the foreground get p99 measured DURING a paced
+socket sweep.  Fast mode (``REPRO_BENCH_FAST=1``) shrinks the grid for
+CI smoke runs, where ``rebalance_socket_block`` and ``rebalance_fg_p99``
+are gated against benchmarks/baseline.json.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import BoundingBox, ElementType, RegionKey
+from repro.storage import DistributedMemoryStorage, TokenBucket, spawn_servers
+
+FAST = bool(os.environ.get("REPRO_BENCH_FAST"))
+TILE = 128
+GRID = 4 if FAST else 8
+# 3 servers: a join donates 1/12-wide arcs, wide enough that every
+# donation contains block points even on the FAST 4x4 grid (a 4->5 join
+# donates 1/20-wide arcs, which can legitimately contain ZERO of 16
+# block points -- minimality means nothing moves)
+NUM_SERVERS = 3
+REPL = 2
+
+
+def _key() -> RegionKey:
+    return RegionKey("x", "Mask", ElementType.FLOAT32)
+
+
+def _fill(store: DistributedMemoryStorage, dom: BoundingBox) -> np.ndarray:
+    arr = np.random.default_rng(0).random((TILE, TILE)).astype(np.float32)
+    for box in dom.tiles((TILE, TILE)):
+        store.put(_key(), box, arr)
+    return arr
+
+
+def _homes(dms: DistributedMemoryStorage) -> dict:
+    return {tuple(bc): dms.home_server(tuple(bc)) for bc in np.ndindex(*dms._grid)}
+
+
+def _assert_sweep(dms: DistributedMemoryStorage, report: dict, changed: int):
+    assert report["migrated"] > 0, f"nothing migrated: {report}"
+    assert report["lost"] == 0, f"rebalance lost blocks: {report}"
+    assert report["unreachable"] == 0, f"unreachable members: {report}"
+    assert report["complete"] and report["directories_agree"], report
+    # minimal migration: only placement-changed blocks move
+    assert changed <= report["migrated"] <= report["scanned"], (
+        f"migrated {report['migrated']} vs {changed} changed of "
+        f"{report['scanned']} scanned"
+    )
+    # convergence: a second sweep finds nothing to do
+    again = dms.rebalance()
+    assert (again["migrated"], again["copies_added"], again["trimmed"]) == (
+        0,
+        0,
+        0,
+    ), again
+    return report["migrated"]
+
+
+def run() -> list:
+    side = GRID * TILE
+    dom = BoundingBox((0, 0), (side, side))
+    blocks = GRID * GRID
+    rows = []
+
+    # -- in-proc: join at R=1, migration count is exact ---------------------------
+    dms = DistributedMemoryStorage(dom, (TILE, TILE), NUM_SERVERS)
+    _fill(dms, dom)
+    before = _homes(dms)
+    dms.add_server()
+    after = _homes(dms)
+    changed = sum(1 for bc in before if after[bc] != before[bc])
+    # arc donation: the newcomer takes ~1/(N+1) of the blocks, nothing
+    # shuffles between incumbents (rounding slack: one block per arc seam)
+    assert 0 < changed <= blocks // (NUM_SERVERS + 1) + NUM_SERVERS + 1, changed
+    t0 = time.perf_counter()
+    report = dms.rebalance()
+    elapsed = time.perf_counter() - t0
+    # R=1: a block migrates iff its home changed
+    assert report["migrated"] == changed, (report["migrated"], changed)
+    migrated = _assert_sweep(dms, report, changed)
+    rows.append(
+        row(
+            "rebalance_inproc_block",
+            elapsed * 1e6 / migrated,
+            f"migrated={migrated},changed={changed},epoch={report['epoch']}",
+        )
+    )
+    dms.close()
+
+    # -- socket: live join at R=2, then a paced sweep under foreground gets -------
+    fleet = spawn_servers(NUM_SERVERS)
+    try:
+        tr = fleet.transport(connect_timeout=5.0, op_timeout=30.0, dead_backoff=0.5)
+        dms = DistributedMemoryStorage(dom, (TILE, TILE), transport=tr, replication=REPL)
+        arr = _fill(dms, dom)
+        before = _homes(dms)
+        sid, addr = fleet.add_server()
+        assert dms.add_server(addr, sid=sid) == sid
+        after = _homes(dms)
+        changed = sum(1 for bc in before if after[bc] != before[bc])
+        t0 = time.perf_counter()
+        report = dms.rebalance()
+        elapsed = time.perf_counter() - t0
+        migrated = _assert_sweep(dms, report, changed)
+        rows.append(
+            row(
+                "rebalance_socket_block",
+                elapsed * 1e6 / migrated,
+                f"migrated={migrated},changed={changed},epoch={report['epoch']}",
+            )
+        )
+
+        # now DRAIN a server, paced: foreground gets run concurrently and
+        # must see zero failures + a bounded p99 while its blocks move out
+        victim = min(dms.membership.servers)
+        pacer = TokenBucket(rate=120.0, burst=1.0)
+        sweep_report: dict = {}
+
+        def _sweep():
+            sweep_report.update(dms.remove_server(victim, pacer=pacer))
+
+        hot = BoundingBox((0, 0), (TILE, TILE))
+        lat: list[float] = []
+        t = threading.Thread(target=_sweep)
+        t.start()
+        while t.is_alive() or len(lat) < 50:
+            g0 = time.perf_counter()
+            out = dms.get(_key(), hot)
+            lat.append(time.perf_counter() - g0)
+            np.testing.assert_array_equal(out, arr)
+        t.join()
+        assert sweep_report["migrated"] > 0 and sweep_report["lost"] == 0, sweep_report
+        assert sweep_report["paced_wait_s"] > 0.0, sweep_report
+        lat.sort()
+        p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))]
+        assert p99 < 0.25, f"foreground p99 {p99*1e3:.1f}ms during paced sweep"
+        rows.append(
+            row(
+                "rebalance_fg_p99",
+                p99 * 1e6,
+                f"gets={len(lat)},migrated={sweep_report['migrated']},"
+                f"paced_wait_s={sweep_report['paced_wait_s']:.3f}",
+            )
+        )
+        np.testing.assert_array_equal(dms.get(_key(), dom), np.tile(arr, (GRID, GRID)))
+        dms.close()
+    finally:
+        fleet.close()
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,7 @@ from benchmarks import (
     bench_op_speedups,
     bench_overhead,
     bench_pats_error,
+    bench_rebalance,
     bench_repair,
     bench_replication,
     bench_roofline,
@@ -58,6 +59,7 @@ MODULES = [
     ("compute", bench_compute),
     ("replication", bench_replication),
     ("repair", bench_repair),
+    ("rebalance", bench_rebalance),
 ]
 
 

@@ -66,9 +66,11 @@ bench_and_gate() {
   # replication self-asserts write amplification ~R with flat read bytes
   # and primary-view SFC balance; repair self-asserts one fetch + one
   # store per re-replicated block and the hot-key read spread (<=70%
-  # of gets on any one replica)
+  # of gets on any one replica); rebalance self-asserts minimal-migration
+  # counts after a live join (exact at R=1) and a bounded foreground get
+  # p99 with zero failures during a paced server drain
   REPRO_BENCH_FAST=1 python -m benchmarks.run \
-    --json "$BENCH_JSON" --only tiered_staging,transport,gateway,compute,replication,repair \
+    --json "$BENCH_JSON" --only tiered_staging,transport,gateway,compute,replication,repair,rebalance \
   && python scripts/bench_gate.py --run "$BENCH_JSON" \
        --baseline benchmarks/baseline.json
 }

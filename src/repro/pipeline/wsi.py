@@ -117,7 +117,8 @@ def make_wsi_storage(
     endpoints=None,
     replication: int = 1,
     repair=None,
-    wire_codec: str | None = None,
+    wire_codec=None,
+    membership=None,
     mem_capacity_bytes: int = 64 << 20,
     write_policy: str = "write_through",
     policy: PlacementPolicy | None = None,
@@ -140,9 +141,14 @@ def make_wsi_storage(
     shared-memory data plane — co-located fetches arrive by arena
     reference instead of a TCP stream copy, degrading automatically to
     socket payloads for remote or pre-arena servers.  ``wire_codec``
-    (one of ``repro.storage.codec.WIRE_CODECS``, e.g. ``"zlib"``)
+    (one of ``repro.storage.codec.WIRE_CODECS``, e.g. ``"zlib"``, or a
+    per-key glob mapping like ``{"labels/*": "zlib", "feat/*": "bf16"}``)
     compresses socket payloads per connection; raw-vs-wire savings show
-    up in ``storage_stats()``.  With ``endpoints`` (a list of
+    up in ``storage_stats()``.  ``membership`` seeds the stores' elastic
+    fleet view (:class:`~repro.storage.membership.RingView`); ``None``
+    means the genesis ring, and each store's ``add_server`` /
+    ``remove_server`` / ``rebalance`` then resize the fleet live.
+    With ``endpoints`` (a list of
     ``(host, port)`` / "host:port"
     addresses, one per server id) the stores attach to an already-running
     fleet; otherwise ``num_servers`` shards are spawned locally across
@@ -234,6 +240,7 @@ def make_wsi_storage(
             dms = DistributedMemoryStorage(
                 dom, bshape, num_servers, name=sname,
                 transport=_transport(sname), replication=replication,
+                membership=membership,
             )
             if repair_interval is not None:
                 dms.start_auto_repair(repair_interval)
@@ -258,6 +265,7 @@ def make_wsi_storage(
                     dms_transport=_transport(name),
                     replication=replication,
                     repair_interval=repair_interval,
+                    membership=membership,
                 )
             )
     else:

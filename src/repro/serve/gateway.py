@@ -634,6 +634,11 @@ class RegionGateway:
                 # as_dict() snapshots every counter under the stats lock;
                 # asdict() here was the PR-7 torn-read bug class
                 entry["transport"] = tstats.as_dict()
+            rebalance = getattr(backend, "rebalance_stats", None)
+            if callable(rebalance):
+                # elastic-fleet health: ring epoch/checksum, whether a
+                # paced sweep is running, and the last sweep's report
+                entry["rebalance"] = rebalance()
             out.setdefault("dms", {})[getattr(backend, "name", "DMS")] = entry
         return out
 

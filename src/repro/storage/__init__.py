@@ -55,6 +55,7 @@ from repro.storage.net import (
     SocketTransport,
     spawn_servers,
 )
+from repro.storage.membership import RingView, TokenBucket, adopt_newer
 from repro.storage.shm import ShmArena, ShmWindow
 from repro.storage.placement import (
     Placement,
@@ -63,6 +64,7 @@ from repro.storage.placement import (
     dtype_tier,
     pin_namespace,
     size_threshold,
+    when,
 )
 from repro.storage.stcache import SpatioTemporalCache, STCacheStats
 from repro.storage.tiers import (
@@ -102,12 +104,16 @@ __all__ = [
     "autotune_io",
     "SpatioTemporalCache",
     "STCacheStats",
+    "RingView",
+    "TokenBucket",
+    "adopt_newer",
     "Placement",
     "PlacementPolicy",
     "PlacementRule",
     "dtype_tier",
     "pin_namespace",
     "size_threshold",
+    "when",
     "TIER_BANDWIDTH",
     "MemoryTier",
     "Tier",

@@ -33,6 +33,8 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
+from fnmatch import fnmatchcase
+from typing import Mapping
 
 import numpy as np
 
@@ -45,14 +47,67 @@ _LOSSY_DTYPES = (np.float32, np.float64)
 _ZLIB_LEVEL = 1  # speed over ratio: label tiles still compress 10x+
 
 
-def check_codec(name: str | None) -> str | None:
-    """Normalize a codec name: ``None``/``"raw"`` -> ``None`` (plain
-    wire), anything else must be a member of :data:`WIRE_CODECS`."""
+def check_codec(name):
+    """Normalize a codec spec.
+
+    A plain name: ``None``/``"raw"`` -> ``None`` (plain wire), anything
+    else must be a member of :data:`WIRE_CODECS`.
+
+    A mapping is a PER-KEY override table — glob patterns over region
+    keys (``{"labels/*": "zlib", "feat/*": "bf16"}``) mapped to codec
+    names, matched first-hit-wins in insertion order by
+    :func:`resolve_codec`; an explicit ``None``/``"raw"`` value forces
+    plain wire for its pattern.  The normalized mapping is returned with
+    every codec name validated.
+    """
+    if isinstance(name, Mapping):
+        out = {}
+        for pattern, codec in name.items():
+            if not isinstance(pattern, str) or not pattern:
+                raise ValueError(f"wire_codec pattern must be a non-empty str, got {pattern!r}")
+            out[pattern] = check_codec(codec) if not isinstance(codec, Mapping) else _reject(codec)
+        return out
     if name is None or name == "raw":
         return None
     if name not in WIRE_CODECS:
         raise ValueError(f"unknown wire codec {name!r} (want one of {WIRE_CODECS})")
     return name
+
+
+def _reject(codec):
+    raise ValueError(f"nested wire_codec mapping {codec!r} is not allowed")
+
+
+def codec_names(spec) -> list[str]:
+    """The distinct non-raw codec names a spec can emit — what the
+    connection negotiation must ask the server to support."""
+    if isinstance(spec, Mapping):
+        return sorted({c for c in spec.values() if c is not None})
+    return [] if spec in (None, "raw") else [spec]
+
+
+def resolve_codec(spec, key) -> str | None:
+    """The codec a (possibly per-key) spec picks for ``key``.
+
+    ``key`` is anything with ``namespace``/``name`` attributes (a
+    ``RegionKey``) or a plain string.  Mapping specs match each glob
+    pattern — in insertion order, first hit wins — against
+    ``"namespace/name"``, then the bare ``name``, then the bare
+    ``namespace``; no hit means plain wire (raw is the safe default for
+    keys the override table never anticipated).
+    """
+    if not isinstance(spec, Mapping):
+        return check_codec(spec)
+    ns = getattr(key, "namespace", None)
+    name = getattr(key, "name", None)
+    if ns is None and name is None:
+        candidates = [str(key)]
+    else:
+        candidates = [f"{ns}/{name}", str(name), str(ns)]
+    for pattern, codec in spec.items():
+        if any(fnmatchcase(c, pattern) for c in candidates):
+            return check_codec(codec)
+    return None
 
 
 def _dtype_from_str(name: str) -> np.dtype:

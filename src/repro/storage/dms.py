@@ -53,7 +53,9 @@ suite in both cases.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
+import json
 import threading
 from typing import Iterable, Protocol, Sequence, runtime_checkable
 
@@ -62,6 +64,7 @@ import numpy as np
 from repro.core.bbox import BoundingBox
 from repro.core.hilbert import sfc_index, sfc_order_for
 from repro.core.regions import RegionKey
+from repro.storage.membership import RingView, TokenBucket, adopt_newer
 
 
 class TransportError(ConnectionError):
@@ -210,6 +213,27 @@ class Transport(Protocol):
 
     def payload_bytes(self, server: int) -> int: ...
 
+    def join(self, server: int, sid: int, view: dict) -> "dict | None":
+        """Announce to ``server`` that global shard ``sid`` joined the
+        fleet under the given :class:`~repro.storage.membership.RingView`
+        JSON; the server adopts the view when its epoch is newer and
+        returns the view it now holds."""
+        ...
+
+    def leave(self, server: int, sid: int, view: dict, purge: bool = False) -> "dict | None":
+        """Announce that ``sid`` left the fleet.  ``purge=True`` (sent
+        after the rebalance sweep drained it) additionally drops the
+        departed shard's remaining payload, directory, and arena slots
+        when ``server`` hosts it."""
+        ...
+
+    def epoch(self, server: int) -> "dict | None":
+        """The fleet view ``server`` currently holds (RingView JSON), or
+        None when it has never been told one — lets a fresh client (or a
+        rebalance resuming after a crash) rediscover the current epoch
+        from any live server."""
+        ...
+
     def virtual_time(self) -> float: ...
 
     def close(self) -> None: ...
@@ -231,6 +255,11 @@ class _Server:
         self._meta: dict[RegionKey, dict[tuple, tuple[BoundingBox, object]]] = {}
         self._lock = threading.Lock()
         self.arena = None  # optional shm.ShmArena, set by the socket server
+        # blocks whose resident ndarray is an arena view: reads go through
+        # _current_locked so a block the arena evicted under pressure is
+        # re-homed onto the heap from the arena's saved copy (never lost,
+        # never read through a recycled slot)
+        self._in_arena: set[tuple] = set()
 
     def store(
         self,
@@ -252,18 +281,39 @@ class _Server:
                 payload = np.array(payload, copy=True)
             payload.setflags(write=False)
         with self._lock:
+            bk = (key, block_coord)
             if self.arena is not None:
                 handle = (self.sid, key, block_coord)
                 self.arena.release(handle)  # overwrite frees the old slot
+                self._in_arena.discard(bk)
                 if isinstance(payload, np.ndarray) and payload.nbytes:
                     adopted = self.arena.place(handle, payload)
                     if adopted is not None:
                         payload = adopted  # arena-resident read-only view
-            self._blocks[(key, block_coord)] = payload
+                        self._in_arena.add(bk)
+            self._blocks[bk] = payload
+
+    def _current_locked(self, bk: tuple):
+        """The live resident object for ``bk``, reclaiming it from the
+        arena's eviction ledger first: an LRU-evicted block's bytes were
+        copied to the heap by the arena before its slot was recycled, and
+        the first read after eviction adopts that copy (the stale arena
+        view must never be served once the slot can be reused).  Touches
+        the arena's fetch-recency clock otherwise."""
+        block = self._blocks[bk]
+        if self.arena is not None and bk in self._in_arena:
+            raw = self.arena.claim_or_touch((self.sid, bk[0], bk[1]))
+            if raw is not None:
+                if isinstance(block, np.ndarray):
+                    fresh = np.frombuffer(raw, dtype=block.dtype.base, count=block.size)
+                    block = fresh.reshape(block.shape)
+                self._blocks[bk] = block
+                self._in_arena.discard(bk)
+        return block
 
     def fetch(self, key: RegionKey, block_coord: tuple) -> np.ndarray:
         with self._lock:
-            block = self._blocks[(key, block_coord)]
+            block = self._current_locked((key, block_coord))
         if not isinstance(block, np.ndarray):
             return block.decode()  # at-rest Encoded: read-only (frombuffer over bytes)
         # read-only view: in-process clients cannot mutate the store
@@ -276,7 +326,7 @@ class _Server:
         socket server pass an at-rest blob to a codec-capable client
         without a decode/re-encode round."""
         with self._lock:
-            return self._blocks[(key, block_coord)]
+            return self._current_locked((key, block_coord))
 
     def arena_ref(self, key: RegionKey, block_coord: tuple):
         """``(array header, offset, nbytes)`` of the block's arena slot,
@@ -288,7 +338,8 @@ class _Server:
         if self.arena is None:
             return None
         with self._lock:
-            block = self._blocks[(key, block_coord)]
+            bk = (key, block_coord)
+            block = self._current_locked(bk)
             if not isinstance(block, np.ndarray) or block.nbytes == 0:
                 return None
             handle = (self.sid, key, block_coord)
@@ -297,7 +348,8 @@ class _Server:
                 adopted = self.arena.place(handle, block)
                 if adopted is None:
                     return None
-                self._blocks[(key, block_coord)] = adopted
+                self._blocks[bk] = adopted
+                self._in_arena.add(bk)
                 slot = self.arena.locate(handle)
             meta = {"shape": list(block.shape), "dtype": str(block.dtype)}
             return meta, slot[0], slot[1]
@@ -321,6 +373,7 @@ class _Server:
             self._meta.pop(key, None)
             for bk in [bk for bk in self._blocks if bk[0] == key]:
                 self._blocks.pop(bk, None)
+                self._in_arena.discard(bk)
                 if self.arena is not None:
                     self.arena.release((self.sid, bk[0], bk[1]))
 
@@ -329,6 +382,7 @@ class _Server:
         a failed put must not leave orphaned bytes or phantom entries)."""
         with self._lock:
             self._blocks.pop((key, block_coord), None)
+            self._in_arena.discard((key, block_coord))
             if self.arena is not None:
                 self.arena.release((self.sid, key, block_coord))
             meta = self._meta.get(key)
@@ -336,6 +390,19 @@ class _Server:
                 meta.pop(block_coord, None)
                 if not meta:
                     self._meta.pop(key, None)
+
+    def clear(self) -> None:
+        """Purge everything this shard holds — the terminal step of a
+        fleet ``leave`` after the rebalance sweep drained it (payload,
+        directory, and arena slots all go; the shard object stays usable
+        in case the same sid later rejoins)."""
+        with self._lock:
+            if self.arena is not None:
+                for bk in self._blocks:
+                    self.arena.release((self.sid, bk[0], bk[1]))
+            self._blocks.clear()
+            self._meta.clear()
+            self._in_arena.clear()
 
     @property
     def payload_bytes(self) -> int:
@@ -365,6 +432,79 @@ class InProcTransport:
         self.servers = [_Server(i) for i in range(self.num_servers)]
         self._clock = [0.0] * self.num_servers
         self._lock = threading.Lock()
+        self._removed: set[int] = set()  # sids that left the fleet
+        self._view: dict | None = None  # adopted RingView JSON (highest epoch)
+
+    # -- elastic membership --------------------------------------------------------
+    def _check_removed(self, server: int) -> None:
+        with self._lock:
+            gone = server in self._removed
+        if gone:
+            raise TransportError(f"server {server} has left the fleet")
+
+    def add_endpoint(self, endpoint=None, *, sid: "int | None" = None) -> int:
+        """Grow the fleet by one shard (``endpoint`` is ignored in-proc;
+        it mirrors the socket transport's signature).  Reviving a
+        previously-removed ``sid`` reuses its shard object."""
+        with self._lock:
+            if sid is not None and sid in self._removed:
+                self._removed.discard(sid)
+                return sid
+            if sid is None:
+                sid = len(self.servers)
+            while len(self.servers) <= sid:
+                self.servers.append(_Server(len(self.servers)))
+                self._clock.append(0.0)
+            self.num_servers = len(self.servers)
+            self._removed.discard(sid)
+            return sid
+
+    def remove_endpoint(self, sid: int) -> None:
+        """Mark ``sid`` unreachable (the in-proc stand-in for tearing
+        down a connection): subsequent ops raise TransportError."""
+        with self._lock:
+            self._removed.add(sid)
+
+    def reset_liveness(self, server: int) -> None:
+        """Forget any cached unreachability for ``server`` (probe-on-
+        epoch-bump: a rejoining sid must not be served stale answers)."""
+        with self._lock:
+            self._removed.discard(server)
+
+    def known_servers(self) -> list[int]:
+        """Every sid a message could still reach — ring members AND
+        draining (departed-but-unpurged) shards."""
+        with self._lock:
+            return [i for i in range(len(self.servers)) if i not in self._removed]
+
+    def alive(self, server: int) -> bool:
+        with self._lock:
+            return server not in self._removed
+
+    def _adopt_view(self, view: "dict | None") -> "dict | None":
+        with self._lock:
+            if view is not None and (
+                self._view is None or int(view["epoch"]) > int(self._view["epoch"])
+            ):
+                self._view = dict(view)
+            return None if self._view is None else dict(self._view)
+
+    def join(self, server: int, sid: int, view: dict) -> "dict | None":
+        self._check_removed(server)
+        self._account(server, META_MSG_BYTES, "meta")
+        return self._adopt_view(view)
+
+    def leave(self, server: int, sid: int, view: dict, purge: bool = False) -> "dict | None":
+        self._check_removed(server)
+        self._account(server, META_MSG_BYTES, "meta")
+        out = self._adopt_view(view)
+        if purge and 0 <= sid < len(self.servers):
+            self.servers[sid].clear()
+        return out
+
+    def epoch(self, server: int) -> "dict | None":
+        self._check_removed(server)
+        return self._adopt_view(None)
 
     # -- accounting ---------------------------------------------------------------
     def _account(self, server: int, nbytes: int, op: str) -> None:
@@ -380,15 +520,18 @@ class InProcTransport:
 
     # -- Transport message API -----------------------------------------------------
     def store(self, server, key, block_coord, box, payload) -> None:
+        self._check_removed(server)
         self.servers[server].store(key, block_coord, box, payload)
         self._account(server, payload.nbytes, "put")
 
     def fetch(self, server, key, block_coord) -> np.ndarray:
+        self._check_removed(server)
         block = self.servers[server].fetch(key, block_coord)
         self._account(server, block.nbytes, "get")
         return block
 
     def fetch_many(self, server, requests) -> list[np.ndarray]:
+        self._check_removed(server)
         if not requests:
             return []
         shard = self.servers[server]
@@ -416,9 +559,11 @@ class InProcTransport:
         return had
 
     def lookup(self, server, key) -> dict[tuple, tuple[BoundingBox, int]]:
+        self._check_removed(server)
         return self.servers[server].lookup(key)
 
     def keys(self, server) -> list[RegionKey]:
+        self._check_removed(server)
         return self.servers[server].keys()
 
     def drop(self, server, key) -> None:
@@ -467,6 +612,9 @@ class DMSStats:
         "repaired_blocks",    # payload copies re-replicated by repair() sweeps
         "repair_meta_fixes",  # directories re-filled by repair() sweeps
         "lost_blocks",        # repair() found blocks with no surviving replica
+        "rebalanced_blocks",  # blocks migrated onto their ideal epoch-N slot
+        "rebalance_copies",   # payload copies added by rebalance() sweeps
+        "rebalance_trims",    # stale off-slot copies dropped by rebalance()
     )
 
     def __init__(self) -> None:
@@ -526,6 +674,7 @@ class DistributedMemoryStorage:
         transport: Transport | None = None,
         replication: int = 1,
         read_balance: bool = True,
+        membership: RingView | None = None,
     ) -> None:
         self.name = name
         self.domain = domain
@@ -537,20 +686,26 @@ class DistributedMemoryStorage:
         self.transport: Transport = transport or InProcTransport(
             4 if num_servers is None else int(num_servers)
         )
-        self.num_servers = self.transport.num_servers
         if (
             transport is not None
             and num_servers is not None
-            and int(num_servers) != self.num_servers
+            and int(num_servers) != self.transport.num_servers
         ):
             raise ValueError(
-                f"num_servers={num_servers} != transport.num_servers={self.num_servers}"
+                f"num_servers={num_servers} != transport.num_servers="
+                f"{self.transport.num_servers}"
             )
+        # the epoch'd ring is the single source of placement truth: the
+        # genesis view reproduces the legacy frozen range partition
+        # bit-exactly, so a never-resized fleet sees zero change.  The
+        # reference is swapped whole on every membership change (readers
+        # snapshot it once per operation; no lock needed).
+        self._ring: RingView = membership or RingView.genesis(self.transport.num_servers)
         self.replication = int(replication)
-        if not 1 <= self.replication <= self.num_servers:
+        if not 1 <= self.replication <= len(self._ring.servers):
             raise ValueError(
                 f"replication={replication} must be in [1, num_servers="
-                f"{self.num_servers}]"
+                f"{len(self._ring.servers)}]"
             )
         self.read_balance = bool(read_balance)
         self.stats = DMSStats()
@@ -558,6 +713,8 @@ class DistributedMemoryStorage:
         self._read_rotor = itertools.count()  # per-block replica rotation
         self._repair_thread: threading.Thread | None = None
         self._repair_stop = threading.Event()
+        self.rebalancing = False  # a paced sweep is in flight
+        self._last_rebalance: dict | None = None
         # --- virtual-domain construction (paper Fig. 9) ---
         self._grid = tuple(
             -(-s // b) for s, b in zip(domain.shape, self.block_shape)
@@ -570,6 +727,21 @@ class DistributedMemoryStorage:
         # compaction: sfc key -> contiguous virtual rank
         self._virtual_rank = {k: i for i, k in enumerate(keys)}
         self._virtual_size = len(keys)
+
+    @property
+    def num_servers(self) -> int:
+        """Live fleet size under the CURRENT epoch (elastic — grows on
+        :meth:`add_server`, shrinks on :meth:`remove_server`)."""
+        return len(self._ring.servers)
+
+    @property
+    def membership(self) -> RingView:
+        """The current epoch'd ring view (immutable snapshot)."""
+        return self._ring
+
+    @property
+    def epoch(self) -> int:
+        return self._ring.epoch
 
     @property
     def _servers(self) -> list[_Server]:
@@ -589,11 +761,14 @@ class DistributedMemoryStorage:
             (p - l) // b for p, l, b in zip(point, self.domain.lo, self.block_shape)
         )
 
+    def _rank_of(self, block_coord: tuple[int, ...]) -> int:
+        return self._virtual_rank[sfc_index(self._sfc_order, block_coord)]
+
     def home_server(self, block_coord: tuple[int, ...]) -> int:
-        """SFC key -> virtual rank -> range partition over servers."""
-        k = sfc_index(self._sfc_order, block_coord)
-        rank = self._virtual_rank[k]
-        return (rank * self.num_servers) // self._virtual_size
+        """SFC key -> virtual rank -> owning arc of the current ring
+        epoch (the genesis epoch is bit-identical to the legacy
+        ``(rank * N) // V`` range partition)."""
+        return self._ring.owner(self._rank_of(block_coord), self._virtual_size)
 
     def replica_servers(self, block_coord: tuple[int, ...]) -> tuple[int, ...]:
         """The block's home plus the next ``replication - 1`` servers
@@ -643,8 +818,19 @@ class DistributedMemoryStorage:
         return sid if endpoints is None else endpoints[sid]
 
     def _ring_order(self, block_coord: tuple[int, ...]) -> list[int]:
-        home = self.home_server(block_coord)
-        return [(home + i) % self.num_servers for i in range(self.num_servers)]
+        return self._ring.walk(self._rank_of(block_coord), self._virtual_size)
+
+    def _scan_ids(self) -> list[int]:
+        """Sids worth scanning in repair/rebalance sweeps: the current
+        ring members PLUS any still-reachable departed shards (a leave
+        is drained by rebalance before its endpoint is torn down, so
+        departed servers keep serving their blocks until migrated)."""
+        ids = list(self._ring.servers)
+        known = getattr(self.transport, "known_servers", None)
+        if known is not None:
+            have = set(ids)
+            ids.extend(s for s in known() if s not in have)
+        return ids
 
     # -- availability helpers -------------------------------------------------------
     def _alive(self, server: int) -> bool:
@@ -658,8 +844,10 @@ class DistributedMemoryStorage:
         server — least of all server 0 — is a read SPOF), with
         liveness-cached-dead servers tried last (the cache may be stale,
         so they are never skipped outright)."""
-        start = next(self._dir_rotor) % self.num_servers
-        order = [(start + i) % self.num_servers for i in range(self.num_servers)]
+        servers = self._ring.servers
+        n = len(servers)
+        start = next(self._dir_rotor) % n
+        order = [servers[(start + i) % n] for i in range(n)]
         return sorted(order, key=lambda s: not self._alive(s))  # stable
 
     def _count(self, field: str, n: int = 1) -> None:
@@ -742,7 +930,8 @@ class DistributedMemoryStorage:
         ``skip_stat``) as long as some server acknowledged."""
         acked = 0
         last: TransportError | None = None
-        for sid in range(self.num_servers):
+        servers = self._ring.servers
+        for sid in servers:
             try:
                 fn(sid)
                 acked += 1
@@ -754,7 +943,7 @@ class DistributedMemoryStorage:
         if not acked:
             raise TransportError(
                 f"{self.name}: {what} reached no server "
-                f"(all {self.num_servers} down)"
+                f"(all {len(servers)} down)"
             ) from last
 
     def _keys_any(self) -> list[RegionKey]:
@@ -920,7 +1109,8 @@ class DistributedMemoryStorage:
         all-or-fail at replication=1, best-effort past dead servers
         otherwise."""
         last: TransportError | None = None
-        for sid in range(self.num_servers):
+        servers = self._ring.servers
+        for sid in servers:
             try:
                 had = self.transport.put_meta_batch(sid, meta)
             except TransportError as e:
@@ -937,7 +1127,7 @@ class DistributedMemoryStorage:
         if not acked:
             raise TransportError(
                 f"{self.name}: metadata broadcast for {key} reached no server "
-                f"(all {self.num_servers} down)"
+                f"(all {len(servers)} down)"
             ) from last
 
     def _rollback_put(
@@ -1195,10 +1385,12 @@ class DistributedMemoryStorage:
         directory entries re-sent), ``lost`` (blocks beyond healing),
         ``unreachable`` (servers skipped).
         """
+        scan = self._scan_ids()
+        members = set(self._ring.servers)
         reachable: list[int] = []
         dirs: dict[int, dict[RegionKey, dict]] = {}
         keys: set[RegionKey] = set()
-        for sid in range(self.num_servers):
+        for sid in scan:
             try:
                 ks = self.transport.keys(sid)
             except TransportError:
@@ -1211,7 +1403,7 @@ class DistributedMemoryStorage:
             "repaired": 0,
             "meta_fixes": 0,
             "lost": 0,
-            "unreachable": self.num_servers - len(reachable),
+            "unreachable": len(scan) - len(reachable),
         }
         dead: set[int] = set()
         for key in sorted(keys):
@@ -1233,13 +1425,16 @@ class DistributedMemoryStorage:
             for bc, (box, candidates) in sorted(entries.items()):
                 report["scanned"] += 1
                 ring_pos = {s: i for i, s in enumerate(self._ring_order(bc))}
+                # departed-but-draining holders sort after every ring
+                # member (they are valid fetch sources, never targets)
+                rank_of = lambda s: ring_pos.get(s, len(ring_pos) + s)  # noqa: E731
                 holders = sorted(
                     (
                         s
                         for s in candidates
                         if s in dirs and s not in dead and bc in dirs[s].get(key, {})
                     ),
-                    key=ring_pos.__getitem__,
+                    key=rank_of,
                 )
                 homes = list(holders)
                 if len(holders) < self.replication and holders:
@@ -1258,11 +1453,12 @@ class DistributedMemoryStorage:
                     report["lost"] += 1
                     self._count("lost_blocks")
                     continue
-                final[bc] = (box, tuple(sorted(homes, key=ring_pos.__getitem__)))
+                final[bc] = (box, tuple(sorted(homes, key=rank_of)))
             # directory convergence: re-send the full entry set to every
-            # reachable server that is missing entries or has stale homes
+            # reachable ring member that is missing entries or has stale
+            # homes (draining departed servers keep their old directory)
             for sid in reachable:
-                if sid in dead:
+                if sid in dead or sid not in members:
                     continue
                 have = dirs[sid].get(key, {})
                 batch = [
@@ -1350,6 +1546,324 @@ class DistributedMemoryStorage:
         self.stop_auto_repair()
         self.transport.close()
 
+    # -- elastic membership & rebalancing ---------------------------------------
+    def _announce(self, op: str, sid: int, view: dict) -> None:
+        """Best-effort push of a new epoch to every ring member: a
+        membership change must never block on a dead listener —
+        stragglers catch up from any peer via ``epoch`` + adopt-newer."""
+        for target in self._ring.servers:
+            try:
+                if op == "join":
+                    self.transport.join(target, sid, view)
+                else:
+                    self.transport.leave(target, sid, view, False)
+            except TransportError:
+                continue
+
+    def sync_membership(self) -> RingView:
+        """Adopt the newest epoch any reachable ring member holds (a
+        fresh client, or a rebalance resuming after a crash, rediscovers
+        the fleet from any live server)."""
+        best = self._ring
+        for sid in list(best.servers):
+            try:
+                got = self.transport.epoch(sid)
+            except TransportError:
+                continue
+            if got is not None:
+                best = adopt_newer(best, RingView.from_json(got))
+        self._ring = best
+        return best
+
+    def add_server(self, endpoint=None, *, sid: "int | None" = None) -> int:
+        """Grow the fleet live: register the endpoint with the
+        transport, bump the ring epoch (every incumbent donates an equal
+        arc slice to the newcomer — minimal remap), clear any stale-dead
+        liveness answer for the sid (a leave/rejoin on the same port
+        within the backoff window must be probed, not assumed dead), and
+        announce the new view fleet-wide.  Blocks the newcomer now owns
+        migrate on the next :meth:`rebalance`; reads keep following the
+        directory's recorded homes meanwhile, so nothing fails in
+        between.  Returns the new server id."""
+        add_ep = getattr(self.transport, "add_endpoint", None)
+        if add_ep is not None:
+            sid = add_ep(endpoint, sid=sid)
+        elif sid is None:
+            raise ValueError(
+                f"{self.name}: transport {type(self.transport).__name__} cannot "
+                f"add endpoints; pass sid= explicitly"
+            )
+        ring = self._ring.join(sid)
+        self._ring = ring  # atomic whole-object swap; readers snapshot per-op
+        reset = getattr(self.transport, "reset_liveness", None)
+        if reset is not None:
+            reset(sid)
+        self._announce("join", sid, ring.to_json())
+        return int(sid)
+
+    def remove_server(
+        self,
+        sid: int,
+        *,
+        rebalance: bool = True,
+        pacer: "TokenBucket | None" = None,
+        purge: bool = True,
+    ) -> dict:
+        """Shrink the fleet live.  The sid leaves the ring first (no new
+        writes land on it), the new epoch is announced, and a rebalance
+        sweep drains its blocks onto the survivors — the departed server
+        keeps serving reads for blocks the directory still homes on it
+        until each one has migrated, so a paced drain loses no ops.
+        Only then is its remaining payload purged and its endpoint torn
+        down.  ``rebalance=False`` defers the drain (run
+        :meth:`rebalance` later; the purge is skipped too so the data
+        survives).  Returns the rebalance report."""
+        ring = self._ring.leave(sid)
+        self._ring = ring
+        view = ring.to_json()
+        self._announce("leave", sid, view)
+        report: dict = {}
+        if rebalance:
+            report = self.rebalance(pacer=pacer)
+        if rebalance and purge:
+            try:
+                self.transport.leave(sid, sid, view, True)
+            except TransportError:
+                pass  # already dead: its bytes died with it
+            rm = getattr(self.transport, "remove_endpoint", None)
+            if rm is not None:
+                rm(sid)
+        return report
+
+    def rebalance(
+        self,
+        *,
+        pacer: "TokenBucket | None" = None,
+        max_blocks: "int | None" = None,
+    ) -> dict:
+        """One paced rebalance sweep: migrate every block whose ideal
+        placement changed since it was written onto its ideal ring slot
+        under the CURRENT epoch.
+
+        Built on the repair() machinery: the union directory is walked,
+        a recorded replica "holds" a block iff its own directory still
+        has the entry, and per block the sweep (1) stores the payload on
+        the ideal servers that lack it, (2) re-broadcasts the directory
+        entry with ``homes`` = the ideal set to every ring member, and
+        only then (3) trims the now-off-slot copies — so a read at ANY
+        point mid-sweep finds directory homes whose servers still hold
+        payload (zero failed ops during a drain).  SFC arc donation
+        makes the migration minimal: only blocks whose owning arc
+        changed hands move, ~K/N per membership change.
+
+        ``pacer`` (a :class:`TokenBucket`) charges one token per
+        migrated block, yielding to foreground traffic; ``max_blocks``
+        bounds one call (``complete=False`` in the report — call again
+        to resume; the sweep is idempotent, so a crash mid-sweep costs
+        nothing but re-scanning).  Stale copies are trimmed only once
+        the full ideal set holds the block; a partial migration keeps
+        the old holders recorded and lets the next sweep finish.
+        """
+        ring = self._ring
+        report = {
+            "epoch": ring.epoch,
+            "ring_checksum": ring.checksum(),
+            "scanned": 0,
+            "migrated": 0,
+            "copies_added": 0,
+            "trimmed": 0,
+            "lost": 0,
+            "unreachable": 0,
+            "paced_wait_s": 0.0,
+            "complete": True,
+        }
+        self.rebalancing = True
+        try:
+            scan = self._scan_ids()
+            members = list(ring.servers)
+            member_set = set(members)
+            reachable: list[int] = []
+            dirs: dict[int, dict[RegionKey, dict]] = {}
+            keys: set[RegionKey] = set()
+            for sid in scan:
+                try:
+                    ks = self.transport.keys(sid)
+                except TransportError:
+                    continue
+                reachable.append(sid)
+                dirs[sid] = {}
+                keys.update(ks)
+            report["unreachable"] = len(scan) - len(reachable)
+            dead: set[int] = set()
+            budget = None if max_blocks is None else int(max_blocks)
+            for key in sorted(keys):
+                entries: dict[tuple, tuple[BoundingBox, set[int]]] = {}
+                for sid in reachable:
+                    try:
+                        found = self.transport.lookup(sid, key)
+                    except TransportError:
+                        dead.add(sid)
+                        continue
+                    dirs[sid][key] = found
+                    for bc, (box, h) in found.items():
+                        prev = entries.get(bc)
+                        homes = prev[1] if prev else set()
+                        homes.update(decode_homes(h))
+                        entries[bc] = (box, homes)
+                changed: list[tuple[tuple, BoundingBox, tuple[int, ...]]] = []
+                trims: list[tuple[int, tuple, BoundingBox, tuple[int, ...]]] = []
+                for bc, (box, candidates) in sorted(entries.items()):
+                    report["scanned"] += 1
+                    ideal = self.replica_servers(bc)
+                    holders = [
+                        s
+                        for s in candidates
+                        if s in dirs and s not in dead and bc in dirs[s].get(key, {})
+                    ]
+                    need = [s for s in ideal if s not in holders]
+                    stale = [s for s in holders if s not in ideal]
+                    if not need and not stale:
+                        # payload already ideal; converge any member
+                        # directory still recording pre-epoch homes
+                        for sid in members:
+                            have = dirs.get(sid, {}).get(key, {})
+                            if sid in dead or sid not in dirs:
+                                continue
+                            if bc not in have or decode_homes(have[bc][1]) != ideal:
+                                changed.append((bc, box, ideal))
+                                break
+                        continue
+                    if budget is not None and report["migrated"] >= budget:
+                        report["complete"] = False
+                        continue
+                    if not holders:
+                        report["lost"] += 1
+                        self._count("lost_blocks")
+                        continue
+                    if pacer is not None:
+                        report["paced_wait_s"] += pacer.take(1.0)
+                    payload = None
+                    sources = [s for s in ideal if s in holders] + [
+                        s for s in holders if s not in ideal
+                    ]
+                    for src in sources:
+                        try:
+                            payload = self.transport.fetch(src, key, bc)
+                            break
+                        except (TransportError, KeyError):
+                            continue
+                    if payload is None:
+                        report["lost"] += 1
+                        self._count("lost_blocks")
+                        continue
+                    placed = [s for s in ideal if s in holders]
+                    added = 0
+                    for dst in need:
+                        if dst in dead:
+                            continue
+                        try:
+                            self.transport.store(dst, key, bc, box, payload)
+                            placed.append(dst)
+                            added += 1
+                        except TransportError:
+                            dead.add(dst)
+                    final = tuple(s for s in ideal if s in placed)
+                    report["migrated"] += 1
+                    report["copies_added"] += added
+                    if len(final) == len(ideal):
+                        changed.append((bc, box, final))
+                        trims.extend((s, bc, box, final) for s in stale)
+                    else:
+                        # partial migration (some ideal target is down):
+                        # keep every live holder recorded so redundancy
+                        # never shrinks; the next sweep finishes the move
+                        keep = tuple(dict.fromkeys(list(final) + stale))
+                        changed.append((bc, box, keep or tuple(holders)))
+                # (2) directory convergence BEFORE any trim: every member
+                # must point at servers that hold payload at all times
+                if changed:
+                    batch = [
+                        (key, bc, box, encode_homes(h)) for bc, box, h in changed
+                    ]
+                    for sid in members:
+                        if sid in dead or sid not in dirs:
+                            continue
+                        try:
+                            self.transport.put_meta_batch(sid, batch)
+                        except TransportError:
+                            dead.add(sid)
+                # (3) trim the off-slot copies; drop_block also removes
+                # that server's directory entry, so ring members get the
+                # entry re-sent (directories stay complete everywhere)
+                for s, bc, box, h in trims:
+                    try:
+                        self.transport.drop_block(s, key, bc)
+                        report["trimmed"] += 1
+                    except (TransportError, KeyError):
+                        continue
+                    if s in member_set:
+                        try:
+                            self.transport.put_meta(s, key, bc, box, encode_homes(h))
+                        except TransportError:
+                            dead.add(s)
+            if report["migrated"] or report["trimmed"]:
+                self.stats.add(
+                    rebalanced_blocks=report["migrated"],
+                    rebalance_copies=report["copies_added"],
+                    rebalance_trims=report["trimmed"],
+                )
+            report["directory_checksums"] = self.directory_checksums()
+            agreeing = {
+                c for c in report["directory_checksums"].values() if c is not None
+            }
+            report["directories_agree"] = len(agreeing) <= 1
+            self._last_rebalance = report
+        finally:
+            self.rebalancing = False
+        return report
+
+    def directory_checksums(self) -> dict:
+        """Canonical digest of each ring member's directory (keys,
+        block coords, extents, homes).  When every member answers the
+        same checksum the directories agree byte-for-byte — the
+        payload/directory-divergence tripwire the rebalance report and
+        operator dashboards read."""
+        out: dict[int, "str | None"] = {}
+        for sid in self._ring.servers:
+            try:
+                entries = []
+                for key in sorted(self.transport.keys(sid)):
+                    found = self.transport.lookup(sid, key)
+                    for bc, (box, h) in sorted(found.items()):
+                        entries.append(
+                            [
+                                str(key),
+                                [int(c) for c in bc],
+                                [int(c) for c in box.lo],
+                                [int(c) for c in box.hi],
+                                list(decode_homes(h)),
+                            ]
+                        )
+                blob = json.dumps(entries, separators=(",", ":"))
+                out[sid] = hashlib.sha256(blob.encode()).hexdigest()[:12]
+            except TransportError:
+                out[sid] = None
+        return out
+
+    def rebalance_stats(self) -> dict:
+        """Operator snapshot for ``storage_stats()["rebalance"]``: the
+        current epoch + ring checksum, whether a sweep is in flight, and
+        the last sweep's full report (incl. per-member directory
+        checksums captured at its end)."""
+        ring = self._ring
+        return {
+            "epoch": ring.epoch,
+            "servers": list(ring.servers),
+            "ring_checksum": ring.checksum(),
+            "rebalancing": self.rebalancing,
+            "last_sweep": self._last_rebalance,
+        }
+
     # -- stats -----------------------------------------------------------------
     def server_load(self, *, by_role: bool = False) -> "list[int] | dict":
         """Payload bytes per server.
@@ -1365,19 +1879,28 @@ class DistributedMemoryStorage:
         usual case).  Balance checks for the SFC range partition must use
         the ``primary`` view at R > 1.
         """
-        total = [self.transport.payload_bytes(s) for s in range(self.num_servers)]
+        ring = self._ring
+        cap = max(ring.servers) + 1  # lists stay sid-indexed (sparse after a leave)
+        total = [0] * cap
+        for s in ring.servers:
+            try:
+                total[s] = self.transport.payload_bytes(s)
+            except TransportError:
+                total[s] = 0
         if not by_role:
             return total
-        prim_vol = [0] * self.num_servers
-        repl_vol = [0] * self.num_servers
+        prim_vol = [0] * cap
+        repl_vol = [0] * cap
         for key in self._keys_any():
             for bc, (box, h) in self._lookup_union2(key).items():
                 homes = decode_homes(h)
-                prim_vol[homes[0]] += box.volume
+                if homes[0] < cap:
+                    prim_vol[homes[0]] += box.volume
                 for sid in homes[1:]:
-                    repl_vol[sid] += box.volume
+                    if sid < cap:
+                        repl_vol[sid] += box.volume
         primary = []
-        for sid in range(self.num_servers):
+        for sid in range(cap):
             vol = prim_vol[sid] + repl_vol[sid]
             primary.append(total[sid] * prim_vol[sid] // vol if vol else 0)
         return {

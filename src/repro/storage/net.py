@@ -67,7 +67,7 @@ import subprocess
 import sys
 import threading
 import time
-from typing import Iterable, Sequence
+from typing import Iterable, Mapping, Sequence
 
 import numpy as np
 
@@ -77,12 +77,14 @@ from repro.storage.codec import (  # noqa: F401 — array codec re-exported
     WIRE_CODECS,
     Encoded,
     check_codec,
+    codec_names,
     decode_array,  # noqa: F401
     decode_block,
     encode_array,  # noqa: F401
     encode_block,
     is_lossless,
     raw_nbytes,
+    resolve_codec,
 )
 from repro.storage.disk import _bb_from_json, _bb_to_json, _key_from_json, _key_to_json
 from repro.storage.dms import (  # noqa: F401 — TransportError re-exported
@@ -226,7 +228,14 @@ class SocketTransport:
       * ``wire_codec`` — compress payload blocks on the wire with one of
         ``codec.WIRE_CODECS`` ("zlib" lossless; "bf16"/"int8" lossy for
         float blocks, lossless-zlib fallback otherwise).  Negotiated per
-        connection; an old server degrades the link to raw.
+        connection; an old server degrades the link to raw.  A *mapping*
+        is a per-key override table — glob patterns over region keys
+        (``{"labels/*": "zlib", "feat/*": "bf16"}``, first hit wins, no
+        hit means raw) — so label tiles and float features each get
+        their best codec on ONE connection.  Per-key tagging inside a
+        single ``fetch_many`` needs a server that advertises the ``pkc``
+        capability; older servers serve the map per request (store/
+        fetch) and raw gathers.
       * ``shm`` — ``"off"`` | ``"auto"`` | ``"require"``: map the
         server's shared-memory arena when co-located so fetch payloads
         arrive by ``(offset, nbytes)`` reference instead of a TCP
@@ -271,14 +280,76 @@ class SocketTransport:
             addr: threading.Lock() for addr in set(self.endpoints)
         }
         # per-connection negotiation outcome: {"codec": str|None,
-        # "window": ShmWindow|None}; absent until the first dial
+        # "codecs": set, "pkc": bool, "window": ShmWindow|None};
+        # absent until the first dial
         self._neg: dict[tuple[str, int], dict] = {}
         self._dead: dict[tuple[str, int], float] = {}  # addr -> retry-at (monotonic)
         self._probe_failed: set[tuple[str, int]] = set()  # probed dead this window
+        self._removed: set[int] = set()  # sids torn down by remove_endpoint
+        self._ep_lock = threading.Lock()  # guards endpoint-table mutation
         self._closed = False
         self._stats_lock = threading.Lock()
         self._elapsed = 0.0
         self._busy_until = 0.0  # interval-union bookkeeping for virtual_time
+
+    # -- elastic membership ---------------------------------------------------------
+    def add_endpoint(self, endpoint, *, sid: "int | None" = None) -> int:
+        """Register one more server address live and return its sid.
+        Re-adding a removed sid (same or new address) revives it; the
+        liveness cache for the address is cleared so the newcomer is
+        probed, not served a stale-dead answer."""
+        addr = _parse_endpoint(endpoint)
+        with self._ep_lock:
+            if sid is None:
+                sid = len(self.endpoints)
+            while len(self.endpoints) <= sid:
+                self.endpoints.append(addr)
+            self.endpoints[sid] = addr
+            self._conn_locks.setdefault(addr, threading.Lock())
+            self._removed.discard(sid)
+            self.num_servers = len(self.endpoints)
+        self.reset_liveness(sid)
+        return sid
+
+    def remove_endpoint(self, sid: int) -> None:
+        """Tear down a departed server's path: its sid keeps its slot in
+        the endpoint table (sids are indices — survivors must not shift)
+        but every subsequent op fails fast with TransportError."""
+        with self._ep_lock:
+            self._removed.add(sid)
+        addr = self.endpoints[sid]
+        if not any(
+            self.endpoints[i] == addr
+            for i in range(len(self.endpoints))
+            if i not in self._removed
+        ):
+            # last sid on that address: drop the connection too
+            lock = self._conn_locks.get(addr)
+            if lock is not None and lock.acquire(timeout=1.0):
+                try:
+                    self._drop_connection(addr)
+                finally:
+                    lock.release()
+
+    def reset_liveness(self, server: int) -> None:
+        """Forget cached deadness for the server's address and force a
+        re-dial (+ re-negotiation) on the next request — the epoch-bump
+        probe that keeps a leave/rejoin on the same port within the
+        backoff window from being served stale-dead answers."""
+        addr = self.endpoints[server]
+        self._dead.pop(addr, None)
+        self._probe_failed.discard(addr)
+        lock = self._conn_locks.get(addr)
+        if lock is not None and lock.acquire(timeout=1.0):
+            try:
+                self._drop_connection(addr)
+            finally:
+                lock.release()
+
+    def known_servers(self) -> list[int]:
+        """Every sid a frame could still reach (removed ones excluded)."""
+        with self._ep_lock:
+            return [i for i in range(len(self.endpoints)) if i not in self._removed]
 
     # -- connection management ----------------------------------------------------
     def _connection(self, addr: tuple[str, int]) -> socket.socket:
@@ -312,14 +383,21 @@ class SocketTransport:
         """
         self._close_window(addr)
         hello = {"op": "hello", "shm": self.shm != "off"}
-        if self.wire_codec:
-            hello["codecs"] = [self.wire_codec]
+        needed = codec_names(self.wire_codec)
+        if needed:
+            hello["codecs"] = needed
         wire = send_frame(sock, hello)
         rheader, _, rwire = recv_frame(sock)
         self._account("meta", wire + rwire)
-        neg = {"codec": None, "window": None}
+        neg = {"codec": None, "codecs": set(), "pkc": False, "window": None}
         if rheader.get("ok"):
-            if self.wire_codec and self.wire_codec in rheader.get("codecs", ()):
+            supported = set(rheader.get("codecs", ()))
+            neg["codecs"] = {c for c in needed if c in supported}
+            neg["pkc"] = bool(rheader.get("pkc"))
+            if (
+                isinstance(self.wire_codec, str)
+                and self.wire_codec in neg["codecs"]
+            ):
                 neg["codec"] = self.wire_codec
             desc = rheader.get("shm")
             if desc:
@@ -351,7 +429,10 @@ class SocketTransport:
     # -- liveness cache -------------------------------------------------------------
     def alive(self, server: int) -> bool:
         """Cheap cache read (no network): False while the endpoint's last
-        failure is inside its ``dead_backoff`` window."""
+        failure is inside its ``dead_backoff`` window (or the sid was
+        removed from the fleet)."""
+        if server in self._removed:
+            return False
         until = self._dead.get(self.endpoints[server])
         return until is None or time.monotonic() >= until
 
@@ -393,9 +474,33 @@ class SocketTransport:
         self._dead.pop(addr, None)
         self._probe_failed.discard(addr)
 
+    def _codec_for(self, neg: "dict | None", key) -> "str | None":
+        """The negotiated codec this request should use: per-key
+        resolution for mapping specs (only codecs the server supports),
+        the single negotiated codec otherwise."""
+        if neg is None:
+            return None
+        if isinstance(self.wire_codec, Mapping):
+            if key is None:
+                return None
+            c = resolve_codec(self.wire_codec, key)
+            return c if c in neg["codecs"] else None
+        return neg["codec"]
+
     def _request(
-        self, server: int, header: dict, payload=b"", *, encode_arr=None, data_plane=False
+        self,
+        server: int,
+        header: dict,
+        payload=b"",
+        *,
+        encode_arr=None,
+        data_plane=False,
+        codec_key=None,
     ) -> tuple[dict, bytearray, int]:
+        if server in self._removed:
+            raise TransportError(
+                f"server {server} has left the fleet; {header.get('op')!r} refused"
+            )
         addr = self.endpoints[server]
         t0 = time.perf_counter()
         with self._conn_locks[addr]:
@@ -411,12 +516,13 @@ class SocketTransport:
             # hello) above has happened
             neg = self._neg.get(addr)
             if data_plane and neg is not None:
-                if neg["codec"]:
-                    header["codec"] = neg["codec"]
+                codec = self._codec_for(neg, codec_key)
+                if codec:
+                    header["codec"] = codec
                 if neg["window"] is not None:
                     header["shm"] = True
             if encode_arr is not None:
-                meta, payload = encode_block(encode_arr, neg["codec"] if neg else None)
+                meta, payload = encode_block(encode_arr, self._codec_for(neg, codec_key))
                 header["array"] = meta
             try:
                 wire = send_frame(sock, header, payload)  # relint: allow(blocking-under-lock) — the per-connection lock IS the wire serialization: one request owns the socket for its full round-trip
@@ -509,7 +615,7 @@ class SocketTransport:
         # the payload is encoded inside _request once the connection's
         # negotiated codec is known (stores always ride the socket; the
         # server places them into its arena for later shm fetches)
-        _, _, wire = self._request(server, header, encode_arr=arr)
+        _, _, wire = self._request(server, header, encode_arr=arr, codec_key=key)
         self._account("put", wire, raw=arr.nbytes)
 
     def fetch(self, server, key, block_coord) -> np.ndarray:
@@ -519,7 +625,9 @@ class SocketTransport:
             "key": _key_to_json(self._scoped(key)),
             "coord": list(block_coord),
         }
-        rheader, rpayload, wire = self._request(server, header, data_plane=True)
+        rheader, rpayload, wire = self._request(
+            server, header, data_plane=True, codec_key=key
+        )
         meta = rheader["array"]
         if "shm" in meta:
             arr = self._read_shm(server, meta)
@@ -541,14 +649,29 @@ class SocketTransport:
         """
         if not requests:
             return []
-        header = {
-            "op": "fetch_many",
-            "sid": server,
-            "reqs": [
+        per_key = isinstance(self.wire_codec, Mapping)
+        if per_key:
+            # per-request codec tags ride in the reqs themselves when the
+            # server negotiated the pkc capability; _request leaves the
+            # top-level codec unset for mapping specs, and against an old
+            # server the tags below are filtered out (raw gather)
+            neg = self._neg.get(self.endpoints[server])
+            reqs = [
+                [
+                    _key_to_json(self._scoped(key)),
+                    list(coord),
+                    self._codec_for(neg, key) if neg and neg["pkc"] else None,
+                ]
+                for key, coord in requests
+            ]
+            if not (neg and neg["pkc"]):
+                reqs = [r[:2] for r in reqs]
+        else:
+            reqs = [
                 [_key_to_json(self._scoped(key)), list(coord)]
                 for key, coord in requests
-            ],
-        }
+            ]
+        header = {"op": "fetch_many", "sid": server, "reqs": reqs}
         rheader, rpayload, wire = self._request(server, header, data_plane=True)
         out: list[np.ndarray] = []
         view = memoryview(rpayload)
@@ -645,6 +768,37 @@ class SocketTransport:
         rheader, _, _ = self._request(server, {"op": "payload_bytes", "sid": server})
         return int(rheader["nbytes"])
 
+    def join(self, server: int, sid: int, view: dict) -> "dict | None":
+        """Announce ``sid``'s join under the given RingView JSON; the
+        host adopts it if newer and returns the view it now holds."""
+        rheader, _, wire = self._request(
+            server, {"op": "join", "sid": server, "member": sid, "view": view}
+        )
+        self._account("meta", wire)
+        return rheader.get("view")
+
+    def leave(self, server: int, sid: int, view: dict, purge: bool = False) -> "dict | None":
+        """Announce ``sid``'s leave; ``purge=True`` (sent to the host of
+        the departed shard once the drain finished) also clears that
+        shard's payload, directory, and arena slots."""
+        header = {
+            "op": "leave",
+            "sid": server,
+            "member": sid,
+            "view": view,
+            "purge": bool(purge),
+        }
+        rheader, _, wire = self._request(server, header)
+        self._account("meta", wire)
+        return rheader.get("view")
+
+    def epoch(self, server: int) -> "dict | None":
+        """The fleet view this host currently holds (RingView JSON), or
+        None when it was never told one."""
+        rheader, _, wire = self._request(server, {"op": "epoch", "sid": server})
+        self._account("meta", wire)
+        return rheader.get("view")
+
     def ping(self, server: int) -> list[int]:
         """Liveness probe; returns the shard ids the endpoint hosts."""
         rheader, _, _ = self._request(server, {"op": "ping", "sid": server})
@@ -673,7 +827,7 @@ class SocketTransport:
         # wrapped into TransportError by _request (never a raw mid-frame
         # error reaching the caller)
         self._closed = True
-        for addr, lock in self._conn_locks.items():
+        for addr, lock in list(self._conn_locks.items()):
             acquired = lock.acquire(timeout=1.0)
             try:
                 self._drop_connection(addr)
@@ -715,6 +869,11 @@ class _NetServer(socketserver.ThreadingTCPServer):
         self.at_rest = bool(at_rest)
         self.arena: ShmArena | None = None
         self._arena_lock = threading.Lock()
+        # fleet membership view (RingView JSON) adopted via join/leave
+        # announcements: highest epoch wins, served back on every
+        # membership op so any client/server can catch up from any peer
+        self.fleet_view: dict | None = None
+        self._view_lock = threading.Lock()
         # REPRO_NET_COMPAT=1 makes this process behave like a pre-codec
         # server (hello is an unknown op, every payload raw) — the
         # mixed-fleet compatibility tests run against the real code path
@@ -734,16 +893,27 @@ class _NetServer(socketserver.ThreadingTCPServer):
                     shard.arena = self.arena
             return self.arena
 
-    def _encode_for_reply(self, shard: _Server, key, coord, header: dict):
+    def _adopt_view(self, view: "dict | None") -> "dict | None":
+        with self._view_lock:
+            if view is not None and (
+                self.fleet_view is None
+                or int(view["epoch"]) > int(self.fleet_view["epoch"])
+            ):
+                self.fleet_view = dict(view)
+            return None if self.fleet_view is None else dict(self.fleet_view)
+
+    def _encode_for_reply(self, shard: _Server, key, coord, header: dict, codec=None):
         """(meta, buf) for one fetched block, honouring the request's
         negotiated data plane: shm reference > at-rest passthrough >
-        wire codec > raw."""
+        wire codec > raw.  ``codec`` overrides the header's connection-
+        level codec (per-key tags inside a fetch_many)."""
         if header.get("shm"):
             ref = shard.arena_ref(key, coord)
             if ref is not None:
                 meta, off, nbytes = ref
                 return dict(meta, shm=[off, nbytes]), b""
-        codec = header.get("codec")
+        if codec is None:
+            codec = header.get("codec")
         block = shard.fetch_resident(key, coord)
         if isinstance(block, Encoded):
             if codec:  # codec-capable client: ship the resident blob as-is
@@ -762,12 +932,30 @@ class _NetServer(socketserver.ThreadingTCPServer):
                 "ok": True,
                 "sids": sorted(self.shards),
                 "codecs": [c for c in WIRE_CODECS if c != "raw"],
+                "pkc": True,  # per-key codec tags accepted in fetch_many reqs
             }
             if header.get("shm"):
                 arena = self._ensure_arena()
                 if arena is not None:
                     resp["shm"] = arena.describe()
             return resp, b""
+        if op == "epoch":
+            if self.compat:
+                raise ValueError(f"unknown op {op!r}")
+            return {"ok": True, "view": self._adopt_view(None)}, b""
+        if op == "join":
+            if self.compat:
+                raise ValueError(f"unknown op {op!r}")
+            return {"ok": True, "view": self._adopt_view(header.get("view"))}, b""
+        if op == "leave":
+            if self.compat:
+                raise ValueError(f"unknown op {op!r}")
+            view = self._adopt_view(header.get("view"))
+            if header.get("purge"):
+                departed = self.shards.get(header.get("member"))
+                if departed is not None:
+                    departed.clear()
+            return {"ok": True, "view": view}, b""
         sid = header.get("sid")
         if sid not in self.shards:
             raise ValueError(f"shard {sid} not hosted here (have {sorted(self.shards)})")
@@ -802,9 +990,14 @@ class _NetServer(socketserver.ThreadingTCPServer):
             # payloads are never concatenated server-side
             metas, bufs = [], []
             off = 0
-            for kj, coord in header["reqs"]:
+            for req in header["reqs"]:
+                kj, coord = req[0], req[1]
                 meta, buf = self._encode_for_reply(
-                    shard, _key_from_json(kj), tuple(coord), header
+                    shard,
+                    _key_from_json(kj),
+                    tuple(coord),
+                    header,
+                    codec=req[2] if len(req) > 2 else None,
                 )
                 n = _nbytes(buf)
                 if "shm" not in meta:
@@ -1069,6 +1262,29 @@ class ServerGroup:
 
     def transport(self, **kw) -> SocketTransport:
         return SocketTransport(self.endpoints, **kw)
+
+    def add_server(self, *, sid: int | None = None, **kw) -> tuple[int, tuple[str, int]]:
+        """Start one more shard host (for elastic-join tests/deploys):
+        boots a fresh :class:`ServerProcess` for ``sid`` (default: next
+        free id), appends it to the group, and returns ``(sid,
+        address)`` — feed both to ``DistributedMemoryStorage.
+        add_server`` to bring it into the ring."""
+        sid = (max((s for p in self.procs for s in p.sids), default=-1) + 1
+               if sid is None else int(sid))
+        sp = ServerProcess([sid], **kw).start()
+        self.procs.append(sp)
+        if sid < len(self.endpoints):
+            self.endpoints[sid] = sp.address
+        else:
+            self.endpoints.extend([None] * (sid - len(self.endpoints)))
+            self.endpoints.append(sp.address)
+        return sid, sp.address
+
+    def proc_for(self, sid: int) -> ServerProcess | None:
+        for p in self.procs:
+            if int(sid) in p.sids:
+                return p
+        return None
 
     def close(self) -> None:
         for p in self.procs:

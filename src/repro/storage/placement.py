@@ -82,6 +82,24 @@ def size_threshold(max_bytes: int, tier: str, **kw) -> PlacementRule:
     )
 
 
+def when(
+    cond: Callable[[RegionKey, BoundingBox, int, np.dtype], bool],
+    tier: str,
+    *,
+    label: str | None = None,
+    **kw,
+) -> PlacementRule:
+    """The general rule: route regions matching an arbitrary predicate
+    ``cond(key, bb, nbytes, dtype)`` to ``tier``.  The named helpers are
+    special cases of this; use it for ad-hoc routing (e.g. steering a
+    timestamp range to the DMS tier while an elastic fleet rebalances)."""
+    return PlacementRule(
+        match=cond,
+        placement=Placement(tier=tier, **kw),
+        label=label or f"when:{getattr(cond, '__name__', 'cond')}->{tier}",
+    )
+
+
 def dtype_tier(dtypes: Sequence, tier: str, **kw) -> PlacementRule:
     """Route payloads of the given dtypes to ``tier`` (e.g. uint8 masks
     are cheap to recompute — keep them out of the memory tier)."""

@@ -68,9 +68,11 @@ class ShmArena:
 
     First-fit free-list allocator over one segment; slots are keyed by
     an opaque hashable ``handle`` (the server uses ``(sid, key,
-    coord)``).  All methods are thread-safe.  ``place`` returns ``None``
-    when the block doesn't fit — callers must degrade to heap residency
-    + socket payloads, never fail the store.
+    coord)``).  All methods are thread-safe.  Under pressure ``place``
+    evicts least-recently-fetched residents (their bytes move to a heap
+    ledger the owning shard reclaims on its next read) and only returns
+    ``None`` when the block doesn't fit even then — callers degrade to
+    heap residency + socket payloads, never fail the store.
     """
 
     def __init__(self, capacity: int, name: str | None = None):
@@ -89,6 +91,14 @@ class ShmArena:
         self._used: dict[object, tuple[int, int]] = {}  # handle -> (off, size)
         self._quarantine: list[tuple[float, int, int]] = []  # (free_at, off, size)
         self._closed = False
+        # LRU eviction state: fetch-recency clock per resident handle,
+        # and the heap ledger holding evicted blocks' bytes until their
+        # owning shard reclaims them (lazily, on its next read) — an
+        # eviction demotes a block to heap residency, never loses it
+        self._recency: dict[object, int] = {}
+        self._evicted: dict[object, bytes] = {}
+        self._seq = 0
+        self.evictions = 0
 
     # -- allocation ----------------------------------------------------
 
@@ -151,8 +161,14 @@ class ShmArena:
                 self._reclaim_locked(now, force=True)
                 off = self._alloc_locked(nbytes)
             if off is None:
+                # still full: evict cold residents (LRU by fetch recency)
+                off = self._evict_locked(nbytes, keep=handle)
+            if off is None:
                 return None
             self._used[handle] = (off, nbytes)
+            self._seq += 1
+            self._recency[handle] = self._seq
+            self._evicted.pop(handle, None)  # a re-place supersedes any saved copy
         dst = np.frombuffer(self._shm.buf, dtype=np.uint8, count=nbytes, offset=off)
         try:
             dst[:] = arr.view(np.uint8).reshape(-1)
@@ -164,6 +180,43 @@ class ShmArena:
         view.setflags(write=False)
         return view
 
+    def _evict_locked(self, nbytes: int, keep) -> int | None:
+        """Evict least-recently-fetched residents until ``nbytes`` fits.
+        Each victim's bytes are saved to the heap ledger first (its
+        owning shard re-homes them via :meth:`claim_or_touch` on the
+        next read), then its slot goes straight to the free list — same
+        immediate-reuse semantics as the force-reclaim path, and the
+        block itself is demoted, never dropped."""
+        order = sorted(self._used, key=lambda h: self._recency.get(h, 0))
+        for victim in order:
+            if victim == keep:
+                continue
+            off, size = self._used.pop(victim)
+            self._evicted[victim] = bytes(self._shm.buf[off : off + size])
+            self._recency.pop(victim, None)
+            self.evictions += 1
+            self._insert_free_locked(off, size)
+            got = self._alloc_locked(nbytes)
+            if got is not None:
+                return got
+        return None
+
+    def claim_or_touch(self, handle) -> bytes | None:
+        """Either hand back an evicted block's saved bytes (consuming
+        the ledger entry — the caller re-homes them on its heap) or, for
+        a still-resident block, bump its fetch recency and return
+        ``None``.  The shard calls this on every read of an
+        arena-resident block, which is what makes the eviction order
+        *fetch* recency rather than placement order."""
+        with self._lock:
+            raw = self._evicted.pop(handle, None)
+            if raw is not None:
+                return raw
+            if handle in self._used:
+                self._seq += 1
+                self._recency[handle] = self._seq
+            return None
+
     def locate(self, handle) -> tuple[int, int] | None:
         """(offset, nbytes) of a resident block, or ``None``."""
         with self._lock:
@@ -171,6 +224,8 @@ class ShmArena:
 
     def _release_locked(self, handle) -> None:
         slot = self._used.pop(handle, None)
+        self._recency.pop(handle, None)
+        self._evicted.pop(handle, None)
         if slot is not None:
             self._quarantine.append((time.monotonic() + _QUARANTINE_S, slot[0], slot[1]))
 
@@ -193,6 +248,8 @@ class ShmArena:
         with self._lock:
             self._closed = True
             self._used.clear()
+            self._recency.clear()
+            self._evicted.clear()
         if unlink:
             try:
                 self._shm.unlink()

@@ -821,7 +821,8 @@ class TieredStore:
         dms_transport=None,
         replication: int = 1,
         repair_interval: float | None = None,
-        wire_codec: str | None = None,
+        wire_codec=None,
+        membership=None,
     ) -> "TieredStore":
         """The paper-shaped stack: bounded RAM -> DISK (ADIOS-style) -> DMS.
 
@@ -841,12 +842,22 @@ class TieredStore:
         rejoins empty is re-filled until every block has R live copies
         again; ``close()`` stops the sweep.
 
-        ``wire_codec`` compresses the DMS tier's payloads on the wire
-        (one of ``repro.storage.codec.WIRE_CODECS``; negotiated per
-        connection, old servers degrade the link to raw).  It requires a
-        socket ``dms_transport`` — in-process shards move no wire bytes,
-        so a codec there would only burn CPU — and must be set before
-        the transport's first use (negotiation happens at dial time).
+        ``wire_codec`` compresses the DMS tier's payloads on the wire:
+        either one codec name (``repro.storage.codec.WIRE_CODECS``) for
+        every block, or a per-key glob mapping such as ``{"labels/*":
+        "zlib", "feat/*": "bf16"}`` routing each region key to its own
+        codec (unmatched keys ride raw).  Negotiated per connection, old
+        servers degrade the link to raw.  It requires a socket
+        ``dms_transport`` — in-process shards move no wire bytes, so a
+        codec there would only burn CPU — and must be set before the
+        transport's first use (negotiation happens at dial time).
+
+        ``membership`` seeds the DMS tier's elastic fleet view (a
+        :class:`~repro.storage.membership.RingView`); leave ``None`` for
+        the genesis ring over the transport's servers.  The DMS tier's
+        ``add_server``/``remove_server``/``rebalance`` then grow and
+        shrink the bottom tier live — reach it via
+        ``store.tiers[-1].backend``.
         """
         from repro.storage.codec import check_codec
         from repro.storage.disk import DiskStorage
@@ -866,7 +877,7 @@ class TieredStore:
             domain, block_shape,
             num_servers if dms_transport is None else None,
             name=f"{name}-DMS", transport=dms_transport,
-            replication=replication,
+            replication=replication, membership=membership,
         )
         if repair_interval is not None:
             dms.start_auto_repair(repair_interval)

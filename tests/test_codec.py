@@ -239,14 +239,26 @@ def test_arena_replace_release_and_pressure_reclaim():
         for h, a in blocks.items():
             assert arena.place(h, a) is not None
         assert arena.used_bytes == 4096
-        # full: a fifth block has nowhere to go
-        assert arena.place("b4", np.ones(1024, np.uint8)) is None
-        # replacing an existing handle succeeds (its own slot frees)
+        # full: a fifth block evicts the least-recently-fetched resident
+        # (b0 — never touched since placement) to the heap ledger
+        assert arena.place("b4", np.ones(1024, np.uint8)) is not None
+        assert arena.evictions == 1
+        assert arena.locate("b0") is None
+        saved = arena.claim_or_touch("b0")  # shard reclaims the bytes
+        assert saved is not None
+        np.testing.assert_array_equal(
+            np.frombuffer(saved, np.uint8), blocks["b0"]
+        )
+        assert arena.claim_or_touch("b0") is None  # ledger entry consumed
+        # replacing an existing handle succeeds (its own slot frees);
+        # it re-enters full, so the now-coldest resident (b1) is demoted
         assert arena.place("b0", np.full(1024, 9, np.uint8)) is not None
+        assert arena.locate("b1") is None
         # release everything, then place one arena-sized block: only
         # works if quarantine is drained early AND the slots coalesce
         for h in blocks:
-            arena.release(h)
+            arena.release(h)  # b1's release drops its ledger copy too
+        arena.release("b4")
         assert arena.used_bytes == 0
         big = np.arange(4096, dtype=np.uint8)
         view = arena.place("big", big)
@@ -277,3 +289,78 @@ def test_window_attach_rejects_wrong_token_and_missing_segment():
     finally:
         arena.close()
     assert ShmWindow.attach({"name": "repro_no_such_seg", "token": "00"}) is None
+
+
+# ---------------------------------------------------------------------------
+# per-key codec override maps
+# ---------------------------------------------------------------------------
+class _Key:
+    def __init__(self, namespace, name):
+        self.namespace = namespace
+        self.name = name
+
+
+def test_check_codec_normalizes_and_validates_mappings():
+    spec = check_codec({"labels/*": "zlib", "feat/*": "bf16", "tmp/*": "raw"})
+    assert spec == {"labels/*": "zlib", "feat/*": "bf16", "tmp/*": None}
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        check_codec({"a/*": "gzip"})
+    with pytest.raises(ValueError, match="non-empty str"):
+        check_codec({"": "zlib"})
+    with pytest.raises(ValueError, match="nested"):
+        check_codec({"a/*": {"b": "zlib"}})
+
+
+def test_codec_names_lists_distinct_non_raw_codecs():
+    from repro.storage.codec import codec_names
+
+    assert codec_names(None) == []
+    assert codec_names("raw") == []
+    assert codec_names("zlib") == ["zlib"]
+    assert codec_names({"a/*": "zlib", "b/*": "bf16", "c/*": "zlib", "d": None}) == [
+        "bf16",
+        "zlib",
+    ]
+
+
+def test_resolve_codec_matches_first_hit_in_insertion_order():
+    from repro.storage.codec import resolve_codec
+
+    spec = {"labels/*": "zlib", "*mask*": "int8", "feat": "bf16"}
+    assert resolve_codec(spec, _Key("labels", "nuclei")) == "zlib"
+    # bare name then bare namespace also match the glob
+    assert resolve_codec(spec, _Key("x", "tumor_mask_v2")) == "int8"
+    assert resolve_codec(spec, _Key("feat", "embedding")) == "bf16"
+    # insertion order wins: labels/mask hits the labels/* rule first
+    assert resolve_codec(spec, _Key("labels", "mask")) == "zlib"
+    # no hit -> raw (None); plain strings and single-codec specs pass through
+    assert resolve_codec(spec, _Key("rgb", "tile")) is None
+    assert resolve_codec(spec, "labels/other") == "zlib"
+    assert resolve_codec("zlib", _Key("any", "thing")) == "zlib"
+    assert resolve_codec(None, _Key("any", "thing")) is None
+
+
+# ---------------------------------------------------------------------------
+# arena LRU eviction order (by FETCH recency, not placement order)
+# ---------------------------------------------------------------------------
+def test_arena_evicts_least_recently_fetched_first():
+    arena = ShmArena(4096)
+    try:
+        for h in ("a", "b", "c", "d"):
+            assert arena.place(h, np.full(1024, ord(h), np.uint8)) is not None
+        # touch 'a' (the oldest placement): a read bumps its recency
+        assert arena.claim_or_touch("a") is None
+        assert arena.place("e", np.zeros(1024, np.uint8)) is not None
+        # 'b' was coldest -> demoted to the ledger; 'a' stayed resident
+        assert arena.locate("b") is None and arena.locate("a") is not None
+        assert arena.evictions == 1
+        raw = arena.claim_or_touch("b")
+        np.testing.assert_array_equal(
+            np.frombuffer(raw, np.uint8), np.full(1024, ord("b"), np.uint8)
+        )
+        # a block too big to ever fit still refuses without evicting all
+        before = arena.evictions
+        assert arena.place("huge", np.zeros(8192, np.uint8)) is None
+        assert arena.evictions == before
+    finally:
+        arena.close()

@@ -1,0 +1,246 @@
+"""Elastic fleet E2E over the in-process transport: live join/leave,
+paced + resumable rebalancing, minimal migration, directory agreement,
+the rejoin liveness reset, and the plumbing (TieredStore / gateway /
+placement ``when`` rule)."""
+import numpy as np
+import pytest
+
+from repro.core import BoundingBox, ElementType, RegionKey
+from repro.storage import (
+    DistributedMemoryStorage,
+    PlacementPolicy,
+    RingView,
+    TokenBucket,
+    when,
+)
+
+DOM = BoundingBox((0, 0), (64, 64))
+
+
+def _key(name="R", ns="t"):
+    return RegionKey(ns, name, ElementType.FLOAT32, 0)
+
+
+def _fill(dms, key, seed=7):
+    arr = np.random.default_rng(seed).normal(size=DOM.shape).astype(np.float32)
+    dms.put(key, DOM, arr)
+    return arr
+
+
+def _block_homes(dms):
+    """{block coord -> ideal home under the current epoch} via the public
+    placement surface."""
+    out = {}
+    for bc in np.ndindex(*dms._grid):
+        out[tuple(bc)] = dms.home_server(tuple(bc))
+    return out
+
+
+def test_genesis_ring_is_bitexact_with_static_placement():
+    """The refactor must not move a single block on a never-resized
+    fleet: epoch-0 homes == the legacy (rank*n)//V partition."""
+    dms = DistributedMemoryStorage(DOM, (8, 8), 4)
+    legacy = DistributedMemoryStorage(DOM, (8, 8), 4)
+    assert dms.epoch == 0
+    assert _block_homes(dms) == _block_homes(legacy)
+    assert dms.membership == RingView.genesis(4)
+    dms.close()
+    legacy.close()
+
+
+def test_join_rebalance_minimal_and_idempotent():
+    dms = DistributedMemoryStorage(DOM, (8, 8), 3, replication=2)
+    key = _key()
+    arr = _fill(dms, key)
+    before = _block_homes(dms)
+
+    sid = dms.add_server()
+    assert sid == 3 and dms.epoch == 1
+    after = _block_homes(dms)
+    # minimal remap: a home changed iff the newcomer took it
+    changed = {bc for bc in before if after[bc] != before[bc]}
+    assert changed == {bc for bc in after if after[bc] == sid}
+    assert len(changed) > 0
+
+    rep = dms.rebalance()
+    assert rep["epoch"] == 1
+    assert rep["lost"] == 0 and rep["unreachable"] == 0
+    assert rep["complete"] and rep["directories_agree"]
+    # only blocks whose R-replica set changed migrate
+    assert rep["migrated"] >= len(changed)
+    assert rep["scanned"] == 64
+
+    rep2 = dms.rebalance()  # second sweep is a no-op
+    assert (rep2["migrated"], rep2["copies_added"], rep2["trimmed"]) == (0, 0, 0)
+
+    np.testing.assert_array_equal(dms.get(key, DOM), arr)
+    # every block now sits on its ideal epoch-1 replica set
+    for bc in np.ndindex(*dms._grid):
+        ideal = dms.replica_servers(tuple(bc))
+        for s in ideal:
+            found = dms.transport.lookup(s, key)
+            assert tuple(bc) in found
+    dms.close()
+
+
+def test_remove_server_drains_with_zero_failed_reads():
+    dms = DistributedMemoryStorage(DOM, (8, 8), 4, replication=2)
+    key = _key()
+    arr = _fill(dms, key)
+    rep = dms.remove_server(0)
+    assert rep["lost"] == 0 and rep["directories_agree"]
+    assert dms.epoch == 1
+    assert dms.membership.servers == (1, 2, 3)
+    np.testing.assert_array_equal(dms.get(key, DOM), arr)
+    # purged: the departed shard no longer holds payloads
+    assert 0 not in set(dms.membership.servers)
+    dms.close()
+
+
+def test_rebalance_max_blocks_resumes_where_it_stopped():
+    dms = DistributedMemoryStorage(DOM, (8, 8), 2)
+    key = _key()
+    arr = _fill(dms, key)
+    dms.add_server()
+    first = dms.rebalance(max_blocks=5)
+    assert not first["complete"]
+    assert first["migrated"] <= 5
+    total = first["migrated"]
+    for _ in range(40):
+        rep = dms.rebalance(max_blocks=5)
+        total += rep["migrated"]
+        if rep["complete"] and rep["migrated"] == 0:
+            break
+    else:
+        pytest.fail("rebalance never converged")
+    assert dms.rebalance()["migrated"] == 0
+    np.testing.assert_array_equal(dms.get(key, DOM), arr)
+    dms.close()
+
+
+def test_rebalance_is_paced_by_token_bucket():
+    clock = {"t": 0.0}
+
+    def fake_clock():
+        return clock["t"]
+
+    def fake_sleep(s):
+        clock["t"] += s
+
+    dms = DistributedMemoryStorage(DOM, (8, 8), 2)
+    _fill(dms, _key())
+    dms.add_server()
+    pacer = TokenBucket(rate=1000.0, burst=1.0, clock=fake_clock, sleep=fake_sleep)
+    rep = dms.rebalance(pacer=pacer)
+    assert rep["migrated"] > 1
+    # burst=1: every migration past the first had to wait for a token
+    assert rep["paced_wait_s"] > 0.0
+    assert clock["t"] >= (rep["migrated"] - 1) / 1000.0 * 0.99
+    dms.close()
+
+
+def test_rejoin_same_sid_is_not_stale_dead():
+    """leave + rejoin must reset liveness: the returning sid answers
+    probes instead of inheriting a cached dead verdict."""
+    dms = DistributedMemoryStorage(DOM, (8, 8), 3, replication=2)
+    key = _key()
+    arr = _fill(dms, key)
+    dms.remove_server(2)
+    assert not dms.transport.alive(2)
+    sid = dms.add_server(sid=2)
+    assert sid == 2
+    assert dms.transport.alive(2)
+    assert dms.membership.servers == (0, 1, 2)
+    rep = dms.rebalance()
+    assert rep["lost"] == 0 and rep["directories_agree"]
+    np.testing.assert_array_equal(dms.get(key, DOM), arr)
+    dms.close()
+
+
+def test_membership_announcement_reaches_peer_clients():
+    """A second client over the same shards adopts the bumped epoch via
+    sync_membership (epoch gossip), not via shared Python state."""
+    a = DistributedMemoryStorage(DOM, (8, 8), 2)
+    b = DistributedMemoryStorage(DOM, (8, 8), 2, transport=a.transport)
+    a.add_server()
+    assert a.epoch == 1 and b.epoch == 0
+    b.sync_membership()
+    assert b.epoch == 1
+    assert b.membership == a.membership
+    a.close()
+
+
+def test_rebalance_stats_surface():
+    dms = DistributedMemoryStorage(DOM, (8, 8), 2)
+    _fill(dms, _key())
+    st = dms.rebalance_stats()
+    assert st["epoch"] == 0 and not st["rebalancing"]
+    assert st["last_sweep"] is None
+    dms.add_server()
+    dms.rebalance()
+    st = dms.rebalance_stats()
+    assert st["epoch"] == 1
+    assert st["last_sweep"]["directories_agree"]
+    assert st["ring_checksum"] == dms.membership.checksum()
+    assert dms.stats.rebalanced_blocks > 0
+    dms.close()
+
+
+def test_directory_checksums_agree_across_members():
+    dms = DistributedMemoryStorage(DOM, (8, 8), 3)
+    _fill(dms, _key())
+    sums = dms.directory_checksums()
+    assert set(sums) == {0, 1, 2}
+    assert len(set(sums.values())) == 1
+
+
+# ---------------------------------------------------------------------------
+# plumbing: TieredStore / gateway passthrough / placement when() rule
+# ---------------------------------------------------------------------------
+def test_tiered_store_standard_forwards_membership(tmp_path):
+    from repro.storage import TieredStore
+
+    ring = RingView.genesis(4)
+    store = TieredStore.standard(
+        DOM, (8, 8), root=str(tmp_path), num_servers=4, membership=ring
+    )
+    dms = store.tiers[-1].backend
+    assert dms.membership == ring
+    sid = dms.add_server()
+    assert dms.epoch == 1 and sid == 4
+    store.close()
+
+
+def test_gateway_storage_stats_exposes_rebalance(tmp_path):
+    from repro.serve.gateway import RegionGateway
+    from repro.storage import TieredStore
+
+    store = TieredStore.standard(DOM, (8, 8), root=str(tmp_path), num_servers=2)
+    gw = RegionGateway(store)
+    try:
+        dms = store.tiers[-1].backend
+        dms.add_server()
+        dms.rebalance()
+        stats = gw.storage_stats()
+        reb = stats["dms"][dms.name]["rebalance"]
+        assert reb["epoch"] == 1
+        assert reb["last_sweep"]["complete"]
+        assert reb["ring_checksum"] == dms.membership.checksum()
+    finally:
+        gw.close()
+
+
+def test_when_rule_routes_matching_regions():
+    hits = []
+
+    def is_mask(key, bb, nbytes, dtype):
+        hits.append(key.name)
+        return key.name.startswith("mask")
+
+    policy = PlacementPolicy([when(is_mask, "DMS", pinned=True)])
+    p = policy.place(_key("mask_a"), DOM, 1024, np.float32)
+    assert p.tier == "DMS" and p.pinned
+    p = policy.place(_key("rgb"), DOM, 1024, np.float32)
+    assert p.tier is None and not p.pinned
+    assert hits == ["mask_a", "rgb"]
+    assert "when:" in repr(policy)

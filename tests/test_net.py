@@ -1289,3 +1289,210 @@ def test_at_rest_compression_keeps_blocks_small_and_readable():
         plain.close()
     finally:
         proc.stop()
+
+
+# ---------------------------------------------------------------------------
+# elastic fleet: live join/leave over real sockets
+# ---------------------------------------------------------------------------
+def test_elastic_chaos_join_and_leave_mid_workload():
+    """The elastic acceptance demo: a 4-process fleet with replication=2
+    grows by one server and then drains a founding member WHILE reader
+    threads hammer the store — zero failed ops, every read bit-exact,
+    and both paced sweeps report zero lost blocks and agreeing
+    directories."""
+    fleet = spawn_servers(4)
+    assert len(fleet.procs) == 4
+    try:
+        tr = fleet.transport(connect_timeout=5.0, op_timeout=20.0, dead_backoff=60.0)
+        dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr, replication=2)
+        rng = np.random.default_rng(23)
+        keys = [_key("elastic", ts=t) for t in range(3)]
+        arrays = [rng.random((64, 64)).astype(np.float32) for _ in keys]
+        for k, a in zip(keys, arrays):
+            dms.put(k, DOM, a)
+
+        rois = [DOM, BoundingBox((5, 3), (37, 61)), BoundingBox((16, 16), (48, 48))]
+        failures: list = []
+        done = threading.Event()
+
+        def hammer():
+            i = 0
+            while not done.is_set():
+                j = i % len(keys)
+                k, a, roi = keys[j], arrays[j], rois[i % len(rois)]
+                try:
+                    got = dms.get(k, roi)
+                    if not np.array_equal(got, a[roi.slices()]):
+                        failures.append((k, roi, "bit mismatch"))
+                except Exception as exc:  # noqa: BLE001 - chaos: count every failure
+                    failures.append((k, roi, repr(exc)))
+                i += 1
+
+        threads = [threading.Thread(target=hammer) for _ in range(2)]
+        for t in threads:
+            t.start()
+        try:
+            for _ in range(CHAOS_ITERS):
+                # grow: a fresh server process joins the live ring
+                sid, addr = fleet.add_server()
+                dms.add_server(addr, sid=sid)
+                rep = dms.rebalance()
+                assert rep["lost"] == 0 and rep["unreachable"] == 0
+                assert rep["directories_agree"]
+                # shrink: drain the oldest member (paced) and purge it
+                victim = min(dms.membership.servers)
+                rep = dms.remove_server(victim)
+                assert rep["lost"] == 0
+                assert rep["directories_agree"]
+                assert victim not in dms.membership.servers
+        finally:
+            done.set()
+            for t in threads:
+                t.join(timeout=60.0)
+        assert not failures, failures[:5]
+        # the steady state after churn: still bit-exact, still minimal
+        for k, a in zip(keys, arrays):
+            np.testing.assert_array_equal(dms.get(k, DOM), a)
+        assert dms.rebalance()["migrated"] == 0  # idempotent at rest
+        dms.close()
+    finally:
+        fleet.close()
+
+
+def test_elastic_rejoin_same_port_resets_stale_dead_verdict():
+    """Satellite: a server that leaves and rejoins on the SAME address
+    within the liveness backoff window must be probed again, not served
+    a cached dead answer — add_server clears the verdict and drops the
+    old connection so the link renegotiates."""
+    fleet = spawn_servers(3)
+    try:
+        tr = fleet.transport(connect_timeout=5.0, op_timeout=20.0, dead_backoff=600.0)
+        dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr, replication=2)
+        arr = np.random.default_rng(31).random((64, 64)).astype(np.float32)
+        dms.put(_key("bounce"), DOM, arr)
+
+        victim = 2
+        addr = tr.endpoints[victim]
+        # crash it: failover reads arm the 600s dead verdict for the addr
+        fleet.proc_for(victim).kill()
+        np.testing.assert_array_equal(dms.get(_key("bounce"), DOM), arr)
+        assert dms.stats.failover_fetches > 0
+        # drain it out of the ring (it is unreachable; nothing is lost)
+        rep = dms.remove_server(victim)
+        assert rep["lost"] == 0
+        assert not tr.alive(victim)
+
+        # restart on the same port, rejoin within the backoff window
+        fleet.proc_for(victim).start()
+        assert fleet.proc_for(victim).address == addr
+        dms.add_server(addr, sid=victim)
+        assert tr.alive(victim)  # stale-dead verdict cleared
+        rep = dms.rebalance()
+        assert rep["unreachable"] == 0 and rep["lost"] == 0
+        assert rep["directories_agree"]
+        # the rejoined (empty) server holds its ideal share again and
+        # serves it: reads stay bit-exact with the other replica stopped
+        assert len(tr.lookup(victim, _key("bounce"))) > 0
+        np.testing.assert_array_equal(dms.get(_key("bounce"), DOM), arr)
+        dms.close()
+    finally:
+        fleet.close()
+
+
+def test_epoch_gossip_bootstraps_fresh_clients(group):
+    """Membership changes announced to the fleet are served back to any
+    client that asks (epoch op + adopt-newer), so a fresh client joins
+    the current epoch without an out-of-band config push."""
+    tr = group.transport(scope="gossip", connect_timeout=5.0, op_timeout=20.0)
+    dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr, replication=2)
+    assert dms.epoch == 0
+    view = dms.membership.leave(3)
+    dms._ring = view  # simulate an admin change on THIS client...
+    dms._announce("leave", 3, view.to_json())
+    late = DistributedMemoryStorage(
+        DOM, (16, 16),
+        transport=group.transport(scope="gossip", connect_timeout=5.0),
+        replication=2,
+    )
+    assert late.epoch == 0
+    late.sync_membership()  # ...which the late client learns by gossip
+    assert late.epoch == 1
+    assert late.membership == view
+    late.close()
+    dms.close()
+
+
+# ---------------------------------------------------------------------------
+# per-key wire codecs (glob map negotiated per connection)
+# ---------------------------------------------------------------------------
+def test_per_key_codec_map_over_socket():
+    """wire_codec={'labels/*': 'zlib', 'feat/*': 'bf16'}: label tiles
+    ride zlib (bit-exact), feature tiles ride bf16 (lossy-close), and
+    unmatched keys ride raw — all over one negotiated connection,
+    including the batched fetch_many path (multi-block gets)."""
+    fleet = spawn_servers(2)
+    try:
+        tr = fleet.transport(
+            wire_codec={"labels/*": "zlib", "feat/*": "bf16"},
+            connect_timeout=5.0, op_timeout=20.0,
+        )
+        dms = DistributedMemoryStorage(DOM, (16, 16), transport=tr)
+        klab = RegionKey("labels", "L", ElementType.UINT8, 0)
+        kfeat = RegionKey("feat", "F", ElementType.FLOAT32, 0)
+        kraw = RegionKey("other", "O", ElementType.FLOAT32, 0)
+        rng = np.random.default_rng(3)
+        lab = (np.arange(64 * 64).reshape(64, 64) % 7).astype(np.uint8)
+        feat = rng.normal(size=(64, 64)).astype(np.float32)
+        other = rng.normal(size=(64, 64)).astype(np.float32)
+        dms.put(klab, DOM, lab)
+        dms.put(kfeat, DOM, feat)
+        dms.put(kraw, DOM, other)
+        # DOM spans 16 blocks -> these gets ride fetch_many with per-req
+        # codec tags (the server advertises pkc in its hello)
+        np.testing.assert_array_equal(dms.get(klab, DOM), lab)
+        got = dms.get(kfeat, DOM)
+        assert not np.array_equal(got, feat)  # bf16 IS lossy
+        np.testing.assert_allclose(got, feat, rtol=2e-2, atol=2e-2)
+        np.testing.assert_array_equal(dms.get(kraw, DOM), other)
+        # zlib moved fewer wire bytes than the raw payload for labels
+        assert tr.stats.bytes_get < tr.stats.bytes_get_raw
+        dms.close()
+    finally:
+        fleet.close()
+
+
+def test_per_key_codec_map_degrades_to_raw_on_compat_server():
+    """A per-key-codec client against a pre-codec server: the failed
+    hello downgrades everything to the legacy raw wire — even the bf16
+    pattern round-trips bit-exact because no codec is applied."""
+    proc = ServerProcess([0], extra_env={"REPRO_NET_COMPAT": "1"}).start()
+    try:
+        tr = SocketTransport(
+            [proc.address],
+            wire_codec={"feat/*": "bf16", "labels/*": "zlib"},
+            connect_timeout=5.0, op_timeout=10.0,
+        )
+        box = BoundingBox((0, 0), (32, 32))
+        kfeat = RegionKey("feat", "F", ElementType.FLOAT32, 0)
+        feat = np.random.default_rng(5).normal(size=(32, 32)).astype(np.float32)
+        tr.store(0, kfeat, (0, 0), box, feat)
+        np.testing.assert_array_equal(tr.fetch(0, kfeat, (0, 0)), feat)
+        got = tr.fetch_many(0, [(kfeat, (0, 0))])
+        np.testing.assert_array_equal(got[0], feat)
+        tr.close()
+    finally:
+        proc.stop()
+
+
+def test_compat_server_rejects_membership_ops():
+    """join/leave/epoch are post-compat wire ops: a REPRO_NET_COMPAT
+    server answers them with the same unknown-op error every legacy
+    frame gets, so mixed fleets fail loudly instead of desyncing."""
+    proc = ServerProcess([0], extra_env={"REPRO_NET_COMPAT": "1"}).start()
+    try:
+        tr = SocketTransport([proc.address], connect_timeout=5.0, op_timeout=10.0)
+        with pytest.raises(TransportError, match="unknown op"):
+            tr.epoch(0)
+        tr.close()
+    finally:
+        proc.stop()
