@@ -1614,26 +1614,67 @@ class DistributedMemoryStorage:
         sweep drains its blocks onto the survivors — the departed server
         keeps serving reads for blocks the directory still homes on it
         until each one has migrated, so a paced drain loses no ops.
-        Only then is its remaining payload purged and its endpoint torn
-        down.  ``rebalance=False`` defers the drain (run
-        :meth:`rebalance` later; the purge is skipped too so the data
-        survives).  Returns the rebalance report."""
-        ring = self._ring.leave(sid)
-        self._ring = ring
-        view = ring.to_json()
-        self._announce("leave", sid, view)
+        Its payload is purged and its endpoint torn down only after a
+        CLEAN drain: the sweep completed without losing a block AND no
+        reachable directory still homes anything on the sid.  A partial
+        migration (an ideal target down mid-sweep) deliberately keeps
+        the departed copy recorded so redundancy never shrinks — the
+        purge then defers rather than destroy a copy the directory still
+        points at; ``report["purged"]`` says which way it went, and
+        calling :meth:`remove_server` again (idempotent once the sid has
+        left the ring) finishes a deferred drain.  ``rebalance=False``
+        defers the whole drain (run :meth:`rebalance` later; the purge
+        is skipped too so the data survives).  Shrinking the ring below
+        ``replication`` servers is refused — it would silently degrade
+        every block below R copies.  Returns the rebalance report."""
+        sid = int(sid)
+        if sid in self._ring.servers:
+            if len(self._ring.servers) - 1 < self.replication:
+                raise ValueError(
+                    f"{self.name}: removing server {sid} would leave "
+                    f"{len(self._ring.servers) - 1} servers for "
+                    f"replication={self.replication}; lower replication first"
+                )
+            ring = self._ring.leave(sid)
+            self._ring = ring
+            self._announce("leave", sid, ring.to_json())
+        # else: the sid already left — a retry finishing a deferred purge
         report: dict = {}
         if rebalance:
             report = self.rebalance(pacer=pacer)
-        if rebalance and purge:
-            try:
-                self.transport.leave(sid, sid, view, True)
-            except TransportError:
-                pass  # already dead: its bytes died with it
-            rm = getattr(self.transport, "remove_endpoint", None)
-            if rm is not None:
-                rm(sid)
+            drained = (
+                bool(report["complete"])
+                and report["lost"] == 0
+                and not self._departed_still_homed(sid)
+            )
+            report["drained"] = drained
+            report["purged"] = False
+            if purge and drained:
+                try:
+                    self.transport.leave(sid, sid, self._ring.to_json(), True)
+                except TransportError:
+                    pass  # already dead: its bytes died with it
+                rm = getattr(self.transport, "remove_endpoint", None)
+                if rm is not None:
+                    rm(sid)
+                report["purged"] = True
         return report
+
+    def _departed_still_homed(self, sid: int) -> bool:
+        """True while any reachable directory (the departed shard's own
+        included) still records ``sid`` as a home: some block's payload
+        may live only there, so purging would destroy the last copy (at
+        R=1) or silently drop redundancy below R.  The references clear
+        on a later :meth:`rebalance` once the blocked targets return."""
+        for src in dict.fromkeys([sid, *self._ring.servers]):
+            try:
+                for key in self.transport.keys(src):
+                    for _bc, (_box, h) in self.transport.lookup(src, key).items():
+                        if sid in decode_homes(h):
+                            return True
+            except TransportError:
+                continue
+        return False
 
     def rebalance(
         self,

@@ -302,6 +302,11 @@ class SocketTransport:
         with self._ep_lock:
             if sid is None:
                 sid = len(self.endpoints)
+            for gap in range(len(self.endpoints), sid):
+                # a skipped-ahead sid leaves placeholder slots behind it;
+                # sids are table indices, so mark the gap absent — ops on
+                # it fail fast instead of dialing the newcomer's address
+                self._removed.add(gap)
             while len(self.endpoints) <= sid:
                 self.endpoints.append(addr)
             self.endpoints[sid] = addr
@@ -317,13 +322,15 @@ class SocketTransport:
         but every subsequent op fails fast with TransportError."""
         with self._ep_lock:
             self._removed.add(sid)
-        addr = self.endpoints[sid]
-        if not any(
-            self.endpoints[i] == addr
-            for i in range(len(self.endpoints))
-            if i not in self._removed
-        ):
-            # last sid on that address: drop the connection too
+            addr = self.endpoints[sid]
+            last = not any(
+                self.endpoints[i] == addr
+                for i in range(len(self.endpoints))
+                if i not in self._removed
+            )
+        if last:
+            # last sid on that address: drop the connection too (outside
+            # _ep_lock — the connection lock must never nest under it)
             lock = self._conn_locks.get(addr)
             if lock is not None and lock.acquire(timeout=1.0):
                 try:
@@ -336,7 +343,7 @@ class SocketTransport:
         re-dial (+ re-negotiation) on the next request — the epoch-bump
         probe that keeps a leave/rejoin on the same port within the
         backoff window from being served stale-dead answers."""
-        addr = self.endpoints[server]
+        addr = self._addr_of(server)
         self._dead.pop(addr, None)
         self._probe_failed.discard(addr)
         lock = self._conn_locks.get(addr)
@@ -350,6 +357,13 @@ class SocketTransport:
         """Every sid a frame could still reach (removed ones excluded)."""
         with self._ep_lock:
             return [i for i in range(len(self.endpoints)) if i not in self._removed]
+
+    def _addr_of(self, server: int) -> tuple[str, int]:
+        """Endpoint snapshot under the membership lock — the table can
+        be grown (add_endpoint) or retired (remove_endpoint) from other
+        threads mid-read."""
+        with self._ep_lock:
+            return self.endpoints[server]
 
     # -- connection management ----------------------------------------------------
     def _connection(self, addr: tuple[str, int]) -> socket.socket:
@@ -431,9 +445,11 @@ class SocketTransport:
         """Cheap cache read (no network): False while the endpoint's last
         failure is inside its ``dead_backoff`` window (or the sid was
         removed from the fleet)."""
-        if server in self._removed:
-            return False
-        until = self._dead.get(self.endpoints[server])
+        with self._ep_lock:
+            if server in self._removed:
+                return False
+            addr = self.endpoints[server]
+        until = self._dead.get(addr)
         return until is None or time.monotonic() >= until
 
     def _probe(self, addr: tuple[str, int]) -> bool:
@@ -497,11 +513,12 @@ class SocketTransport:
         data_plane=False,
         codec_key=None,
     ) -> tuple[dict, bytearray, int]:
-        if server in self._removed:
-            raise TransportError(
-                f"server {server} has left the fleet; {header.get('op')!r} refused"
-            )
-        addr = self.endpoints[server]
+        with self._ep_lock:
+            if server in self._removed:
+                raise TransportError(
+                    f"server {server} has left the fleet; {header.get('op')!r} refused"
+                )
+            addr = self.endpoints[server]
         t0 = time.perf_counter()
         with self._conn_locks[addr]:
             if self._closed:
@@ -587,7 +604,7 @@ class SocketTransport:
             self.stats.add(meta_msgs=1, bytes_meta=nbytes)
 
     def _window(self, server: int) -> ShmWindow | None:
-        neg = self._neg.get(self.endpoints[server])
+        neg = self._neg.get(self._addr_of(server))
         return neg["window"] if neg else None
 
     def _read_shm(self, server: int, meta: dict) -> np.ndarray:
@@ -655,7 +672,7 @@ class SocketTransport:
             # server negotiated the pkc capability; _request leaves the
             # top-level codec unset for mapping specs, and against an old
             # server the tags below are filtered out (raw gather)
-            neg = self._neg.get(self.endpoints[server])
+            neg = self._neg.get(self._addr_of(server))
             reqs = [
                 [
                     _key_to_json(self._scoped(key)),
@@ -1271,12 +1288,18 @@ class ServerGroup:
         add_server`` to bring it into the ring."""
         sid = (max((s for p in self.procs for s in p.sids), default=-1) + 1
                if sid is None else int(sid))
+        if sid > len(self.endpoints):
+            # sids are endpoint-table indices: a skipped-ahead id would
+            # leave placeholder rows that crash transport construction
+            raise ValueError(
+                f"sid {sid} skips ahead of the endpoint table "
+                f"(next free id is {len(self.endpoints)})"
+            )
         sp = ServerProcess([sid], **kw).start()
         self.procs.append(sp)
         if sid < len(self.endpoints):
             self.endpoints[sid] = sp.address
         else:
-            self.endpoints.extend([None] * (sid - len(self.endpoints)))
             self.endpoints.append(sp.address)
         return sid, sp.address
 

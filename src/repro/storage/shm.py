@@ -102,14 +102,29 @@ class ShmArena:
 
     # -- allocation ----------------------------------------------------
 
-    def _reclaim_locked(self, now: float, force: bool = False) -> None:
+    def _reclaim_locked(self, now: float) -> None:
         keep = []
         for free_at, off, size in self._quarantine:
-            if force or free_at <= now:
+            if free_at <= now:
                 self._insert_free_locked(off, size)
             else:
                 keep.append((free_at, off, size))
         self._quarantine = keep
+
+    def _reclaim_some_locked(self, nbytes: int) -> int | None:
+        """Pressure fallback: free quarantined slots oldest-deadline
+        first, retrying the allocation after each, so a forced early
+        reuse recycles as few still-in-grace slots as possible (an
+        in-flight shm reader of a just-freed slot gets the full grace
+        window unless its bytes are the only way to satisfy the
+        allocation)."""
+        for entry in sorted(self._quarantine):
+            self._quarantine.remove(entry)
+            self._insert_free_locked(entry[1], entry[2])
+            got = self._alloc_locked(nbytes)
+            if got is not None:
+                return got
+        return None
 
     def _insert_free_locked(self, off: int, size: int) -> None:
         free = self._free
@@ -157,12 +172,11 @@ class ShmArena:
             self._reclaim_locked(now)
             off = self._alloc_locked(nbytes)
             if off is None:
-                # pressure: drain quarantine early and retry once
-                self._reclaim_locked(now, force=True)
-                off = self._alloc_locked(nbytes)
+                # pressure: reclaim quarantined slots (oldest first) and retry
+                off = self._reclaim_some_locked(nbytes)
             if off is None:
                 # still full: evict cold residents (LRU by fetch recency)
-                off = self._evict_locked(nbytes, keep=handle)
+                off = self._evict_locked(nbytes, keep=handle, now=now)
             if off is None:
                 return None
             self._used[handle] = (off, nbytes)
@@ -180,13 +194,17 @@ class ShmArena:
         view.setflags(write=False)
         return view
 
-    def _evict_locked(self, nbytes: int, keep) -> int | None:
+    def _evict_locked(self, nbytes: int, keep, now: float) -> int | None:
         """Evict least-recently-fetched residents until ``nbytes`` fits.
         Each victim's bytes are saved to the heap ledger first (its
         owning shard re-homes them via :meth:`claim_or_touch` on the
-        next read), then its slot goes straight to the free list — same
-        immediate-reuse semantics as the force-reclaim path, and the
-        block itself is demoted, never dropped."""
+        next read), then its slot takes the same quarantine grace as a
+        released slot — an in-flight shm reader holding the victim's
+        ``(off, nbytes)`` ref must not have the bytes recycled under it.
+        The quarantine is drained early (oldest slots first) only as far
+        as the allocation demands — the pressure fallback — so a victim
+        is reused immediately only when its space is the sole way to
+        satisfy the store; the block itself is demoted, never dropped."""
         order = sorted(self._used, key=lambda h: self._recency.get(h, 0))
         for victim in order:
             if victim == keep:
@@ -195,8 +213,8 @@ class ShmArena:
             self._evicted[victim] = bytes(self._shm.buf[off : off + size])
             self._recency.pop(victim, None)
             self.evictions += 1
-            self._insert_free_locked(off, size)
-            got = self._alloc_locked(nbytes)
+            self._quarantine.append((now + _QUARANTINE_S, off, size))
+            got = self._reclaim_some_locked(nbytes)
             if got is not None:
                 return got
         return None

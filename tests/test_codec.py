@@ -268,6 +268,26 @@ def test_arena_replace_release_and_pressure_reclaim():
         arena.close()
 
 
+def test_arena_pressure_drain_recycles_oldest_slot_first():
+    """Pressure reclaim frees only as many quarantined slots as the
+    allocation needs, oldest deadline first — the newer slot keeps its
+    grace window for in-flight shm readers instead of being recycled by
+    a blanket drain."""
+    arena = ShmArena(4096)
+    try:
+        for h in ("a", "b", "c", "d"):
+            assert arena.place(h, np.full(1024, ord(h), np.uint8)) is not None
+        arena.release("b")
+        arena.release("c")  # both slots sit in quarantine, b's is older
+        assert arena.place("e", np.zeros(1024, np.uint8)) is not None
+        assert arena.evictions == 0
+        # only b's slot was recycled; c's is still in grace
+        assert len(arena._quarantine) == 1
+        assert arena.locate("e") is not None
+    finally:
+        arena.close()
+
+
 def test_arena_rejects_oversized_and_empty_blocks():
     arena = ShmArena(1024)
     try:

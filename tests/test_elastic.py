@@ -10,7 +10,10 @@ from repro.storage import (
     DistributedMemoryStorage,
     PlacementPolicy,
     RingView,
+    ServerGroup,
+    SocketTransport,
     TokenBucket,
+    TransportError,
     when,
 )
 
@@ -95,6 +98,65 @@ def test_remove_server_drains_with_zero_failed_reads():
     # purged: the departed shard no longer holds payloads
     assert 0 not in set(dms.membership.servers)
     dms.close()
+
+
+def test_remove_server_defers_purge_until_drain_is_clean():
+    """A drain that cannot reach an ideal target must NOT purge the
+    departed shard: the partial-migration branch keeps the departed sid
+    recorded as a holder, so its copy may still be a block's only
+    redundancy.  The purge waits for a retry whose sweep leaves nothing
+    homed on the sid."""
+    dms = DistributedMemoryStorage(DOM, (8, 8), 3, replication=2)
+    key = _key()
+    arr = _fill(dms, key)
+    # make server 1 unreachable: migrations targeting it go partial
+    dms.transport.remove_endpoint(1)
+    rep = dms.remove_server(0)
+    assert rep["lost"] == 0 and rep["complete"]
+    assert not rep["drained"] and not rep["purged"]
+    # the departed shard keeps serving the copies the directory records
+    assert dms._servers[0].payload_bytes > 0
+    assert 0 in dms.transport.known_servers()
+    np.testing.assert_array_equal(dms.get(key, DOM), arr)
+    # the target recovers: the retry finishes the drain, THEN purges
+    dms.transport.reset_liveness(1)
+    rep = dms.remove_server(0)
+    assert rep["drained"] and rep["purged"]
+    assert dms._servers[0].payload_bytes == 0
+    assert 0 not in dms.transport.known_servers()
+    np.testing.assert_array_equal(dms.get(key, DOM), arr)
+    dms.close()
+
+
+def test_remove_server_refuses_shrink_below_replication():
+    """The constructor enforces replication <= num_servers; a live
+    shrink must not silently void the invariant (replica_servers would
+    quietly return fewer than R targets forever after)."""
+    dms = DistributedMemoryStorage(DOM, (8, 8), 2, replication=2)
+    with pytest.raises(ValueError, match="replication"):
+        dms.remove_server(0)
+    assert dms.epoch == 0 and dms.membership.servers == (0, 1)
+    dms.close()
+
+
+def test_add_endpoint_gap_sids_are_absent_not_aliased():
+    """Skipping ahead in the sid space must not leave placeholder rows
+    that dial the newcomer's address (or crash endpoint parsing): gap
+    sids answer dead and refuse ops fast."""
+    tr = SocketTransport(["127.0.0.1:9"])
+    assert tr.add_endpoint("127.0.0.1:11", sid=3) == 3
+    assert tr.known_servers() == [0, 3]
+    assert not tr.alive(1) and not tr.alive(2)
+    with pytest.raises(TransportError, match="left the fleet"):
+        tr.keys(1)
+    tr.close()
+
+
+def test_server_group_rejects_skip_ahead_sid():
+    group = ServerGroup([], [])
+    with pytest.raises(ValueError, match="skips ahead"):
+        group.add_server(sid=2)
+    assert group.endpoints == []
 
 
 def test_rebalance_max_blocks_resumes_where_it_stopped():
