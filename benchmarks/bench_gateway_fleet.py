@@ -1,0 +1,255 @@
+"""Multi-tenant gateway fleet: zipf hot-key serving over one DMS fleet.
+
+Two :class:`~repro.serve.gateway.RegionGateway` instances front one
+shared DMS fleet (one transport, two client views) with fleet
+generation gossip on — the deployment shape the serving tier is built
+for.  Three phases, each self-asserting (a failure fails the harness
+and therefore the CI gate):
+
+* **hot reads** — many logical clients issue zipf-distributed window
+  reads, spread across both gateways.  Asserts the response cache
+  actually absorbs the skew (hit ratio over the whole run) and that
+  every payload is bit-exact with the staged slide.
+* **fairness** — a batch-priority hog floods one gateway with
+  cache-defeating reads while interactive clients trickle theirs in.
+  Asserts the interactive p99 stays strictly below the hog's p99 (the
+  DRR weights are doing their job) — the gated metric is the
+  interactive p99 itself.
+* **cross-gateway invalidation** — alternating writes through one
+  gateway, immediately read through the other.  Asserts bit-exactness
+  right after each remote put: the ``gen`` gossip must invalidate the
+  sibling's response cache synchronously with the put.
+
+Fast mode (``REPRO_BENCH_FAST=1``) shrinks client count and read mix
+for CI smoke runs.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import BoundingBox, ElementType, RegionKey
+from repro.serve.gateway import GatewayConfig, RegionGateway
+from repro.storage import DistributedMemoryStorage, Tier, TieredStore
+from repro.storage.dms import InProcTransport
+
+FAST = bool(os.environ.get("REPRO_BENCH_FAST"))
+TILE = 128
+GRID = 4  # 512 x 512 slide
+CLIENTS = 64 if FAST else 1000       # logical client ids (zipf-ranked)
+HOT_READS = 600 if FAST else 6000    # phase-1 total reads
+THREADS = 8 if FAST else 16          # OS threads carrying the clients
+HOG_THREADS = 3
+HOG_READS = 30 if FAST else 120      # per hog thread
+VIP_READS = 40 if FAST else 150
+ZIPF_S = 1.1
+
+
+def _fleet(slide: np.ndarray, dom: BoundingBox, key: RegionKey):
+    """Two gateways over one DMS fleet (one shared transport)."""
+    transport = InProcTransport(4)
+    gateways, stores = [], []
+    for i in range(2):
+        dms = DistributedMemoryStorage(
+            dom, (TILE, TILE), transport=transport, name=f"DMS{i}"
+        )
+        store = TieredStore([Tier("DMS", dms)], name=f"FLEET{i}")
+        stores.append(store)
+        gateways.append(
+            RegionGateway(
+                store,
+                name=f"GW{i}",
+                config=GatewayConfig(
+                    workers=2, max_queue=256, fleet_generations=True
+                ),
+            )
+        )
+    for tile in dom.tiles((TILE, TILE)):
+        stores[0].put(key, tile, slide[tile.slices()])
+    return gateways, stores, transport
+
+
+def _zipf_weights(n: int) -> np.ndarray:
+    w = 1.0 / np.arange(1, n + 1) ** ZIPF_S
+    return w / w.sum()
+
+
+def _percentile_us(samples: list[float], q: float) -> float:
+    return float(np.percentile(np.array(samples) * 1e6, q))
+
+
+def run() -> list:
+    side = GRID * TILE
+    dom = BoundingBox((0, 0), (side, side))
+    key = RegionKey("bench", "Slide", ElementType.FLOAT32)
+    slide = np.random.default_rng(0).random((side, side)).astype(np.float32)
+    gateways, stores, transport = _fleet(slide, dom, key)
+
+    # -- phase 1: zipf hot reads across both gateways ------------------------
+    # candidate windows: the 16 aligned tiles, zipf-ranked; each logical
+    # client's reads follow the global skew (hot tiles dominate)
+    windows = list(dom.tiles((TILE, TILE)))
+    rng = np.random.default_rng(1)
+    picks = rng.choice(len(windows), size=HOT_READS, p=_zipf_weights(len(windows)))
+    clients = rng.integers(0, CLIENTS, size=HOT_READS)
+    latencies: list[float] = []
+    lat_lock = threading.Lock()
+    errors: list[BaseException] = []
+
+    def hot_worker(tid: int) -> None:
+        local: list[float] = []
+        try:
+            for i in range(tid, HOT_READS, THREADS):
+                win = windows[picks[i]]
+                gw = gateways[int(clients[i]) % 2]
+                t0 = time.perf_counter()
+                got = gw.submit(key, win, client=int(clients[i])).result(60.0)
+                local.append(time.perf_counter() - t0)
+                if not np.array_equal(got, slide[win.slices()]):
+                    raise RuntimeError(f"fleet hot read mismatch at {win}")
+        except BaseException as e:  # noqa: BLE001 — surfaced below
+            errors.append(e)
+        with lat_lock:
+            latencies.extend(local)
+
+    t0 = time.perf_counter()
+    threads = [
+        threading.Thread(target=hot_worker, args=(t,)) for t in range(THREADS)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    hot_wall = time.perf_counter() - t0
+    if errors:
+        raise RuntimeError(f"fleet hot-read phase failed: {errors[0]}") from errors[0]
+    hits = sum(gw.stats.response_cache_hits for gw in gateways)
+    requests = sum(gw.stats.requests for gw in gateways)
+    hit_ratio = hits / max(1, requests)
+    # 16 windows x 2 gateways bounds the misses; zipf repeats must hit
+    if hit_ratio < 0.5:
+        raise RuntimeError(
+            f"response cache not absorbing the zipf skew: hit ratio "
+            f"{hit_ratio:.2f} < 0.5 ({hits}/{requests})"
+        )
+
+    # -- phase 2: batch hog vs interactive clients on one gateway ------------
+    gw = gateways[0]
+    hog_lat: list[float] = []
+    vip_lat: list[float] = []
+
+    def hog(tid: int) -> None:
+        # a real hog: floods the queue with async submissions (bounded
+        # only by admission), every ROI unique so the cache can't absorb
+        # it — the backlog is what the DRR weights must contain
+        local: list[float] = []
+        pending: list[tuple[float, object]] = []
+        try:
+            for i in range(HOG_READS):
+                off = (tid * HOG_READS + i) % (side - 96)
+                roi = BoundingBox((off, off // 2), (off + 96, off // 2 + 96))
+                pending.append(
+                    (
+                        time.perf_counter(),
+                        gw.submit(key, roi, priority="batch", client=f"hog{tid}"),
+                    )
+                )
+            for t0, ticket in pending:
+                ticket.result(120.0)
+                local.append(time.perf_counter() - t0)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+        with lat_lock:
+            hog_lat.extend(local)
+
+    def vip() -> None:
+        # interactive clients trickle one blocking read at a time while
+        # the hog backlog is deep
+        local: list[float] = []
+        try:
+            for i in range(VIP_READS):
+                off = (7 * i + 3) % (side - 80)
+                roi = BoundingBox((off // 2, off), (off // 2 + 80, off + 80))
+                t0 = time.perf_counter()
+                gw.submit(
+                    key, roi, priority="interactive", client="vip"
+                ).result(120.0)
+                local.append(time.perf_counter() - t0)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+        with lat_lock:
+            vip_lat.extend(local)
+
+    hogs = [threading.Thread(target=hog, args=(t,)) for t in range(HOG_THREADS)]
+    vip_t = threading.Thread(target=vip)
+    for t in hogs:
+        t.start()
+    vip_t.start()
+    vip_t.join()
+    for t in hogs:
+        t.join()
+    if errors:
+        raise RuntimeError(f"fleet fairness phase failed: {errors[0]}") from errors[0]
+    vip_p99 = _percentile_us(vip_lat, 99)
+    hog_p99 = _percentile_us(hog_lat, 99)
+    if vip_p99 >= hog_p99:
+        raise RuntimeError(
+            f"fairness regression: interactive p99 {vip_p99:.0f}us not below "
+            f"batch-hog p99 {hog_p99:.0f}us"
+        )
+
+    # -- phase 3: cross-gateway put -> immediate sibling read ----------------
+    inval_rounds = 8
+    t0 = time.perf_counter()
+    for i in range(inval_rounds):
+        win = windows[i % len(windows)]
+        writer, reader = gateways[i % 2], gateways[(i + 1) % 2]
+        shape = tuple(h - l for l, h in zip(win.lo, win.hi))
+        payload = np.full(shape, float(i) + 0.25, np.float32)
+        writer.put(key, win, payload)
+        got = reader.get(key, win)  # the very next read through the sibling
+        if not np.array_equal(got, payload):
+            raise RuntimeError(
+                f"stale read after cross-gateway put (round {i}, {win})"
+            )
+        if not np.array_equal(got, reader.store.get(key, win)):
+            raise RuntimeError(f"gateway read diverges from direct read ({win})")
+        slide[win.slices()] = payload  # keep the reference current
+    inval_wall = time.perf_counter() - t0
+
+    for gw_ in gateways:
+        gw_.close(close_store=False)
+    for store in stores:
+        store.close()
+
+    return [
+        row(
+            "gateway_fleet_hot_read",
+            hot_wall * 1e6 / HOT_READS,
+            f"hit_ratio={hit_ratio:.2f},clients={CLIENTS},threads={THREADS}",
+        ),
+        row(
+            "gateway_fleet_interactive_p99",
+            vip_p99,
+            f"hog_p99={hog_p99:.0f}us,hogs={HOG_THREADS}x{HOG_READS}",
+        ),
+        row(
+            "gateway_fleet_cross_invalidate",
+            inval_wall * 1e6 / inval_rounds,
+            f"rounds={inval_rounds},bit_exact=yes",
+        ),
+    ]
+
+
+def main() -> None:
+    from benchmarks.common import emit
+
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

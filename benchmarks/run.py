@@ -26,6 +26,7 @@ from benchmarks import (
     bench_disk_groups,
     bench_dms_vs_disk,
     bench_gateway,
+    bench_gateway_fleet,
     bench_kernels,
     bench_op_speedups,
     bench_overhead,
@@ -56,6 +57,7 @@ MODULES = [
     ("tiered_staging", bench_tiers),
     ("transport", bench_transport),
     ("gateway", bench_gateway),
+    ("gateway_fleet", bench_gateway_fleet),
     ("compute", bench_compute),
     ("replication", bench_replication),
     ("repair", bench_repair),

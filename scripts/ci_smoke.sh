@@ -70,7 +70,7 @@ bench_and_gate() {
   # counts after a live join (exact at R=1) and a bounded foreground get
   # p99 with zero failures during a paced server drain
   REPRO_BENCH_FAST=1 python -m benchmarks.run \
-    --json "$BENCH_JSON" --only tiered_staging,transport,gateway,compute,replication,repair,rebalance \
+    --json "$BENCH_JSON" --only tiered_staging,transport,gateway,gateway_fleet,compute,replication,repair,rebalance \
   && python scripts/bench_gate.py --run "$BENCH_JSON" \
        --baseline benchmarks/baseline.json
 }

@@ -8,6 +8,7 @@ from repro.core.hilbert import (
     sfc_index,
     sfc_order_for,
 )
+from repro.core.pacing import TokenBucket
 from repro.core.regions import (
     STORAGE,
     DataRegion,
@@ -30,6 +31,7 @@ __all__ = [
     "morton_decode",
     "sfc_index",
     "sfc_order_for",
+    "TokenBucket",
     "STORAGE",
     "DataRegion",
     "ElementType",

@@ -98,6 +98,23 @@ class DevicePipeline:
         self.host_fn = host_fn
         self.stats = {"uploaded": 0, "computed": 0, "downloaded": 0}
 
+    def map_tagged(self, tagged: Iterable[tuple]) -> "Iterator[tuple]":
+        """Like :meth:`map`, but over ``(tag, batch)`` pairs: the tag
+        rides the pipeline untouched — never uploaded, never handed to
+        ``fn`` — and is re-paired with its batch's result, yielding
+        ``(tag, out)``.  For callers whose per-batch metadata (region
+        keys, windows) is not device-puttable; the FIFO pairing
+        invariant lives HERE, not in a caller-side side channel."""
+        tags: collections.deque = collections.deque()
+
+        def _strip() -> Iterator[Any]:
+            for tag, batch in tagged:
+                tags.append(tag)
+                yield batch
+
+        for out in self.map(_strip()):
+            yield tags.popleft(), out
+
     def map(self, batches: Iterable[Any]) -> Iterator[Any]:
         inflight: collections.deque = collections.deque()
         for host_batch in batches:

@@ -1,12 +1,14 @@
 """Serving substrate: caches, prefill/decode steps, generation, the
-region-serving gateway (batching front for the tiered region store), and
-the near-data compute engine (server-side kernel chains)."""
+region-serving gateway (staged admission -> fairness -> response-cache
+-> coalesce pipeline over the tiered region store), and the near-data
+compute engine (server-side kernel chains)."""
 from repro.serve.compute import (
     ComputeEngine,
     ComputeRequest,
     ComputeTicket,
     DerivedCache,
 )
+from repro.serve.fair import DEFAULT_CLASSES, ClientPacer, FairScheduler
 from repro.serve.gateway import (
     GatewayClosed,
     GatewayConfig,
@@ -14,7 +16,9 @@ from repro.serve.gateway import (
     Overloaded,
     ReadTicket,
     RegionGateway,
+    WriteTicket,
 )
+from repro.serve.rcache import GenerationTracker, ResponseCache, WindowPrefetcher
 from repro.serve.step import (
     abstract_cache,
     cache_pspecs,
@@ -26,16 +30,23 @@ from repro.serve.step import (
 )
 
 __all__ = [
+    "DEFAULT_CLASSES",
+    "ClientPacer",
     "ComputeEngine",
     "ComputeRequest",
     "ComputeTicket",
     "DerivedCache",
+    "FairScheduler",
     "GatewayClosed",
     "GatewayConfig",
     "GatewayStats",
+    "GenerationTracker",
     "Overloaded",
     "ReadTicket",
     "RegionGateway",
+    "ResponseCache",
+    "WindowPrefetcher",
+    "WriteTicket",
     "abstract_cache",
     "cache_pspecs",
     "cache_shardings",

@@ -32,7 +32,6 @@ generation tracking fall back to a gateway-local counter bumped on every
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import threading
 import time
@@ -45,6 +44,7 @@ from repro.core.regions import RegionKey
 from repro.kernels.chains import Chain, resolve_chain
 from repro.runtime.prefetch import DevicePipeline
 from repro.serve.gateway import ReadTicket, _Cluster, _deliver, _deliver_error
+from repro.serve.rcache import GenerationTracker, ResponseCache
 from repro.storage.dms import TransportError
 
 
@@ -70,87 +70,16 @@ class ComputeTicket(ReadTicket):
         self.group = ("compute", self.digest)
 
 
-class DerivedCache:
+class DerivedCache(ResponseCache):
     """Bytes-bounded LRU of derived products, generation-validated.
 
-    Key: ``(region key, chain digest, roi)``.  Entries store the write
-    generation they were computed under; :meth:`get` revalidates against
-    the caller-supplied current generation, so a stale entry is a miss
-    (and is dropped).  All methods are thread-safe.
+    Key: ``(region key, chain digest, roi)``.  This IS the serving
+    tier's :class:`~repro.serve.rcache.ResponseCache` (re-exported under
+    its derived-product name): entries store the write generation they
+    were computed under, :meth:`get` revalidates against the caller-
+    supplied current generation, and a stale entry is a miss (and is
+    dropped) — never a stale hit.  All methods are thread-safe.
     """
-
-    def __init__(self, capacity_bytes: int) -> None:
-        self.capacity_bytes = int(capacity_bytes)
-        self._lock = threading.Lock()
-        self._entries: "collections.OrderedDict[tuple, tuple[int, np.ndarray]]" = (
-            collections.OrderedDict()
-        )
-        self._by_key: dict[RegionKey, set[tuple]] = {}
-        self._bytes = 0
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.invalidations = 0
-
-    def _drop_locked(self, ck: tuple) -> None:
-        gen_arr = self._entries.pop(ck, None)
-        if gen_arr is None:
-            return
-        self._bytes -= gen_arr[1].nbytes
-        keyset = self._by_key.get(ck[0])
-        if keyset is not None:
-            keyset.discard(ck)
-            if not keyset:
-                self._by_key.pop(ck[0], None)
-
-    def get(self, ck: tuple, current_gen: int) -> np.ndarray | None:
-        with self._lock:
-            entry = self._entries.get(ck)
-            if entry is None:
-                self.misses += 1
-                return None
-            gen, arr = entry
-            if gen != current_gen:
-                self._drop_locked(ck)  # stale: the region was rewritten
-                self.misses += 1
-                return None
-            self._entries.move_to_end(ck)
-            self.hits += 1
-            return arr
-
-    def put(self, ck: tuple, gen: int, arr: np.ndarray) -> None:
-        if arr.nbytes > self.capacity_bytes:
-            return  # would evict everything for one entry
-        with self._lock:
-            self._drop_locked(ck)
-            self._entries[ck] = (gen, arr)
-            self._by_key.setdefault(ck[0], set()).add(ck)
-            self._bytes += arr.nbytes
-            while self._bytes > self.capacity_bytes and self._entries:
-                victim = next(iter(self._entries))
-                self._drop_locked(victim)
-                self.evictions += 1
-
-    def invalidate(self, key: RegionKey) -> int:
-        """Drop every derived product of ``key`` (gateway put/delete)."""
-        with self._lock:
-            cks = list(self._by_key.get(key, ()))
-            for ck in cks:
-                self._drop_locked(ck)
-            self.invalidations += len(cks)
-            return len(cks)
-
-    def as_dict(self) -> dict:
-        with self._lock:
-            return {
-                "entries": len(self._entries),
-                "bytes": self._bytes,
-                "capacity_bytes": self.capacity_bytes,
-                "hits": self.hits,
-                "misses": self.misses,
-                "evictions": self.evictions,
-                "invalidations": self.invalidations,
-            }
 
 
 class ChainStats:
@@ -188,30 +117,27 @@ class ComputeEngine:
     stats, and borrows the gateway's coalescer/stats for the fetch side.
     """
 
-    def __init__(self, store, config) -> None:
+    def __init__(self, store, config, *, gens: GenerationTracker | None = None) -> None:
         self.store = store
         self.config = config
         self.cache = DerivedCache(config.compute_cache_bytes)
         self.chain_stats = ChainStats()
-        self._local_gen: collections.Counter = collections.Counter()
-        self._gen_lock = threading.Lock()
-        # a store with its own write-generation tracking (TieredStore)
-        # catches puts that bypass the gateway; otherwise the facade's
-        # put/delete bumps are the only invalidation source
-        gen = getattr(store, "generation", None)
-        self._store_gen = gen if callable(gen) else None
+        # generation source, shared with the owning gateway's response
+        # cache when the gateway built us: a store with its own
+        # write-generation tracking (TieredStore) catches puts that
+        # bypass the gateway, a local counter covers plain backends, and
+        # fleet mode folds in the gossiped fleet-wide max
+        self._gens = gens if gens is not None else GenerationTracker(store)
 
     # -- generations ----------------------------------------------------------
     def generation(self, key: RegionKey) -> int:
-        if self._store_gen is not None:
-            return int(self._store_gen(key))
-        with self._gen_lock:
-            return self._local_gen[key]
+        return self._gens.current(key)
 
     def note_write(self, key: RegionKey) -> None:
-        """Called by the gateway on put/delete through the facade."""
-        with self._gen_lock:
-            self._local_gen[key] += 1
+        """Record a facade write: standalone-engine users only — a
+        gateway-owned engine shares the gateway's tracker, and the
+        gateway's ``_note_write`` already bumped it."""
+        self._gens.note_write(key)
         self.cache.invalidate(key)
 
     # -- cache fast path (called at submit time, before queueing) --------------

@@ -4,60 +4,67 @@ The paper's runtime keeps many concurrent analysis stages reading from
 one shared region store, and its hierarchical-pipelines companion work
 (arXiv:1209.3332) shows throughput comes from batching fine-grain
 requests onto shared resources.  :class:`RegionGateway` is that front
-door: it implements the ``StorageBackend`` protocol (so it registers
-under the store's own name with zero call-site changes) while
+door, built as an explicit staged pipeline —
 
-* **bounding admission** — requests enter a bounded queue; when the
+    admission -> fairness -> response cache -> coalesce -> store
+
+* **bounded admission** — requests enter a bounded queue; when the
   queue is full a client waits at most ``admit_timeout`` seconds for a
   slot and then gets an explicit :class:`Overloaded` (never a deadlock,
-  never an unbounded pile-up);
-* **shedding load under RAM pressure** — the top (RAM) tier's fill
-  fraction, read from the store's ``TierStats``/capacity accounting,
-  shrinks the admission queue to ``shed_queue_factor`` of its size and
-  turns the bounded wait into an immediate :class:`Overloaded` — when
-  the hot tier is thrashing, queueing more reads only makes it worse;
-* **coalescing reads** — a worker that picks up a request drains every
-  queued request for the same region, merges overlapping/adjacent ROIs
-  into minimal bounding windows (duplicates collapse for free), issues
-  ONE tier fetch per window, and slices each caller's ROI out of the
-  shared payload.  Under a DMS-backed tier each window fetch rides the
-  transport's scatter-gather ``fetch_many`` frame, so N clients hitting
-  M servers cost one round-trip per server instead of one per block per
-  client;
-* **near-data compute** — :meth:`RegionGateway.compute` /
-  :meth:`RegionGateway.submit_compute` run a named kernel chain
-  (:mod:`repro.kernels.chains`, e.g. ``"deconv|threshold|ccl"``)
-  server-side over the requested ROI and return only the derived array
-  or feature vector; fetches are coalesced exactly like reads, windows
-  flow through :class:`~repro.runtime.prefetch.DevicePipeline`, and
-  repeated hot queries hit a generation-invalidated derived-product
-  cache (see :mod:`repro.serve.compute`).
+  never an unbounded pile-up); RAM pressure (the top tier's fill
+  fraction) shrinks the queue to ``shed_queue_factor`` of its size and
+  turns the bounded wait into immediate shedding;
+* **fairness** (:mod:`repro.serve.fair`) — per-priority-class queues
+  drained by weighted deficit round-robin, so a low-priority scan
+  cannot monopolize the batch window, plus an optional per-client
+  :class:`~repro.core.pacing.TokenBucket` that makes a hog throttle
+  itself before admission;
+* **response cache** (:mod:`repro.serve.rcache`) — served windows are
+  kept in a bytes-bounded, generation-validated LRU; a repeated hot
+  read costs a slice of a cached window, not a tier fetch.  Generations
+  come from the store (writes that bypass the gateway still invalidate)
+  and, in fleet mode, from the ``gen`` gossip op — N gateways sharing
+  one DMS fleet see each other's writes, so any gateway's put
+  invalidates every gateway's cache;
+* **coalescing reads** — a worker drains every batchable queued request
+  (same key, same class), merges overlapping/adjacent ROIs into minimal
+  bounding windows, issues ONE tier fetch per window, and slices each
+  caller's ROI out of the shared payload; fetched windows feed the
+  response cache and a speculative :class:`~repro.serve.rcache.
+  WindowPrefetcher` that follows the observed scan stride;
+* **coalescing writes** — with ``coalesce_puts`` enabled, puts queue as
+  tickets too and a worker flushes a same-key batch with per-ROI
+  last-writer-wins (N overwrites of one tile within a flush window cost
+  one store put);
+* **near-data compute** — :meth:`RegionGateway.compute` runs a named
+  kernel chain server-side and returns only the derived array; its
+  derived-product cache shares the response-cache implementation and
+  the same generation validation (see :mod:`repro.serve.compute`).
 
 A merged window can cover cells none of the members asked for; if the
 store cannot serve the window (a coverage hole raises ``KeyError``) the
 gateway falls back to per-request fetches, so coalescing is a pure
 optimization — results are always bit-exact with direct reads.  A
 :class:`~repro.storage.dms.TransportError` is distinguished in the
-stats (``window_failures``, an infrastructure failure operators should
-see, vs ``window_fallbacks``, a benign coverage artifact) but degrades
-the same way: per-request reads still serve members whose ROIs live in
-an upper tier, and members that genuinely need the dead servers fail
-with their own error — cheaply, because the transport's liveness cache
-fails fast.
+stats (``window_failures`` vs ``window_fallbacks``) but degrades the
+same way.  The response cache preserves bit-exactness by construction:
+entries record the write generation captured BEFORE their fetch, so a
+racing put causes a spurious miss, never a stale hit.
 """
 from __future__ import annotations
 
-import collections
 import concurrent.futures
 import dataclasses
 import threading
 import time
-from typing import Callable
+from typing import Callable, Iterable, Mapping
 
 import numpy as np
 
 from repro.core.bbox import BoundingBox
 from repro.core.regions import RegionKey, StorageBackend
+from repro.serve.fair import DEFAULT_CLASSES, ClientPacer, FairScheduler
+from repro.serve.rcache import GenerationTracker, ResponseCache, WindowPrefetcher
 from repro.storage.dms import DMSStats, TransportError
 
 
@@ -71,7 +78,7 @@ class GatewayClosed(RuntimeError):
 
 @dataclasses.dataclass
 class GatewayConfig:
-    """Admission + coalescing knobs (see class docstring for semantics)."""
+    """Staged-pipeline knobs (see class docstring for semantics)."""
 
     workers: int = 4
     max_queue: int = 128          # bounded admission queue (requests)
@@ -82,6 +89,21 @@ class GatewayConfig:
     shed_queue_factor: float = 0.25  # queue share admitted under pressure
     max_window_waste: float = 1.5  # window vol <= waste * sum(member vols)
     coalesce: bool = True
+    # fairness stage: priority classes (name -> DRR weight), and an
+    # optional per-client token bucket (requests/s; None = unthrottled)
+    classes: "Mapping[str, int] | Iterable[tuple[str, int]]" = DEFAULT_CLASSES
+    client_rate: float | None = None
+    client_burst: float | None = None
+    # response-cache stage: hot-window payload cache bound (0 disables),
+    # speculative stride prefetch, and cross-gateway generation gossip
+    # (fleet mode: validate/invalidate through the shared DMS fleet)
+    response_cache_bytes: int = 32 << 20
+    prefetch: bool = False
+    prefetch_depth: int = 2
+    fleet_generations: bool = False
+    # write coalescing: puts queue as tickets and flush with per-ROI
+    # last-writer-wins inside a same-key batch window
+    coalesce_puts: bool = False
     # near-data compute (serve/compute.py): derived-product cache bound,
     # DevicePipeline in-flight window, and kernel impl dispatch
     # ("auto" = Pallas on TPU, jnp references elsewhere)
@@ -98,32 +120,51 @@ class GatewayConfig:
             raise ValueError("batch_window must be >= 1")
         if self.compute_cache_bytes < 0:
             raise ValueError("compute_cache_bytes must be >= 0")
+        if self.response_cache_bytes < 0:
+            raise ValueError("response_cache_bytes must be >= 0")
+        if self.prefetch_depth < 1:
+            raise ValueError("prefetch_depth must be >= 1")
+        if self.client_rate is not None and self.client_rate <= 0:
+            raise ValueError("client_rate must be positive (or None)")
 
 
 class GatewayStats:
     """Request accounting: monotonic counters behind ONE internal lock.
 
     Writers use :meth:`add` (an atomic multi-counter bump: related
-    counters like ``served``+``failed`` from one batch move together) or
-    :meth:`peak`; readers use :meth:`as_dict`, which snapshots every
-    counter under the same lock — a concurrent-worker snapshot can never
-    observe a half-applied update (torn read).  Plain attribute reads of
-    a single counter remain lock-free (individual ints are consistent;
-    only cross-counter invariants need the snapshot).
+    counters like ``served``+``failed`` from one batch move together),
+    :meth:`class_add` (the per-priority-class admission/shed/hit rows)
+    or :meth:`peak`; readers use :meth:`as_dict`, which snapshots every
+    counter — including the class rows — under the same lock, so a
+    concurrent-worker snapshot can never observe a half-applied update
+    (torn read).  Plain attribute reads of a single counter remain
+    lock-free (individual ints are consistent; only cross-counter
+    invariants need the snapshot).
     """
 
     _FIELDS = (
-        "requests",      # submitted reads (admitted + rejected)
+        "requests",      # submitted reads (admitted + rejected + cache hits)
         "served",        # reads completed with a payload
         "failed",        # reads completed with a backend error
-        "rejected",      # Overloaded at admission (reads + computes)
+        "rejected",      # Overloaded at admission (reads + writes + computes)
         "abandoned",     # tickets cancelled after a get() timeout
+        "throttled",     # submissions that waited on their client bucket
         "batches",       # worker drain cycles
         "windows",       # tier fetches issued (merged read windows)
         "coalesced",     # reads served from a window shared with others
         "window_fallbacks",  # read window had a hole -> per-request reads
         "window_failures",   # read window died on the wire -> degrade
         "queue_peak",
+        # response-cache stage
+        "response_cache_hits",   # reads served from a cached hot window
+        "prefetch_issued",       # speculative windows fetched
+        "prefetch_hits",         # cache hits served by a prefetched window
+        # write-coalescing stage
+        "writes",            # submitted puts (facade or submit_put)
+        "writes_applied",    # store puts actually issued after dedup
+        "write_coalesced",   # puts superseded by a later same-ROI put
+        "write_batches",     # write flush cycles
+        "write_failed",      # puts completed with a backend error
         # near-data compute path (disjoint from the read counters)
         "compute_requests",
         "compute_served",
@@ -137,10 +178,13 @@ class GatewayStats:
         "derived_reply_bytes",   # bytes actually returned to compute clients
     )
 
+    _CLASS_FIELDS = ("requests", "admitted", "shed", "served", "cache_hits")
+
     def __init__(self) -> None:
         self._lock = threading.Lock()
         for f in self._FIELDS:
             setattr(self, f, 0)
+        self._classes: dict[str, dict[str, int]] = {}
 
     def add(self, **deltas: int) -> None:
         """Atomically bump several counters (one lock acquisition)."""
@@ -150,6 +194,17 @@ class GatewayStats:
                     raise AttributeError(f"unknown gateway counter {name!r}")
                 setattr(self, name, getattr(self, name) + delta)
 
+    def class_add(self, cls: str, **deltas: int) -> None:
+        """Atomically bump counters on one priority class's row."""
+        with self._lock:
+            row = self._classes.setdefault(
+                cls, {f: 0 for f in self._CLASS_FIELDS}
+            )
+            for name, delta in deltas.items():
+                if name not in self._CLASS_FIELDS:
+                    raise AttributeError(f"unknown class counter {name!r}")
+                row[name] += delta
+
     def peak(self, name: str, value: int) -> None:
         with self._lock:
             setattr(self, name, max(getattr(self, name), value))
@@ -157,7 +212,9 @@ class GatewayStats:
     def as_dict(self) -> dict:
         """Consistent snapshot of every counter (taken under the lock)."""
         with self._lock:
-            return {f: getattr(self, f) for f in self._FIELDS}
+            out = {f: getattr(self, f) for f in self._FIELDS}
+            out["classes"] = {c: dict(row) for c, row in self._classes.items()}
+            return out
 
 
 class ReadTicket(concurrent.futures.Future):
@@ -165,8 +222,12 @@ class ReadTicket(concurrent.futures.Future):
 
     # worker batching groups same-key same-group tickets; plain reads all
     # share the None group, compute tickets override with their chain
-    # digest so reads and unrelated chains never mix in one batch
+    # digest (and write tickets with a "put" marker) so reads, writes,
+    # and unrelated chains never mix in one batch
     group = None
+    # fairness class (normalized at submit) and client id (throttling)
+    priority = "default"
+    client = None
 
     def __init__(self, key: RegionKey, roi: BoundingBox) -> None:
         super().__init__()
@@ -184,7 +245,21 @@ class ReadTicket(concurrent.futures.Future):
             ) from None
 
 
-def _deliver(ticket: ReadTicket, value: np.ndarray) -> bool:
+class WriteTicket(ReadTicket):
+    """Handle on one queued put.  All writes share one batching group,
+    so a worker flushes every queued same-key put in one cycle with
+    per-ROI last-writer-wins.  The caller must not mutate ``array``
+    until the ticket resolves (the facade ``put()`` blocks, so only
+    direct ``submit_put`` users can observe this)."""
+
+    group = ("put",)
+
+    def __init__(self, key: RegionKey, roi: BoundingBox, array: np.ndarray) -> None:
+        super().__init__(key, roi)
+        self.array = array
+
+
+def _deliver(ticket: ReadTicket, value) -> bool:
     """set_result unless the client cancelled meanwhile; True = counted.
 
     Callers must bump their stats counters BEFORE calling this (rolling
@@ -239,13 +314,20 @@ class _Cluster:
 
 
 class RegionGateway:
-    """Request-batching front for one shared region store.
+    """Staged request pipeline fronting one shared region store.
 
     Implements ``StorageBackend`` (``get`` blocks on a submitted ticket;
-    ``put``/``query``/``delete`` pass through), so a gateway registers in
-    a :class:`~repro.core.regions.StorageRegistry` under the store's own
+    ``put``/``query``/``delete`` pass through — or queue, with
+    ``coalesce_puts``), so a gateway registers in a
+    :class:`~repro.core.regions.StorageRegistry` under the store's own
     name and stages never notice.  Unknown attributes (``drain``,
     ``tier_stats``, ``locality``, ...) delegate to the wrapped store.
+
+    Fleet mode: construct N gateways whose stores share one DMS fleet
+    (one transport) with ``fleet_generations=True`` — they keep a
+    consistent membership view through the epoch gossip, and the ``gen``
+    gossip propagates write generations so any gateway's put invalidates
+    every gateway's response cache.
     """
 
     def __init__(
@@ -261,7 +343,6 @@ class RegionGateway:
         self.config = config or GatewayConfig()
         self.stats = GatewayStats()
         self._pressure_fn = pressure_fn
-        self._pending: "collections.deque[ReadTicket]" = collections.deque()
         self._engine = None  # near-data ComputeEngine, created on first use
         self._engine_lock = threading.Lock()
         self._lock = threading.Lock()
@@ -269,6 +350,35 @@ class RegionGateway:
         self._slot_free = threading.Condition(self._lock)
         self._paused = False
         self._closed = False
+        # pipeline stages: fairness scheduler (guarded by _lock, like the
+        # plain deque it replaced), per-client pacer, generation tracker,
+        # response cache, speculative prefetcher
+        self._sched = FairScheduler(self.config.classes)
+        self._pacer = (
+            ClientPacer(self.config.client_rate, self.config.client_burst)
+            if self.config.client_rate is not None
+            else None
+        )
+        self._gens = GenerationTracker(
+            store, fleet=self.config.fleet_generations
+        )
+        self._rcache = (
+            ResponseCache(self.config.response_cache_bytes)
+            if self.config.response_cache_bytes > 0
+            else None
+        )
+        self._prefetcher = (
+            WindowPrefetcher(
+                store,
+                self._rcache,
+                self._gens,
+                self.stats,
+                depth=self.config.prefetch_depth,
+                name=self.name,
+            )
+            if self.config.prefetch and self._rcache is not None
+            else None
+        )
         self._workers = [
             threading.Thread(
                 target=self._worker_loop, daemon=True, name=f"{self.name}-gw{i}"
@@ -303,21 +413,83 @@ class RegionGateway:
             return max(1, int(cfg.max_queue * cfg.shed_queue_factor))
         return cfg.max_queue
 
-    def submit(self, key: RegionKey, roi: BoundingBox) -> ReadTicket:
+    def submit(
+        self,
+        key: RegionKey,
+        roi: BoundingBox,
+        *,
+        priority: str | None = None,
+        client=None,
+    ) -> ReadTicket:
         """Enqueue one ROI read; returns a ticket to wait on.
 
+        ``priority`` names a fairness class (unknown names degrade to
+        the default class), ``client`` is the per-client throttling id.
         Blocks at most ``admit_timeout`` for a queue slot; raises
         :class:`Overloaded` when the queue stays full (immediately when
         the RAM tier is past ``mem_highwater`` — shedding, not queueing,
-        is the right response to memory pressure).
+        is the right response to memory pressure).  A response-cache hit
+        resolves the ticket immediately: no queue, no tier fetch.
         """
+        with self._lock:
+            if self._closed:  # don't serve cache hits from a closed gateway
+                raise GatewayClosed(f"gateway {self.name} is closed")
         ticket = ReadTicket(key, roi)
+        ticket.priority = self._sched.resolve(priority)
+        ticket.client = client
+        self._throttle(ticket)
         self.stats.add(requests=1)
+        self.stats.class_add(ticket.priority, requests=1)
+        if self._rcache is not None:
+            gen = self._gens.current(key)  # fleet mode validates here
+            hit = self._rcache.lookup_window(key, roi, gen)
+            if hit is not None:
+                payload, prefetched = hit
+                deltas = {"served": 1, "response_cache_hits": 1}
+                if prefetched:
+                    deltas["prefetch_hits"] = 1
+                self.stats.add(**deltas)
+                self.stats.class_add(ticket.priority, served=1, cache_hits=1)
+                ticket.set_result(payload)
+                return ticket
         self._admit(ticket)
         return ticket
 
+    def submit_put(
+        self,
+        key: RegionKey,
+        bb: BoundingBox,
+        array: np.ndarray,
+        *,
+        priority: str | None = None,
+        client=None,
+    ) -> WriteTicket:
+        """Enqueue one put for batched flushing (last-writer-wins per
+        ROI within the flush window); resolves with None once applied.
+        Do not mutate ``array`` until then."""
+        with self._lock:
+            if self._closed:  # don't sleep on the pacer for a closed gateway
+                raise GatewayClosed(f"gateway {self.name} is closed")
+        ticket = WriteTicket(key, bb, array)
+        ticket.priority = self._sched.resolve(priority)
+        ticket.client = client
+        self._throttle(ticket)
+        self.stats.add(writes=1)
+        self.stats.class_add(ticket.priority, requests=1)
+        self._admit(ticket)
+        return ticket
+
+    def _throttle(self, ticket: ReadTicket) -> None:
+        """Per-client pacing, BEFORE admission and outside every lock:
+        a client over its rate sleeps on its own bucket, shaping its
+        arrival rate instead of occupying a queue slot while it waits."""
+        if self._pacer is None:
+            return
+        if self._pacer.take(ticket.client) > 0:
+            self.stats.add(throttled=1)
+
     def _admit(self, ticket: ReadTicket) -> None:
-        """Shared bounded-admission path for read and compute tickets."""
+        """Shared bounded-admission path for read/write/compute tickets."""
         deadline = time.monotonic() + self.config.admit_timeout
         while True:
             # sample pressure OUTSIDE the gateway lock: the store takes
@@ -328,14 +500,16 @@ class RegionGateway:
                 if self._closed:
                     raise GatewayClosed(f"gateway {self.name} is closed")
                 limit = self._admit_limit(p)
-                depth = len(self._pending)
+                depth = len(self._sched)
                 if depth < limit:
-                    self._pending.append(ticket)
+                    self._sched.push(ticket)
                     self.stats.peak("queue_peak", depth + 1)
+                    self.stats.class_add(ticket.priority, admitted=1)
                     self._not_empty.notify()
                     return
                 if p >= self.config.mem_highwater:
                     self.stats.add(rejected=1)
+                    self.stats.class_add(ticket.priority, shed=1)
                     raise Overloaded(
                         f"{self.name}: queue {depth} >= {limit} with RAM tier at "
                         f"{p:.0%} of capacity; shedding load (retry with backoff)"
@@ -343,6 +517,7 @@ class RegionGateway:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     self.stats.add(rejected=1)
+                    self.stats.class_add(ticket.priority, shed=1)
                     raise Overloaded(
                         f"{self.name}: queue full ({depth}/{limit}) for "
                         f"{self.config.admit_timeout:.1f}s; rejecting (bounded wait)"
@@ -361,7 +536,9 @@ class RegionGateway:
                 if self._engine is None:
                     from repro.serve.compute import ComputeEngine
 
-                    self._engine = ComputeEngine(self.store, self.config)
+                    self._engine = ComputeEngine(
+                        self.store, self.config, gens=self._gens
+                    )
         return self._engine  # relint: allow(guarded-attribute) — monotonic once set
 
     def submit_compute(
@@ -436,38 +613,32 @@ class RegionGateway:
                 for m in batch:
                     if m.done():
                         continue
-                    field = "failed" if m.group is None else "compute_failed"
+                    if isinstance(m, WriteTicket):
+                        field = "write_failed"
+                    elif m.group is None:
+                        field = "failed"
+                    else:
+                        field = "compute_failed"
                     self.stats.add(**{field: 1})
                     if not _deliver_error(m, e):
                         self.stats.add(**{field: -1})
 
     def _next_batch(self) -> list[ReadTicket] | None:
-        """Pop the head request plus every queued same-key same-group
-        request (up to ``batch_window``) — the coalescing unit; reads
-        (group None) and each distinct kernel chain batch separately.
-        None = closed + drained."""
+        """Pop the scheduler's next request (weighted round-robin over
+        the priority classes) plus every batchable queued request from
+        the same class (same key, same group, up to ``batch_window``) —
+        the coalescing unit.  None = closed + drained."""
         with self._lock:
             while True:
-                if self._pending and (not self._paused or self._closed):
+                if len(self._sched) and (not self._paused or self._closed):
                     break
-                if self._closed and not self._pending:
+                if self._closed and not len(self._sched):
                     return None
                 self._not_empty.wait()
-            head = self._pending.popleft()
-            batch = [head]
-            if self.config.coalesce and self._pending:
-                keep: "collections.deque[ReadTicket]" = collections.deque()
-                while self._pending:
-                    r = self._pending.popleft()
-                    if (
-                        r.key == head.key
-                        and r.group == head.group
-                        and len(batch) < self.config.batch_window
-                    ):
-                        batch.append(r)
-                    else:
-                        keep.append(r)
-                self._pending = keep
+            head = self._sched.pop_head()
+            batch = self._sched.drain_matching(
+                head, self.config.batch_window, self.config.coalesce
+            )
             self.stats.add(batches=1)
             self._slot_free.notify_all()
         return batch
@@ -486,6 +657,9 @@ class RegionGateway:
         return clusters
 
     def _serve_batch(self, batch: list[ReadTicket]) -> None:
+        if isinstance(batch[0], WriteTicket):
+            self._serve_writes(batch)
+            return
         if batch[0].group is not None:
             # compute batch (same key, same chain digest): the engine
             # coalesces the FETCHES like reads, then runs the chain on
@@ -503,8 +677,12 @@ class RegionGateway:
             if len(c.members) == 1:
                 self._serve_one(c.members[0])
                 continue
+            key = c.members[0].key
+            # generation BEFORE the fetch: a racing put makes the cached
+            # window a spurious miss, never a stale hit
+            gen = self._gens.current(key) if self._rcache is not None else 0
             try:
-                window_arr = self.store.get(c.members[0].key, c.window)
+                window_arr = self.store.get(key, c.window)
             except TransportError:
                 # infrastructure failure (replica failover exhausted), not
                 # a coverage hole: counted separately so operators see it,
@@ -525,6 +703,10 @@ class RegionGateway:
                 for m in c.members:
                     self._serve_one(m)
                 continue
+            if self._rcache is not None:
+                self._rcache.put((key, c.window), gen, window_arr)
+            if self._prefetcher is not None:
+                self._prefetcher.observe(key, c.window)
             for m in c.members:
                 if m.done():
                     continue  # cancelled while queued
@@ -540,12 +722,15 @@ class RegionGateway:
                         self.stats.add(failed=-1)
                     continue
                 self.stats.add(served=1)
+                self.stats.class_add(m.priority, served=1)
                 if not _deliver(m, payload):
                     self.stats.add(served=-1)
+                    self.stats.class_add(m.priority, served=-1)
 
     def _serve_one(self, req: ReadTicket) -> None:
         if req.done():
             return  # cancelled while queued: don't fetch, don't re-resolve
+        gen = self._gens.current(req.key) if self._rcache is not None else 0
         try:
             value = self.store.get(req.key, req.roi)
         except BaseException as e:  # noqa: BLE001 — surfaced on the ticket
@@ -553,9 +738,55 @@ class RegionGateway:
             if not _deliver_error(req, e):
                 self.stats.add(failed=-1)
             return
+        if self._rcache is not None:
+            # the cache keeps the fetched array; the caller gets a copy
+            # so a client mutating its result never corrupts future hits
+            self._rcache.put((req.key, req.roi), gen, value)
+            value = value.copy()
+        if self._prefetcher is not None:
+            self._prefetcher.observe(req.key, req.roi)
         self.stats.add(served=1)
+        self.stats.class_add(req.priority, served=1)
         if not _deliver(req, value):
             self.stats.add(served=-1)
+            self.stats.class_add(req.priority, served=-1)
+
+    def _serve_writes(self, batch: list[WriteTicket]) -> None:
+        """Flush one same-key write batch: last-writer-wins per ROI
+        (submission order — later queued puts supersede earlier ones to
+        the same ROI), one store put per surviving write."""
+        live = [t for t in batch if not t.done()]
+        survivors: dict[BoundingBox, WriteTicket] = {}
+        order: list[BoundingBox] = []
+        for t in live:
+            if t.roi not in survivors:
+                order.append(t.roi)
+            survivors[t.roi] = t
+        self.stats.add(
+            write_batches=1, write_coalesced=len(live) - len(survivors)
+        )
+        errors: dict[BoundingBox, BaseException] = {}
+        applied = 0
+        for bb in order:
+            t = survivors[bb]
+            try:
+                self.store.put(t.key, bb, t.array)
+                applied += 1
+            except BaseException as e:  # noqa: BLE001 — surfaced per ticket
+                errors[bb] = e
+        if applied:
+            self.stats.add(writes_applied=applied)
+            # one invalidation per flushed key: caches + fleet gossip see
+            # the final batch state, not every superseded intermediate
+            self._note_write(live[0].key)
+        for t in live:
+            err = errors.get(t.roi)
+            if err is not None:
+                self.stats.add(write_failed=1)
+                if not _deliver_error(t, err):
+                    self.stats.add(write_failed=-1)
+            elif not _deliver(t, None):
+                pass  # cancelled after flush: the write still happened
 
     # -- StorageBackend protocol ----------------------------------------------------
     def get(self, key: RegionKey, roi: BoundingBox) -> np.ndarray:
@@ -571,21 +802,38 @@ class RegionGateway:
             raise
 
     def put(self, key: RegionKey, bb: BoundingBox, array: np.ndarray) -> None:
+        if self.config.coalesce_puts:
+            ticket = self.submit_put(key, bb, array)
+            try:
+                ticket.result(self.config.request_timeout)
+            except TimeoutError:
+                if ticket.cancel():
+                    self.stats.add(abandoned=1)
+                raise
+            return
         self.store.put(key, bb, array)
-        engine = self._engine  # relint: allow(guarded-attribute) — monotonic None->engine; a racing first build has no derived products to invalidate
-        if engine is not None:
-            # a write through the facade invalidates the key's derived
-            # products (stores with generation() also catch direct puts)
-            engine.note_write(key)
+        self.stats.add(writes=1, writes_applied=1)
+        # a write through the facade invalidates the key's cached
+        # responses/derived products and gossips the fleet generation
+        # (stores with generation() also catch direct puts)
+        self._note_write(key)
 
     def query(self, namespace: str, name: str) -> list[tuple[RegionKey, BoundingBox]]:
         return self.store.query(namespace, name)
 
     def delete(self, key: RegionKey) -> None:
         self.store.delete(key)
+        self._note_write(key)
+
+    def _note_write(self, key: RegionKey) -> None:
+        """Post-write invalidation fan-out: generation tracker (local +
+        fleet gossip), response cache, and the derived-product cache."""
+        self._gens.note_write(key)
+        if self._rcache is not None:
+            self._rcache.invalidate(key)
         engine = self._engine  # relint: allow(guarded-attribute) — monotonic None->engine; a racing first build has no derived products to invalidate
         if engine is not None:
-            engine.note_write(key)
+            engine.cache.invalidate(key)
 
     # -- lifecycle ------------------------------------------------------------------
     def pause(self) -> None:
@@ -601,23 +849,33 @@ class RegionGateway:
 
     def queue_depth(self) -> int:
         with self._lock:
-            return len(self._pending)
+            return len(self._sched)
 
     def storage_stats(self) -> dict:
         """One operator view of the whole serving path: the gateway's own
-        request counters plus whatever the wrapped store exposes — tier
-        hit/miss accounting (:class:`~repro.storage.tiers.TierStats`),
-        the DMS availability counters (:class:`~repro.storage.dms.
-        DMSStats`: failover/balanced fetches, put failovers/rollbacks,
-        repair activity), and the transport byte counters.  A dashboard
-        polling the gateway sees replica failover and anti-entropy repair
-        happening below it without reaching around the facade.
+        request counters (including per-priority-class rows, the
+        response-cache health, and — as the ``"compute"`` sub-namespace —
+        the per-chain compute counters) plus whatever the wrapped store
+        exposes — tier hit/miss accounting
+        (:class:`~repro.storage.tiers.TierStats`), the DMS availability
+        counters (:class:`~repro.storage.dms.DMSStats`), and the
+        transport byte counters.  A dashboard polling the gateway sees
+        replica failover and anti-entropy repair happening below it
+        without reaching around the facade.
+
+        The top-level ``"compute"`` key is a deprecated alias of
+        ``["gateway"]["compute"]``, kept for one release.
         """
-        out: dict = {"gateway": self.stats.as_dict()}
+        gw: dict = self.stats.as_dict()
+        if self._rcache is not None:
+            gw["response_cache"] = self._rcache.as_dict()
         engine = self._engine  # relint: allow(guarded-attribute) — monotonic None->engine; stats snapshots tolerate missing the engine being built right now
         if engine is not None:
             # per-chain latency + egress savings and derived-cache health
-            out["compute"] = engine.as_dict()
+            gw["compute"] = engine.as_dict()
+        out: dict = {"gateway": gw}
+        if engine is not None:
+            out["compute"] = gw["compute"]  # deprecated alias (one release)
         tier_stats = getattr(self.store, "tier_stats", None)
         if callable(tier_stats):
             out["tiers"] = {n: s.as_dict() for n, s in tier_stats().items()}
@@ -655,6 +913,8 @@ class RegionGateway:
         if not already:
             for w in self._workers:
                 w.join(timeout=60.0)
+            if self._prefetcher is not None:
+                self._prefetcher.close()
         if close_store:
             store_close = getattr(self.store, "close", None)
             if callable(store_close):

@@ -234,6 +234,17 @@ class Transport(Protocol):
         from any live server."""
         ...
 
+    def gen(self, server: int, bump=None, want=None) -> dict:
+        """Write-generation gossip (the response-cache invalidation
+        signal, piggybacked on the membership plumbing): each opaque key
+        token in ``bump`` increments ``server``'s per-key counter, each
+        token in ``want`` reads it (missing -> 0).  Returns the touched
+        tokens' current counts.  Gateways push a bump to every ring
+        member on put/delete and pull the fleet max to validate cached
+        responses, so any gateway's write invalidates every gateway's
+        response cache."""
+        ...
+
     def virtual_time(self) -> float: ...
 
     def close(self) -> None: ...
@@ -260,6 +271,26 @@ class _Server:
         # re-homed onto the heap from the arena's saved copy (never lost,
         # never read through a recycled slot)
         self._in_arena: set[tuple] = set()
+        # fleet-wide write-generation table (opaque key token -> count),
+        # gossiped by the ``gen`` transport op: gateways bump it on every
+        # put/delete and response caches validate against the fleet max,
+        # so one gateway's write invalidates every gateway's cache.  It
+        # survives clear() deliberately — a purged shard must not roll
+        # a key's generation back below what clients already observed.
+        self._gens: dict[str, int] = {}
+
+    def gen(self, bump=None, want=None) -> dict[str, int]:
+        """Bump-and-read the write-generation table: each token in
+        ``bump`` increments, each in ``want`` reads (missing -> 0);
+        returns the current count for every touched token."""
+        with self._lock:
+            out: dict[str, int] = {}
+            for token in bump or ():
+                self._gens[token] = self._gens.get(token, 0) + 1
+                out[token] = self._gens[token]
+            for token in want or ():
+                out.setdefault(token, self._gens.get(token, 0))
+            return out
 
     def store(
         self,
@@ -505,6 +536,11 @@ class InProcTransport:
     def epoch(self, server: int) -> "dict | None":
         self._check_removed(server)
         return self._adopt_view(None)
+
+    def gen(self, server: int, bump=None, want=None) -> dict:
+        self._check_removed(server)
+        self._account(server, META_MSG_BYTES, "meta")
+        return self.servers[server].gen(bump, want)
 
     # -- accounting ---------------------------------------------------------------
     def _account(self, server: int, nbytes: int, op: str) -> None:
@@ -1573,6 +1609,50 @@ class DistributedMemoryStorage:
             if got is not None:
                 best = adopt_newer(best, RingView.from_json(got))
         self._ring = best
+        return best
+
+    @staticmethod
+    def _gen_token(key: RegionKey) -> str:
+        """Opaque wire token for a key's fleet generation counter."""
+        return "\x1f".join(
+            (
+                key.namespace,
+                key.name,
+                getattr(key.elem_type, "name", str(key.elem_type)),
+                str(key.timestamp),
+                str(key.version),
+            )
+        )
+
+    def push_generation(self, key: RegionKey) -> int:
+        """Bump ``key``'s fleet write-generation on every reachable ring
+        member (best-effort, like :meth:`_announce`: a write must never
+        block on a dead listener) and return the highest count any
+        member now holds.  Called by a gateway after a put/delete so
+        every *other* gateway's response cache sees the key move."""
+        token = self._gen_token(key)
+        best = 0
+        for sid in self._ring.servers:
+            try:
+                got = self.transport.gen(sid, bump=[token])
+            except TransportError:
+                continue
+            best = max(best, int(got.get(token, 0)))
+        return best
+
+    def pull_generation(self, key: RegionKey) -> int:
+        """The fleet-wide write generation of ``key``: the max over every
+        reachable ring member (members can lag — a bump may have missed
+        a then-dead server — but the member holding the max is also
+        bumped by every push, so the max is monotone per write)."""
+        token = self._gen_token(key)
+        best = 0
+        for sid in self._ring.servers:
+            try:
+                got = self.transport.gen(sid, want=[token])
+            except TransportError:
+                continue
+            best = max(best, int(got.get(token, 0)))
         return best
 
     def add_server(self, endpoint=None, *, sid: "int | None" = None) -> int:

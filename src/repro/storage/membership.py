@@ -38,19 +38,22 @@ Because donations are exact fractions, shares stay *exactly* equal
 (``1/m`` each) through any join/leave sequence — the property test
 asserts equality, not a tolerance.
 
-:class:`TokenBucket` is the rebalance pacer: the sweep pays one token
-per migrated block, so background migration yields to foreground traffic
-at a configurable blocks/second rate instead of saturating the fleet.
+:class:`~repro.core.pacing.TokenBucket` (re-exported here for backward
+compatibility) is the rebalance pacer: the sweep pays one token per
+migrated block, so background migration yields to foreground traffic at
+a configurable blocks/second rate instead of saturating the fleet.
 """
 from __future__ import annotations
 
 import bisect
 import hashlib
 import json
-import threading
-import time
 from fractions import Fraction
 from typing import Iterable, Sequence
+
+from repro.core.pacing import TokenBucket
+
+__all__ = ["RingView", "TokenBucket", "adopt_newer"]
 
 
 class RingView:
@@ -265,56 +268,3 @@ def adopt_newer(current: "RingView | None", candidate: "RingView | None"):
     if current is None or candidate.epoch > current.epoch:
         return candidate
     return current
-
-
-class TokenBucket:
-    """Blocking token-bucket pacer for background sweeps.
-
-    ``rate`` tokens refill per second up to ``burst`` (default: one
-    second's worth).  :meth:`take` blocks until the requested tokens are
-    available and returns the seconds it waited — the rebalance sweep
-    pays one token per migrated block, which caps migration throughput
-    and leaves the fleet's remaining capacity to foreground traffic.
-    ``clock``/``sleep`` are injectable for deterministic tests.
-    """
-
-    def __init__(
-        self,
-        rate: float,
-        burst: float | None = None,
-        *,
-        clock=time.monotonic,
-        sleep=time.sleep,
-    ) -> None:
-        self.rate = float(rate)
-        if self.rate <= 0:
-            raise ValueError(f"rate must be positive, got {rate}")
-        self.burst = float(burst) if burst is not None else max(self.rate, 1.0)
-        self._clock = clock
-        self._sleep = sleep
-        self._lock = threading.Lock()
-        self._tokens = self.burst
-        self._last = clock()
-
-    def _refill_locked(self, now: float) -> None:
-        self._tokens = min(self.burst, self._tokens + (now - self._last) * self.rate)
-        self._last = now
-
-    def take(self, n: float = 1.0) -> float:
-        """Consume ``n`` tokens, sleeping as needed; returns the seconds
-        spent waiting (0.0 on the fast path)."""
-        waited = 0.0
-        while True:
-            with self._lock:
-                self._refill_locked(self._clock())
-                if self._tokens >= n:
-                    self._tokens -= n
-                    return waited
-                # clamp to 1us: float dust near the boundary would make
-                # the sleep too small to advance any clock (and a real
-                # clock would busy-spin instead of sleeping)
-                need = max((n - self._tokens) / self.rate, 1e-6)
-            # sleep OUTSIDE the lock: other takers must not queue behind
-            # this waiter's nap
-            self._sleep(need)
-            waited += need

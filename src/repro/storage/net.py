@@ -816,6 +816,19 @@ class SocketTransport:
         self._account("meta", wire)
         return rheader.get("view")
 
+    def gen(self, server: int, bump=None, want=None) -> dict:
+        """Write-generation gossip: bump/read per-key fleet counters on
+        ``server``'s shard (see :meth:`Transport.gen`)."""
+        header = {
+            "op": "gen",
+            "sid": server,
+            "bump": list(bump or ()),
+            "want": list(want or ()),
+        }
+        rheader, _, wire = self._request(server, header)
+        self._account("meta", wire)
+        return dict(rheader.get("gens") or {})
+
     def ping(self, server: int) -> list[int]:
         """Liveness probe; returns the shard ids the endpoint hosts."""
         rheader, _, _ = self._request(server, {"op": "ping", "sid": server})
@@ -977,6 +990,13 @@ class _NetServer(socketserver.ThreadingTCPServer):
         if sid not in self.shards:
             raise ValueError(f"shard {sid} not hosted here (have {sorted(self.shards)})")
         shard = self.shards[sid]
+        if op == "gen":
+            if self.compat:
+                raise ValueError(f"unknown op {op!r}")
+            return {
+                "ok": True,
+                "gens": shard.gen(header.get("bump"), header.get("want")),
+            }, b""
         if op == "store":
             meta = header["array"]
             key = _key_from_json(header["key"])

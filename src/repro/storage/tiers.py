@@ -788,6 +788,20 @@ class TieredStore:
         with self._lock:
             return self._gen[key]
 
+    def bump_generation(self, key: RegionKey, floor: int | None = None) -> int:
+        """Raise ``key``'s write generation: by one (``floor=None``, an
+        out-of-band mutation observed outside the put path — forces
+        every generation-validated cache above this store to drop the
+        key), or to at least ``floor`` (restoring a persisted generation
+        watermark).  Never moves backwards; returns the current
+        generation."""
+        with self._lock:
+            if floor is None:
+                self._gen[key] += 1
+            elif self._gen[key] < int(floor):
+                self._gen[key] = int(floor)
+            return self._gen[key]
+
     def tier_stats(self) -> dict[str, TierStats]:
         return {t.name: t.stats for t in self.tiers}
 

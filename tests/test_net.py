@@ -1493,6 +1493,27 @@ def test_compat_server_rejects_membership_ops():
         tr = SocketTransport([proc.address], connect_timeout=5.0, op_timeout=10.0)
         with pytest.raises(TransportError, match="unknown op"):
             tr.epoch(0)
+        with pytest.raises(TransportError, match="unknown op"):
+            tr.gen(0, bump=["k"])
+        tr.close()
+    finally:
+        proc.stop()
+
+
+def test_gen_gossip_over_sockets_increments_and_reads():
+    """The ``gen`` wire op: server-authoritative per-token increments
+    (``bump``) and reads (``want``) — the write-generation gossip that
+    backs cross-gateway response-cache invalidation."""
+    proc = ServerProcess([0]).start()
+    try:
+        tr = SocketTransport([proc.address], connect_timeout=5.0, op_timeout=10.0)
+        assert tr.gen(0, want=["a"]) == {"a": 0}
+        assert tr.gen(0, bump=["a"]) == {"a": 1}
+        assert tr.gen(0, bump=["a"], want=["b"]) == {"a": 2, "b": 0}
+        # a second client sees the same authoritative counters
+        tr2 = SocketTransport([proc.address], connect_timeout=5.0, op_timeout=10.0)
+        assert tr2.gen(0, want=["a", "b"]) == {"a": 2, "b": 0}
+        tr2.close()
         tr.close()
     finally:
         proc.stop()

@@ -22,3 +22,19 @@ def test_device_pipeline_overlap_window():
     assert len(outs) == 7
     assert all(float(o["y"][0]) == 2 * i for i, o in enumerate(outs))
     assert pipe.stats == {"uploaded": 7, "computed": 7, "downloaded": 7}
+
+
+def test_device_pipeline_map_tagged_pairs_metadata_with_results():
+    import jax
+
+    # tags are non-device-puttable objects (tuples of strings); they must
+    # bypass the upload and come back paired with their own batch's result
+    fn = jax.jit(lambda b: b + 1)
+    pipe = DevicePipeline(fn, window=2)
+    tagged = ((("tag", i), np.full((4,), i, np.float32)) for i in range(5))
+    outs = list(pipe.map_tagged(tagged))
+    assert [t for t, _ in outs] == [("tag", i) for i in range(5)]
+    for (_, i), arr in outs:
+        assert isinstance(arr, np.ndarray)
+        assert float(arr[0]) == i + 1
+    assert pipe.stats == {"uploaded": 5, "computed": 5, "downloaded": 5}

@@ -49,6 +49,7 @@ FRAME_HELPERS = {"send_frame", "send_frame_parts", "recv_frame", "_recv_exact", 
 TRANSPORT_OPS = {
     "store", "fetch", "fetch_many", "put_meta", "put_meta_batch", "lookup",
     "keys", "drop", "drop_block", "payload_bytes",
+    "gen",  # write-generation gossip (response-cache invalidation)
 }
 
 
